@@ -1,0 +1,93 @@
+"""Paper Fig. 3: speedup of event batching on the Increment/Set model.
+
+24 configurations in the paper: max batch length × p_s ∈ {5,25,50,75}%.
+Here: n ∈ {2, 4, 8} × the four p_s values (the container is a single
+CPU core; DESIGN.md §6.4 — ratios are scale-invariant).  Also plots the
+analytic bound s_max = n(1-p_I)/(1-p_I^n) (Corollary 1) and reports
+measured/s_max.
+
+Compilation is excluded from the timed region (the paper's measurements
+are post-compilation runtimes; compile cost is the subject of the
+separate compile_times benchmark).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro import poc
+from repro.core import Simulator
+
+# Paper values: 1e6-iteration Increment loops, so handler compute
+# dominates per-event dispatch (~60us here) and the measured speedup is
+# comparable against the compute-only bound s_max.  quick mode uses a
+# smaller loop and reports dispatch-amortization-inflated numbers.
+ITERS = 1_000_000
+NUM_EVENTS = 256
+SEEDS = (0,)
+
+
+def _run_once(types, mode, max_len, composer_cache=None):
+    # NB: registry rebuilt per call so ITERS (global) is honored
+    reg = poc.build_registry(iters=ITERS)
+    sim = Simulator(reg, max_batch_len=max_len)
+    if composer_cache is not None and mode != "unbatched":
+        sim.composer = composer_cache.setdefault(
+            max_len, sim.composer)
+    for t, ty in enumerate(types):
+        sim.queue.push(float(t), ty)
+    t0 = time.perf_counter()
+    state, stats = sim.run(poc.initial_state(), mode=mode)
+    jax.block_until_ready(state)
+    return time.perf_counter() - t0, int(state), stats
+
+
+def run(quick: bool = False):
+    global ITERS
+    lengths = (2, 4) if quick else (2, 4, 8)
+    ps_values = (0.25, 0.5) if quick else (0.05, 0.25, 0.5, 0.75)
+    num_events = 64 if quick else NUM_EVENTS
+    seeds = SEEDS
+    iters_saved = ITERS
+    if quick:
+        ITERS = 100_000
+    rows = []
+    composer_cache: dict = {}
+    for p_s in ps_values:
+        for n in lengths:
+            speeds = []
+            for seed in seeds:
+                rng = np.random.default_rng(seed)
+                types = [int(x) for x in (rng.random(num_events) < p_s)]
+                # warm-up pass compiles every batch program seen
+                _run_once(types, "conservative", n, composer_cache)
+                _run_once(types, "unbatched", 1)
+                t_b, s_b, stats = _run_once(types, "conservative", n,
+                                            composer_cache)
+                t_u, s_u, _ = _run_once(types, "unbatched", 1)
+                assert s_b == s_u == poc.reference_final_sum(types, ITERS)
+                speeds.append(t_u / t_b)
+            smax = poc.s_max(n, 1.0 - p_s)
+            meas = float(np.median(speeds))
+            rows.append({
+                "p_s": p_s, "n": n, "speedup": meas, "s_max": smax,
+                "fraction_of_bound": meas / smax,
+            })
+    ITERS = iters_saved
+    return rows
+
+
+def main(quick: bool = False):
+    rows = run(quick=quick)
+    print("p_s,n,measured_speedup,s_max,fraction_of_bound")
+    for r in rows:
+        print(f"{r['p_s']},{r['n']},{r['speedup']:.3f},{r['s_max']:.3f},"
+              f"{r['fraction_of_bound']:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

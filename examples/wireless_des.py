@@ -1,0 +1,101 @@
+"""The paper's §IV.A wireless-broadcast sketch, made concrete.
+
+"Suppose a node in a simulated network periodically broadcasts messages
+to nearby receivers.  The successful reception depends on whether the
+receiver is in a power-saving state.  If none of the nearby nodes is
+ready to receive, the computations involved in the creation of the
+message could be avoided entirely."
+
+Events:
+* Sleep(i)     — receiver i enters power saving (awake[i] = 0)
+* Wake(i)      — receiver i wakes (awake[i] = 1)
+* Broadcast    — sender builds an expensive message (a long mixing
+                 loop) and delivers it to awake receivers.
+
+In the batch [Sleep(all), Broadcast], the delivery mask is all-zero —
+XLA's cross-event DCE removes the message-construction loop, exactly
+the paper's motivating scenario.  Verified on the optimized HLO below.
+
+    PYTHONPATH=src python examples/wireless_des.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ARG_WIDTH, EventRegistry, Simulator, compose_word_fn
+
+N_RECEIVERS = 4
+MSG_WORK = 100_000
+
+
+def build_registry():
+    reg = EventRegistry()
+
+    def sleep_all(state, t, arg):
+        return {**state, "awake": jnp.zeros_like(state["awake"])}
+
+    def wake_all(state, t, arg):
+        return {**state, "awake": jnp.ones_like(state["awake"])}
+
+    def broadcast(state, t, arg):
+        # expensive message construction (mixing loop)
+        msg = jax.lax.fori_loop(
+            0, MSG_WORK,
+            lambda i, m: m * jnp.uint32(1664525) + jnp.uint32(1013904223),
+            jnp.uint32(12345))
+        # delivery gated by receiver power state
+        delivered = state["inbox"] + state["awake"] * msg
+        return {**state, "inbox": delivered.astype(jnp.uint32)}
+
+    reg.register("SleepAll", sleep_all, lookahead=np.inf)
+    reg.register("WakeAll", wake_all, lookahead=np.inf)
+    reg.register("Broadcast", broadcast, lookahead=np.inf)
+    return reg.freeze()
+
+
+def initial_state():
+    return {
+        "awake": jnp.ones((N_RECEIVERS,), jnp.uint32),
+        "inbox": jnp.zeros((N_RECEIVERS,), jnp.uint32),
+    }
+
+
+def main():
+    reg = build_registry()
+    SLEEP, WAKE, BCAST = 0, 1, 2
+
+    # cross-event DCE check: [SleepAll, Broadcast, WakeAll] -> no one can
+    # receive, so the message-construction loop must disappear.
+    state_spec = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), initial_state())
+    t_spec = [jax.ShapeDtypeStruct((), jnp.float32)] * 3
+
+    dead = compose_word_fn(reg, [SLEEP, BCAST, WAKE])
+    live = compose_word_fn(reg, [WAKE, BCAST, SLEEP])
+    hlo_dead = jax.jit(dead).lower(state_spec, t_spec,
+                                   [None] * 3).compile().as_text()
+    hlo_live = jax.jit(live).lower(state_spec, t_spec,
+                                   [None] * 3).compile().as_text()
+    print("message loop removed when all receivers sleep:",
+          " while(" not in hlo_dead)
+    print("message loop present when receivers awake:   ",
+          " while(" in hlo_live)
+
+    # run a simulation: day/night duty cycle with periodic broadcasts
+    sim = Simulator(reg, max_batch_len=4)
+    for day in range(8):
+        base = day * 10.0
+        sim.schedule(base + 0.0, "SleepAll")
+        sim.schedule(base + 1.0, "Broadcast")
+        sim.schedule(base + 2.0, "Broadcast")
+        sim.schedule(base + 5.0, "WakeAll")
+        sim.schedule(base + 6.0, "Broadcast")
+    state, stats = sim.run(initial_state(), mode="conservative")
+    print(f"batches executed: {stats.batches_executed} "
+          f"(mean len {stats.mean_batch_length:.1f}); "
+          f"final inbox: {np.asarray(state['inbox'])}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,133 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb driver: compile one (arch × shape) cell under a named
+variant and print the roofline terms.
+
+    PYTHONPATH=src python scripts/hillclimb.py --arch llama3-405b \
+        --shape train_4k --variant bf16_proj
+
+Variants (composable with '+'):
+    base          — paper-faithful baseline config
+    bf16_proj     — projection matmuls emit bf16 (bf16 TP all-reduces)
+    prevent_cse   — jax.checkpoint(prevent_cse=True)
+    no_remat      — disable activation rematerialization
+    microK        — K gradient-accumulation microbatches (e.g. micro8)
+    qblkN/kvblkN  — attention block sizes (e.g. qblk1024)
+    ssmchunkN     — mamba chunk size
+    no_fsdp       — replicate params over data axis (pure DP+TP)
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+
+from repro.configs import SHAPES, get_config
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_cell
+
+
+def apply_variant(cfg, variant):
+    model_kwargs = {}
+    kwargs = {}
+    for v in variant.split("+"):
+        if v == "base" or not v:
+            continue
+        elif v == "bf16_proj":
+            from repro.models.layers import set_matmul_precision
+            set_matmul_precision(False)
+        elif v == "prevent_cse":
+            model_kwargs["remat_prevent_cse"] = True
+        elif v == "seqpar":
+            model_kwargs["seq_parallel"] = True
+        elif v == "no_remat":
+            kwargs["no_remat"] = True
+        elif v.startswith("micro"):
+            kwargs["num_microbatches"] = int(v[5:])
+        elif v.startswith("qblk"):
+            cfg = dataclasses.replace(cfg, attn_q_block=int(v[4:]))
+        elif v.startswith("kvblk"):
+            cfg = dataclasses.replace(cfg, attn_kv_block=int(v[5:]))
+        elif v.startswith("ssmchunk"):
+            cfg = dataclasses.replace(
+                cfg, mamba=dataclasses.replace(cfg.mamba, chunk=int(v[8:])))
+        elif v == "no_fsdp":
+            kwargs["fsdp"] = False
+        else:
+            raise SystemExit(f"unknown variant {v}")
+    return cfg, model_kwargs, kwargs
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", required=True)
+    p.add_argument("--shape", required=True)
+    p.add_argument("--mesh", default="single")
+    p.add_argument("--mesh-shape", default=None,
+                   help="override mesh, e.g. 32x8 (data x model)")
+    p.add_argument("--variant", default="base")
+    p.add_argument("--log", default="/root/repo/perf_iterations.jsonl")
+    args = p.parse_args()
+
+    cfg = get_config(args.arch)
+    cfg, model_kwargs, kwargs = apply_variant(cfg, args.variant)
+    no_remat = kwargs.pop("no_remat", False)
+    if args.mesh_shape:
+        import jax as _jax
+        d, m = (int(t) for t in args.mesh_shape.split("x"))
+        mesh = _jax.make_mesh((d, m), ("data", "model"))
+    else:
+        mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    cell = build_cell(cfg, args.shape, mesh, model_kwargs=model_kwargs,
+                      **kwargs)
+    if no_remat and cell.kind == "train":
+        # rebuild the step without remat
+        from repro.launch.specs import pick_microbatches
+        from repro.models import LM
+        from repro.training.optim import AdamWConfig
+        from repro.training.train_step import make_train_step
+        from repro.launch.mesh import dp_size
+        model = LM(cfg, **(model_kwargs or {}))
+        nm = kwargs.get("num_microbatches") or pick_microbatches(
+            SHAPES[args.shape]["global_batch"], dp_size(mesh))
+        cell.fn = make_train_step(model, AdamWConfig(),
+                                  num_microbatches=nm, remat=False)
+    t0 = time.time()
+    with mesh:
+        compiled = jax.jit(
+            cell.fn, in_shardings=cell.in_shardings,
+            out_shardings=cell.out_shardings,
+            donate_argnums=cell.donate_argnums).lower(
+                *cell.arg_specs).compile()
+    t_compile = time.time() - t0
+    shape = SHAPES[args.shape]
+    mf = rl.model_flops_for(cfg, cell.kind, cell.static_info["tokens"],
+                            shape["seq_len"])
+    roof = rl.analyze(compiled, arch=args.arch, shape=args.shape,
+                      mesh_name=args.mesh, chips=mesh.size, model_flops=mf)
+    ms = roof.memory_stats
+    rec = {
+        "arch": args.arch, "shape": args.shape,
+        "variant": args.variant + (f"@{args.mesh_shape}"
+                                   if args.mesh_shape else ""),
+        "compute_s": roof.compute_seconds, "memory_s": roof.memory_seconds,
+        "collective_s": roof.collective_seconds,
+        "dominant": roof.dominant, "mfu_at_bound": roof.mfu,
+        "useful_fraction": roof.useful_flops_fraction,
+        "temp_gb": ms["temp_bytes"] / 1e9,
+        "coll_by_op": {k: round(v["bytes"] / 1e9, 2)
+                       for k, v in roof.collective_detail.items()
+                       if v["count"]},
+        "compile_s": round(t_compile, 1),
+    }
+    print(json.dumps(rec, indent=1))
+    with open(args.log, "a") as f:
+        f.write(json.dumps(rec) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Render the §Dry-run and §Roofline tables of EXPERIMENTS.md from
+dryrun_results.json (so the document regenerates from artifacts).
+
+    PYTHONPATH=src python scripts/render_experiments.py > /tmp/tables.md
+"""
+
+import json
+import sys
+
+
+def fmt_s(x):
+    if x >= 1.0:
+        return f"{x:.1f}s"
+    return f"{x*1e3:.1f}ms"
+
+
+def main(path="dryrun_results.json"):
+    rs = json.load(open(path))
+    ok = [r for r in rs if r["status"] == "ok"]
+    sk = [r for r in rs if r["status"] == "skipped"]
+
+    print("### Dry-run matrix (compile success, per-device memory)\n")
+    print("| arch | shape | mesh | chips | compile | args/dev | temp/dev |"
+          " collectives (counts) |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        ro = r["roofline"]
+        ms = ro["memory_stats"]
+        coll = ro["collective_detail"]
+        cstr = " ".join(f"{k.split('-')[-1]}:{int(v['count'])}"
+                        for k, v in sorted(coll.items()) if v["count"])
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | {ro['chips']} "
+              f"| {r['compile_seconds']:.1f}s "
+              f"| {ms['argument_bytes']/1e9:.2f}GB "
+              f"| {ms['temp_bytes']/1e9:.2f}GB | {cstr} |")
+    print(f"\nSkipped cells ({len(sk)}):\n")
+    for r in sorted(sk, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        print(f"* {r['arch']} × {r['shape']} × {r['mesh']} — {r['reason']}")
+
+    print("\n### Roofline terms (single-pod 16×16 = 256 chips)\n")
+    print("memory columns: as-lowered on the CPU backend / assuming "
+          "TPU-native bf16 dots (no f32 legalization converts) / with "
+          "the Pallas flash-attention kernel (scores stay in VMEM).\n")
+    print("| arch | shape | compute | memory | mem(bf16-native) |"
+          " mem(pallas-adj) | collective | dominant | useful-FLOP frac |"
+          " MFU@bound |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] != "single":
+            continue
+        ro = r["roofline"]
+        adj = r.get("memory_seconds_pallas_adj", ro["memory_seconds"])
+        nb = ro["memory_stats"].get("memory_seconds_native_bf16",
+                                    ro["memory_seconds"])
+        print(f"| {r['arch']} | {r['shape']} "
+              f"| {fmt_s(ro['compute_seconds'])} "
+              f"| {fmt_s(ro['memory_seconds'])} "
+              f"| {fmt_s(nb)} "
+              f"| {fmt_s(adj)} "
+              f"| {fmt_s(ro['collective_seconds'])} "
+              f"| {ro['dominant']} "
+              f"| {ro['useful_flops_fraction']:.3f} "
+              f"| {ro['mfu_at_bound']:.4f} |")
+
+    print("\n### Multi-pod (2×16×16 = 512 chips) deltas vs single-pod\n")
+    print("| arch | shape | compute ratio | memory ratio | collective"
+          " ratio |")
+    print("|---|---|---|---|---|")
+    single = {(r["arch"], r["shape"]): r["roofline"] for r in ok
+              if r["mesh"] == "single"}
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] != "multi":
+            continue
+        s = single.get((r["arch"], r["shape"]))
+        if not s:
+            continue
+        ro = r["roofline"]
+        def ratio(a, b):
+            return f"{a/b:.2f}" if b else "-"
+        print(f"| {r['arch']} | {r['shape']} "
+              f"| {ratio(ro['compute_seconds'], s['compute_seconds'])} "
+              f"| {ratio(ro['memory_seconds'], s['memory_seconds'])} "
+              f"| {ratio(ro['collective_seconds'], s['collective_seconds'])}"
+              f" |")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

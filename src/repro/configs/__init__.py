@@ -1,0 +1,25 @@
+from repro.configs.base import (
+    SHAPES,
+    ArchConfig,
+    LayerSpec,
+    MLASpec,
+    MambaSpec,
+    MoESpec,
+    get_config,
+    list_configs,
+    register_config,
+    shape_applicable,
+)
+
+__all__ = [
+    "SHAPES",
+    "ArchConfig",
+    "LayerSpec",
+    "MLASpec",
+    "MambaSpec",
+    "MoESpec",
+    "get_config",
+    "list_configs",
+    "register_config",
+    "shape_applicable",
+]

@@ -1,0 +1,77 @@
+"""Core DES engine: compile-time event batching (the paper's contribution).
+
+Public API:
+
+    from repro.core import (
+        EventRegistry, emits_events, Simulator, DeviceEngine,
+        PaperCodec, DenseCodec,
+    )
+"""
+
+from repro.core.codec import (
+    DenseCodec,
+    PaperCodec,
+    dense_batch_count,
+    make_codec,
+    paper_batch_count,
+    redundant_batch_count,
+)
+from repro.core.composer import (
+    EagerComposer,
+    LazyComposer,
+    build_switch_dispatcher,
+    compose_word_fn,
+)
+from repro.core.engine import DeviceEngine, Simulator
+from repro.core.events import ARG_WIDTH, Event, EventRegistry, EventType, emits_events
+from repro.core.queue import (
+    DeviceQueue,
+    HostEventQueue,
+    device_queue_init,
+    device_queue_peek,
+    device_queue_pop,
+    device_queue_push,
+    device_queue_push_rows,
+)
+from repro.core.scheduler import (
+    ConservativeScheduler,
+    RunStats,
+    SpeculativeScheduler,
+    extract_window,
+    run_unbatched,
+)
+from repro.core.vectorize import is_single_type_run, make_run_handler
+
+__all__ = [
+    "ARG_WIDTH",
+    "ConservativeScheduler",
+    "DenseCodec",
+    "DeviceEngine",
+    "DeviceQueue",
+    "EagerComposer",
+    "Event",
+    "EventRegistry",
+    "EventType",
+    "HostEventQueue",
+    "LazyComposer",
+    "PaperCodec",
+    "RunStats",
+    "Simulator",
+    "SpeculativeScheduler",
+    "build_switch_dispatcher",
+    "compose_word_fn",
+    "dense_batch_count",
+    "device_queue_init",
+    "device_queue_peek",
+    "device_queue_pop",
+    "device_queue_push",
+    "device_queue_push_rows",
+    "emits_events",
+    "extract_window",
+    "is_single_type_run",
+    "make_codec",
+    "make_run_handler",
+    "paper_batch_count",
+    "redundant_batch_count",
+    "run_unbatched",
+]

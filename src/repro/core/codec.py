@@ -1,0 +1,229 @@
+"""Batch-identifier codecs (paper §III-A).
+
+The paper interprets the event alphabet Σ as the digits of a number
+system and identifies a batch (a word of Σ*) with the natural number it
+represents, evaluated with a Horner scheme.  Because the digit 0 would be
+absorbed at the most-significant end ("aba would have the same id as
+ba"), the paper introduces an explicit ν ("no event") digit, at the cost
+of redundant codes: with |Σ| event types and maximum batch length n,
+``B = Σ_{i=1..n} (|Σ|+1)^i`` codes are enumerated, of which
+
+    redundant(|Σ|, n) = B - Σ_{i=1..n} |Σ|^i
+
+never correspond to a ν-free batch the scheduler can emit (58 % at
+|Σ|=5, n=5 — §IV.C).
+
+Two codecs are provided:
+
+* :class:`PaperCodec` — the faithful reproduction: base ``|Σ|+1``,
+  digit 0 = ν, real types are 1-based, identifiers enumerated densely
+  over all words *including* redundant ν-containing ones.
+
+* :class:`DenseCodec` — the improvement the paper lists as future work
+  ("a refined enumeration scheme could eliminate these redundant
+  batches"): a bijective base-|Σ| numbering over ν-free words only.
+  ``id(word of length k) = offset(k) + Σ_i digit_i·|Σ|^i`` with 0-based
+  digits and ``offset(k) = Σ_{j=1..k-1}|Σ|^j``.  Exactly
+  ``Σ_{i=1..n}|Σ|^i`` codes, zero redundancy, and the ids are contiguous
+  — directly usable as ``lax.switch`` branch indices on device.
+
+Both codecs are evaluated identically in Python (host scheduler /
+compile-time composition) and in jnp (on-device scheduler), mirroring the
+paper's requirement that the scheme be "efficiently evaluated both during
+runtime and compile-time".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def geometric_sum(base: int, n: int) -> int:
+    """Σ_{i=1..n} base^i  (number of non-empty words up to length n)."""
+    if base == 1:
+        return n
+    return (base ** (n + 1) - base) // (base - 1)
+
+
+def paper_batch_count(num_types: int, max_len: int) -> int:
+    """B from §III-A: all words over Σν up to length n (excluding ε)."""
+    return geometric_sum(num_types + 1, max_len)
+
+
+def dense_batch_count(num_types: int, max_len: int) -> int:
+    """ν-free word count: Σ_{i=1..n} |Σ|^i."""
+    return geometric_sum(num_types, max_len)
+
+
+def redundant_batch_count(num_types: int, max_len: int) -> int:
+    """§IV.C: codes composed by the paper scheme that are never used."""
+    return paper_batch_count(num_types, max_len) - dense_batch_count(
+        num_types, max_len
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class PaperCodec:
+    """Paper-faithful Horner codec over Σν (digit 0 = ν)."""
+
+    num_types: int
+    max_len: int
+
+    @property
+    def base(self) -> int:
+        return self.num_types + 1
+
+    @property
+    def num_batches(self) -> int:
+        return paper_batch_count(self.num_types, self.max_len)
+
+    # ids are 1-based in the enumeration (0 encodes the empty word ε which
+    # the scheduler never emits); we keep the paper's convention that the
+    # enumeration covers 1..B.
+    def encode(self, type_ids: Sequence[int]) -> int:
+        """Horner scheme: first event of the batch is the least
+        significant digit, so decode() pops handlers in execution order
+        (paper Alg. 1 appends eventHandlers[id mod base - 1] first)."""
+        if not 1 <= len(type_ids) <= self.max_len:
+            raise ValueError(f"batch length must be in [1, {self.max_len}]")
+        code = 0
+        for t in reversed(type_ids):
+            if not 0 <= t < self.num_types:
+                raise ValueError(f"type id {t} out of range")
+            code = code * self.base + (t + 1)
+        return code
+
+    def decode(self, code: int) -> list[int]:
+        """Inverse of encode; skips ν digits exactly like GENBATCH."""
+        if code <= 0:
+            raise ValueError("code must be positive (0 is the empty word)")
+        out = []
+        while code:
+            digit = code % self.base
+            if digit > 0:  # "check for ν-event"
+                out.append(digit - 1)
+            code //= self.base
+        return out
+
+    def enumerate_codes(self):
+        """All codes 1..B in order, paper Alg. 1 ENUMERATEBATCHES.
+
+        Many decode to the same ν-free word (the redundancy of §IV.C);
+        callers that want each *distinct* batch exactly once should use
+        DenseCodec instead.
+        """
+        # The paper enumerates ids over words up to length max_len, i.e.
+        # codes up to base^max_len - 1 plus the length-max_len words; the
+        # total count is B. Codes are simply 1..B in the mixed-length
+        # numbering (base^(max_len+1) overshoots; B is exact).
+        return range(1, self.num_batches + 1)
+
+    # -- jnp evaluation (on-device Horner) --------------------------------
+    def encode_jnp(self, padded_types, length):
+        """Horner evaluation on device.
+
+        padded_types: i32[max_len] with type ids (entries >= length are
+        ignored); length: i32 scalar. Returns i32 code.
+        """
+        base = jnp.int32(self.base)
+        idx = jnp.arange(self.max_len - 1, -1, -1)
+        code = jnp.int32(0)
+        for i in range(self.max_len):
+            pos = self.max_len - 1 - i  # walk from last slot to first
+            valid = pos < length
+            digit = jnp.where(valid, padded_types[pos] + 1, 0)
+            code = jnp.where(valid, code * base + digit, code)
+        del idx
+        return code
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseCodec:
+    """Bijective, redundancy-free codec (paper §IV.D future work).
+
+    ids are 0-based and contiguous in [0, Σ_{i=1..n}|Σ|^i), grouped by
+    length: all length-1 batches first, then length-2, etc.  Within a
+    length group the word is read as a base-|Σ| number with the FIRST
+    event as the least significant digit (same execution-order convention
+    as PaperCodec).
+    """
+
+    num_types: int
+    max_len: int
+
+    @property
+    def base(self) -> int:
+        return self.num_types
+
+    @property
+    def num_batches(self) -> int:
+        return dense_batch_count(self.num_types, self.max_len)
+
+    def offset(self, length: int) -> int:
+        """Start id of the length-`length` group."""
+        return geometric_sum(self.num_types, length - 1)
+
+    def encode(self, type_ids: Sequence[int]) -> int:
+        k = len(type_ids)
+        if not 1 <= k <= self.max_len:
+            raise ValueError(f"batch length must be in [1, {self.max_len}]")
+        code = 0
+        for t in reversed(type_ids):
+            if not 0 <= t < self.num_types:
+                raise ValueError(f"type id {t} out of range")
+            code = code * self.base + t
+        return self.offset(k) + code
+
+    def decode(self, code: int) -> list[int]:
+        if not 0 <= code < self.num_batches:
+            raise ValueError(f"code {code} out of range")
+        length = 1
+        while code >= self.offset(length) + self.base ** length:
+            length += 1
+        rem = code - self.offset(length)
+        out = []
+        for _ in range(length):
+            out.append(rem % self.base)
+            rem //= self.base
+        return out
+
+    def enumerate_codes(self):
+        return range(self.num_batches)
+
+    def enumerate_words(self):
+        """Yield (code, word) for every distinct batch, in id order."""
+        for code in self.enumerate_codes():
+            yield code, self.decode(code)
+
+    # -- jnp evaluation ----------------------------------------------------
+    def encode_jnp(self, padded_types, length):
+        """On-device encode: i32[max_len] types + i32 length -> i32 id.
+
+        Evaluated with a fixed-length unrolled Horner loop (max_len is a
+        compile-time constant, so this is `max_len` fused selects/mads —
+        the "efficiently evaluated at runtime" property of §III-A).
+        """
+        base = jnp.int32(self.base)
+        code = jnp.int32(0)
+        for i in range(self.max_len - 1, -1, -1):
+            valid = i < length
+            code = jnp.where(valid, code * base + padded_types[i], code)
+        # offset(length) = (base^length - base) / (base - 1), computed
+        # branch-free for the handful of possible lengths.
+        offs = jnp.asarray(
+            [self.offset(k) if k >= 1 else 0 for k in range(self.max_len + 1)],
+            dtype=jnp.int32,
+        )
+        return offs[length] + code
+
+
+def make_codec(kind: str, num_types: int, max_len: int):
+    if kind == "paper":
+        return PaperCodec(num_types, max_len)
+    if kind == "dense":
+        return DenseCodec(num_types, max_len)
+    raise ValueError(f"unknown codec kind {kind!r}")

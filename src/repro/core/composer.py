@@ -1,0 +1,250 @@
+"""Compile-time batch composition (paper §III-A, Alg. 1).
+
+The paper composes, *during compilation*, one contiguous procedure per
+batch identifier by concatenating the registered event handlers' bodies,
+so the compiler optimizes across events.  The JAX equivalent: for each
+batch word ``w = [t0, t1, ...]`` we build a Python closure that applies
+the handlers sequentially and hand it to ``jax.jit`` — tracing inlines
+all handler bodies into ONE jaxpr/HLO module, which XLA then optimizes as
+a contiguous code fragment (cross-event DCE, fusion, CSE).  That is the
+paper's mechanism with XLA in the role of clang.
+
+Three composition strategies:
+
+* :class:`EagerComposer` — paper-faithful: ALL batch programs are
+  composed and AOT-compiled (``.lower().compile()``) up front, exactly
+  like the C++ template instantiation.  Compile time grows with the
+  batch count (reproduced as the Fig-4 benchmark).
+* :class:`LazyComposer` — the paper's §IV.D JIT idea: programs are
+  composed up front (cheap) but compiled on first dispatch and cached,
+  so only batches that actually occur pay compilation cost.
+* :func:`build_switch_dispatcher` — the TPU-native runtime: a single
+  program containing ``lax.switch`` over every composed batch, used by
+  the fully on-device scheduler (no host round-trip per batch).
+
+Handlers follow the conventions of :mod:`repro.core.events`.  Emitted
+events are buffered and returned to the caller *after* the whole batch
+has run — the paper's §IV.D "postponing the scheduling of all new events
+to the end of a batch execution" optimization (always on here; the
+unbatched baseline in benchmarks/ inserts eagerly).
+"""
+
+from __future__ import annotations
+
+import time as _time
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.events import ARG_WIDTH, EventRegistry, normalize_handler_result
+from repro.core.codec import DenseCodec, PaperCodec
+
+
+# ---------------------------------------------------------------------------
+# Host-side batch programs
+# ---------------------------------------------------------------------------
+
+def compose_word_fn(registry: EventRegistry, word: Sequence[int]) -> Callable:
+    """Concatenate the handlers of ``word`` into one traceable function.
+
+    Returns ``fn(state, ts, args) -> (state, emitted)`` where ``ts`` is a
+    length-``len(word)`` sequence of timestamps and ``args`` the matching
+    handler arguments.  ``emitted`` is the Python list of events created
+    by any handler, in execution order (deferred scheduling, §IV.D).
+    """
+    types = [registry[t] for t in word]
+
+    def batch_fn(state, ts, args):
+        emitted = []
+        for i, et in enumerate(types):
+            result = et.handler(state, ts[i], args[i])
+            state, new = normalize_handler_result(
+                result, returns_events=et.returns_events
+            )
+            emitted.extend(new)
+        return state, emitted
+
+    batch_fn.__name__ = "batch_" + "_".join(t.name for t in types)
+    return batch_fn
+
+
+class _ComposerBase:
+    """Shared bookkeeping for host-side composers."""
+
+    def __init__(self, registry: EventRegistry, codec):
+        if not registry.frozen:
+            registry.freeze()
+        self.registry = registry
+        self.codec = codec
+        self._programs: dict[int, Callable] = {}   # code -> jitted fn
+        self._words: dict[int, tuple[int, ...]] = {}
+        self.compile_seconds: dict[int, float] = {}
+        self.trace_count = 0
+
+    def word_for(self, code: int) -> tuple[int, ...]:
+        if code not in self._words:
+            self._words[code] = tuple(self.codec.decode(code))
+        return self._words[code]
+
+    def _build(self, code: int) -> Callable:
+        word = self.word_for(code)
+        fn = compose_word_fn(self.registry, word)
+        # Timestamps are traced values (donated by the scheduler); the
+        # batch structure itself is baked into the program — exactly the
+        # paper's "batch = compiled contiguous procedure".
+        jfn = jax.jit(fn)
+        self.trace_count += 1
+        return jfn
+
+    def program(self, code: int) -> Callable:
+        if code not in self._programs:
+            t0 = _time.perf_counter()
+            self._programs[code] = self._build(code)
+            self.compile_seconds[code] = _time.perf_counter() - t0
+        return self._programs[code]
+
+    def execute(self, code: int, state, ts, args):
+        """Run batch ``code``; returns (state, emitted_events)."""
+        return self.program(code)(state, ts, args)
+
+    @property
+    def num_composed(self) -> int:
+        return len(self._programs)
+
+
+class EagerComposer(_ComposerBase):
+    """Paper-faithful: compose + AOT-compile every batch up front.
+
+    ``state_spec``/``arg_spec`` are ShapeDtypeStruct pytrees describing
+    one state and one handler argument; they let us `.lower().compile()`
+    without touching device memory (same trick as the multi-pod dry-run).
+    """
+
+    def __init__(self, registry, codec, *, state_spec=None, arg_spec=None,
+                 aot: bool = True):
+        super().__init__(registry, codec)
+        self.aot = aot and state_spec is not None
+        self.state_spec = state_spec
+        self.arg_spec = arg_spec
+        self.total_compile_seconds = 0.0
+        t0 = _time.perf_counter()
+        for code in codec.enumerate_codes():
+            word = self.word_for(code)
+            if not word:
+                continue  # redundant ν-only code (PaperCodec)
+            if self.aot:
+                self._programs[code] = self._aot_build(code, word)
+            else:
+                self._programs[code] = self._build(code)
+        self.total_compile_seconds = _time.perf_counter() - t0
+
+    def _aot_build(self, code, word):
+        fn = compose_word_fn(self.registry, word)
+        k = len(word)
+        ts_spec = [jax.ShapeDtypeStruct((), jnp.float32)] * k
+        args_spec = [self.arg_spec] * k
+        t0 = _time.perf_counter()
+        compiled = jax.jit(fn).lower(self.state_spec, ts_spec, args_spec).compile()
+        self.compile_seconds[code] = _time.perf_counter() - t0
+        self.trace_count += 1
+        return compiled
+
+    def execute(self, code, state, ts, args):
+        prog = self._programs[code]
+        if self.aot:
+            return prog(state, list(ts), list(args))
+        return prog(state, ts, args)
+
+
+class LazyComposer(_ComposerBase):
+    """Beyond-paper (§IV.D): compile batches on first occurrence only."""
+    # program() already builds lazily; nothing else needed.
+
+
+# ---------------------------------------------------------------------------
+# On-device dispatcher (TPU-native runtime, DESIGN.md §2)
+# ---------------------------------------------------------------------------
+
+def build_switch_dispatcher(
+    registry: EventRegistry,
+    codec: DenseCodec,
+    *,
+    max_emit: int = 2,
+):
+    """One traceable function dispatching over ALL composed batches.
+
+    The returned ``dispatch(code, state, ts, types, args)`` contains a
+    ``lax.switch`` whose branch ``c`` is the composed program of batch
+    word ``decode(c)``.  All branches share the padded signature
+
+        ts:    f32[max_len]          event timestamps
+        types: i32[max_len]          event type ids (engine bookkeeping)
+        args:  f32[max_len, ARG_WIDTH]
+
+    and return ``(state, emits)`` with
+    ``emits: f32[max_len * max_emit, 2 + ARG_WIDTH]`` rows of
+    ``(time, type, arg...)``; ``type == -1`` marks an empty slot.
+
+    On-device handlers must follow the fixed-record convention
+    (DESIGN.md §6.3): ``handler(state, t, arg) -> state`` or
+    ``(state, emits_f32[max_emit, 2+ARG_WIDTH])``.
+
+    Because every branch lives in one XLA module, XLA optimizes each
+    batch body as a contiguous fragment — the paper's cross-event scope —
+    while the simulation main loop never leaves the device.
+    """
+    if not isinstance(codec, DenseCodec):
+        raise TypeError(
+            "on-device dispatch requires the DenseCodec (contiguous ids); "
+            "the PaperCodec's redundant ids would blow up the switch."
+        )
+    if not registry.frozen:
+        registry.freeze()
+    max_len = codec.max_len
+    emit_rows = max_len * max_emit
+    emit_width = 2 + ARG_WIDTH
+
+    def _empty_emits():
+        e = jnp.zeros((emit_rows, emit_width), jnp.float32)
+        return e.at[:, 1].set(-1.0)
+
+    def make_branch(word):
+        types = [registry[t] for t in word]
+
+        def branch(state, ts, args):
+            emits = _empty_emits()
+            for i, et in enumerate(types):
+                result = et.handler(state, ts[i], args[i])
+                if et.returns_events:
+                    state, new = result
+                    new = jnp.asarray(new, jnp.float32)
+                    if new.shape != (max_emit, emit_width):
+                        raise ValueError(
+                            f"on-device handler {et.name} must emit "
+                            f"f32[{max_emit}, {emit_width}], got {new.shape}"
+                        )
+                    emits = jax.lax.dynamic_update_slice(
+                        emits, new, (i * max_emit, 0)
+                    )
+                else:
+                    state = result
+            return state, emits
+
+        return branch
+
+    branches = []
+    for code, word in codec.enumerate_words():
+        del code
+        branches.append(make_branch(word))
+
+    def dispatch(code, state, ts, types, args):
+        del types  # engine bookkeeping only; the word is baked per branch
+        return jax.lax.switch(code, branches, state, ts, args)
+
+    dispatch.num_batches = codec.num_batches
+    dispatch.max_len = max_len
+    dispatch.max_emit = max_emit
+    dispatch.emit_rows = emit_rows
+    dispatch.emit_width = emit_width
+    return dispatch

@@ -1,0 +1,176 @@
+"""Event types, lookahead, and the event record format.
+
+The paper (§III) assumes the modeler registers *function pointers to all
+event handlers in a constant array*.  `EventRegistry` is that array: an
+ordered, immutable-after-freeze list of event types, each pairing a pure
+JAX handler with a per-type *lookahead* (the minimum delta between an
+event's execution time and the earliest timestamp of any event it may
+create — §III-B).
+
+Handlers are pure functions over the simulation state:
+
+    handler(state: PyTree, t: f32 scalar, arg: PyTree) -> state
+        or -> (state, new_events)
+
+where ``new_events`` (optional) is a list of ``(delay, type_id, arg)``
+tuples with ``delay >= lookahead`` of the handler's type — the engine
+checks this invariant in debug mode, mirroring the causality requirement
+of conservative PDES that the paper leans on.
+
+Static-shape adaptation (DESIGN.md §6.3): on-device events are fixed
+records ``(time: f32, type: i32, arg: f32[ARG_WIDTH])``; rich payloads
+live in the state PyTree.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import inspect
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+# Width of the inline argument vector carried by on-device events.
+ARG_WIDTH = 4
+
+# Reserved type id for the ν-event ("no event", §III-A).  In the
+# paper-faithful codec the digit 0 is ν and real types are 1-based.
+NU_EVENT = -1
+
+
+@dataclasses.dataclass(frozen=True)
+class EventType:
+    """One character of the event alphabet Σ."""
+
+    type_id: int            # dense index into the registry (0-based)
+    name: str
+    handler: Callable       # (state, t, arg) -> state | (state, events)
+    lookahead: float        # l_e >= 0; np.inf allowed (never blocks)
+    returns_events: bool    # whether handler returns (state, new_events)
+
+    def __call__(self, state, t, arg):
+        return self.handler(state, t, arg)
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    """A host-side scheduled event instance."""
+
+    time: float
+    type_id: int
+    arg: Any = None
+    # Monotonic sequence number used as a tie-breaker so that events with
+    # equal timestamps execute in schedule order (deterministic runs).
+    seq: int = 0
+
+    def key(self):
+        return (self.time, self.seq)
+
+
+def _handler_returns_events(handler: Callable) -> bool:
+    """Best-effort detection of the (state, events) return convention.
+
+    Handlers may declare it explicitly via a ``returns_events`` attribute
+    (set by the ``@emits_events`` decorator); otherwise we assume the
+    plain state-only convention.
+    """
+    return bool(getattr(handler, "returns_events", False))
+
+
+def emits_events(handler: Callable) -> Callable:
+    """Decorator marking a handler as returning ``(state, new_events)``."""
+    handler.returns_events = True
+    return handler
+
+
+class EventRegistry:
+    """The ordered array of event handlers (the alphabet Σ).
+
+    The registry is frozen before batch composition; its order defines
+    the digit values of the Horner codec, so it must not change between
+    compilation and runtime — the same constraint the paper places on
+    its constant function-pointer array.
+    """
+
+    def __init__(self):
+        self._types: list[EventType] = []
+        self._by_name: dict[str, EventType] = {}
+        self._frozen = False
+
+    # -- registration -----------------------------------------------------
+    def register(
+        self,
+        name: str,
+        handler: Callable,
+        *,
+        lookahead: float = float("inf"),
+    ) -> EventType:
+        if self._frozen:
+            raise RuntimeError(
+                "EventRegistry is frozen; register all event types before "
+                "composing batches (paper §III-A: constant handler array)."
+            )
+        if name in self._by_name:
+            raise ValueError(f"event type {name!r} already registered")
+        if lookahead < 0:
+            raise ValueError("lookahead must be >= 0")
+        et = EventType(
+            type_id=len(self._types),
+            name=name,
+            handler=handler,
+            lookahead=float(lookahead),
+            returns_events=_handler_returns_events(handler),
+        )
+        self._types.append(et)
+        self._by_name[name] = et
+        return et
+
+    def event_type(self, fn: Callable | None = None, *, name=None, lookahead=float("inf")):
+        """Decorator form: ``@registry.event_type(lookahead=1.0)``."""
+        def wrap(f):
+            self.register(name or f.__name__, f, lookahead=lookahead)
+            return f
+        if fn is not None:
+            return wrap(fn)
+        return wrap
+
+    def freeze(self) -> "EventRegistry":
+        self._frozen = True
+        return self
+
+    # -- introspection ----------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._types)
+
+    def __iter__(self):
+        return iter(self._types)
+
+    def __getitem__(self, idx) -> EventType:
+        if isinstance(idx, str):
+            return self._by_name[idx]
+        return self._types[idx]
+
+    @property
+    def frozen(self) -> bool:
+        return self._frozen
+
+    @property
+    def names(self) -> list[str]:
+        return [t.name for t in self._types]
+
+    def lookaheads(self) -> jnp.ndarray:
+        """Per-type lookahead vector (f32), inf-safe, for device use."""
+        la = [t.lookahead for t in self._types]
+        return jnp.asarray(la, dtype=jnp.float32)
+
+    def any_returns_events(self) -> bool:
+        return any(t.returns_events for t in self._types)
+
+
+def normalize_handler_result(result, *, returns_events: bool):
+    """Canonicalize a handler result to ``(state, list_of_new_events)``."""
+    if returns_events:
+        state, new_events = result
+        return state, list(new_events)
+    return result, []

@@ -1,0 +1,192 @@
+"""Pending-event set: host binary heap + device-resident array queue.
+
+The paper's runtime mechanism reads the set of future events in
+non-decreasing timestamp order (§III-B).  Two implementations:
+
+* :class:`HostEventQueue` — a classic binary heap over
+  :class:`repro.core.events.Event`, used by the paper-faithful host
+  scheduler and by the serving engine's host control plane.
+
+* :class:`DeviceEventQueue` — a fixed-capacity struct-of-arrays queue
+  whose operations are pure jnp (usable inside ``lax.while_loop``), used
+  by the fully on-device scheduler.  Pop is a masked argmin (O(capacity)
+  on the VPU — for the queue sizes of interest this is cheaper on TPU
+  than maintaining heap order with data-dependent scatters, and it has
+  no host round-trips).  Ties on the timestamp are broken by insertion
+  sequence number for deterministic, schedule-order execution.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.events import ARG_WIDTH, Event
+
+_INF = jnp.float32(jnp.inf)
+_I32_MAX = jnp.int32(2**31 - 1)
+
+
+class HostEventQueue:
+    """Binary heap of Events keyed by (time, seq)."""
+
+    def __init__(self):
+        self._heap: list[tuple[float, int, Event]] = []
+        self._seq = 0
+        self.push_count = 0
+        self.pop_count = 0
+
+    def push(self, time: float, type_id: int, arg: Any = None) -> Event:
+        ev = Event(time=float(time), type_id=int(type_id), arg=arg, seq=self._seq)
+        heapq.heappush(self._heap, (ev.time, ev.seq, ev))
+        self._seq += 1
+        self.push_count += 1
+        return ev
+
+    def push_event(self, ev: Event) -> None:
+        ev = dataclasses.replace(ev, seq=self._seq)
+        heapq.heappush(self._heap, (ev.time, ev.seq, ev))
+        self._seq += 1
+        self.push_count += 1
+
+    def pop(self) -> Event:
+        self.pop_count += 1
+        return heapq.heappop(self._heap)[2]
+
+    def peek(self) -> Event:
+        return self._heap[0][2]
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)
+
+
+class DeviceQueue(NamedTuple):
+    """Struct-of-arrays pending-event set (a JAX pytree).
+
+    ``types == -1`` marks a free slot.  ``seq`` is the global insertion
+    counter used for deterministic tie-breaking.
+    """
+
+    times: jnp.ndarray   # f32[capacity]
+    types: jnp.ndarray   # i32[capacity], -1 = empty
+    args: jnp.ndarray    # f32[capacity, ARG_WIDTH]
+    seqs: jnp.ndarray    # i32[capacity]
+    size: jnp.ndarray    # i32 scalar
+    next_seq: jnp.ndarray  # i32 scalar
+
+    @property
+    def capacity(self) -> int:
+        return self.times.shape[0]
+
+
+def device_queue_init(capacity: int, arg_width: int = ARG_WIDTH) -> DeviceQueue:
+    return DeviceQueue(
+        times=jnp.full((capacity,), jnp.inf, jnp.float32),
+        types=jnp.full((capacity,), -1, jnp.int32),
+        args=jnp.zeros((capacity, arg_width), jnp.float32),
+        seqs=jnp.full((capacity,), 2**31 - 1, jnp.int32),
+        size=jnp.int32(0),
+        next_seq=jnp.int32(0),
+    )
+
+
+def device_queue_push(q: DeviceQueue, time, type_id, arg) -> DeviceQueue:
+    """Insert one event into the first free slot (pure jnp).
+
+    If the queue is full the event is dropped and ``size`` still
+    increments past capacity so callers can detect overflow; the engine
+    asserts on it in debug runs.
+    """
+    occupied = q.types >= 0
+    # argmin over the boolean mask finds the first False (free) slot.
+    slot = jnp.argmin(occupied)
+    have_room = q.size < q.capacity
+    time = jnp.asarray(time, jnp.float32)
+    type_id = jnp.asarray(type_id, jnp.int32)
+    arg = jnp.asarray(arg, jnp.float32)
+
+    def do_push(q):
+        return DeviceQueue(
+            times=q.times.at[slot].set(time),
+            types=q.types.at[slot].set(type_id),
+            args=q.args.at[slot].set(arg),
+            seqs=q.seqs.at[slot].set(q.next_seq),
+            size=q.size + 1,
+            next_seq=q.next_seq + 1,
+        )
+
+    def overflow(q):
+        return q._replace(size=q.size + 1, next_seq=q.next_seq + 1)
+
+    return jax.lax.cond(have_room, do_push, overflow, q)
+
+
+def device_queue_push_rows(q: DeviceQueue, rows) -> DeviceQueue:
+    """Insert a fixed-size block of emit rows ``f32[R, 2+W]``.
+
+    Row layout is ``(time, type, arg...)``; ``type < 0`` rows are
+    skipped.  Used by the on-device engine to apply a batch's deferred
+    emissions (paper §IV.D) in one pass.
+    """
+    def body(i, q):
+        row = rows[i]
+        t, ty = row[0], row[1].astype(jnp.int32)
+        return jax.lax.cond(
+            ty >= 0,
+            lambda q: device_queue_push(q, t, ty, row[2:]),
+            lambda q: q,
+            q,
+        )
+
+    return jax.lax.fori_loop(0, rows.shape[0], body, q)
+
+
+def _min_key_slot(q: DeviceQueue):
+    """Index of the occupied slot with lexicographic-min (time, seq)."""
+    occupied = q.types >= 0
+    times = jnp.where(occupied, q.times, jnp.inf)
+    tmin = jnp.min(times)
+    at_min = occupied & (times == tmin)
+    seqs = jnp.where(at_min, q.seqs, _I32_MAX)
+    slot = jnp.argmin(seqs)
+    return slot, tmin
+
+
+def device_queue_peek(q: DeviceQueue):
+    """(time, type, slot) of the earliest event; type=-1 when empty."""
+    slot, tmin = _min_key_slot(q)
+    empty = q.size <= 0
+    t = jnp.where(empty, _INF, tmin)
+    ty = jnp.where(empty, jnp.int32(-1), q.types[slot])
+    return t, ty, slot
+
+
+def device_queue_pop(q: DeviceQueue):
+    """Remove and return the earliest event.
+
+    Returns ``(q', time, type, arg)``; when empty, type is -1 and the
+    queue is unchanged.
+    """
+    t, ty, slot = device_queue_peek(q)
+    arg = q.args[slot]
+    nonempty = ty >= 0
+
+    def do_pop(q):
+        return DeviceQueue(
+            times=q.times.at[slot].set(jnp.inf),
+            types=q.types.at[slot].set(-1),
+            args=q.args,
+            seqs=q.seqs.at[slot].set(2**31 - 1),
+            size=q.size - 1,
+            next_seq=q.next_seq,
+        )
+
+    q = jax.lax.cond(nonempty, do_pop, lambda q: q, q)
+    return q, t, ty, arg

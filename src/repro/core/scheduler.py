@@ -1,0 +1,229 @@
+"""Batch selection and execution (paper §III-B).
+
+Extraction rule (paper Fig 2): iterate over the future events in time
+order, maintaining the dynamic lookahead window
+``t_max = min over extracted e of (t_e + l_e)``.  An event is extracted
+while its timestamp does not exceed the current ``t_max`` and the batch
+is shorter than the configured maximum length.  The extracted word is
+encoded with the Horner codec and the corresponding pre-composed batch
+program is executed.
+
+Schedulers:
+
+* :class:`ConservativeScheduler` — the paper's runtime mechanism
+  (host-driven; correct by construction).
+* :func:`run_unbatched`    — one-event-at-a-time baseline, as in common
+  sequential simulators (used for the §IV.B overhead measurement and the
+  Fig-3 speedup denominators).
+* :class:`SpeculativeScheduler` — the paper's §IV.D future-work variant:
+  extract optimistically past the lookahead window, snapshot the state,
+  and roll back if an emitted event lands inside the executed window.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.composer import _ComposerBase
+from repro.core.events import Event, EventRegistry
+from repro.core.queue import HostEventQueue
+
+
+@dataclasses.dataclass
+class RunStats:
+    events_executed: int = 0
+    batches_executed: int = 0
+    rollbacks: int = 0
+    final_time: float = 0.0
+    batch_length_hist: dict[int, int] = dataclasses.field(default_factory=dict)
+
+    def record_batch(self, length: int) -> None:
+        self.batches_executed += 1
+        self.events_executed += length
+        self.batch_length_hist[length] = self.batch_length_hist.get(length, 0) + 1
+
+    @property
+    def mean_batch_length(self) -> float:
+        if not self.batches_executed:
+            return 0.0
+        return self.events_executed / self.batches_executed
+
+
+def extract_window(
+    queue: HostEventQueue,
+    registry: EventRegistry,
+    max_len: int,
+) -> list[Event]:
+    """Pop the maximal runnable prefix under the dynamic lookahead window."""
+    batch: list[Event] = []
+    t_max = float("inf")
+    while queue and len(batch) < max_len:
+        head = queue.peek()
+        if head.time > t_max:
+            break
+        batch.append(queue.pop())
+        la = registry[head.type_id].lookahead
+        t_max = min(t_max, head.time + la)
+    return batch
+
+
+class ConservativeScheduler:
+    """Paper §III-B: lookahead-window batches over a host event queue."""
+
+    def __init__(self, registry: EventRegistry, composer: _ComposerBase,
+                 *, check_causality: bool = False):
+        self.registry = registry
+        self.composer = composer
+        self.max_len = composer.codec.max_len
+        self.check_causality = check_causality
+
+    def run(self, state, queue: HostEventQueue, *,
+            max_events: int | None = None) -> tuple[Any, RunStats]:
+        stats = RunStats()
+        budget = float("inf") if max_events is None else max_events
+        while queue and stats.events_executed < budget:
+            batch = extract_window(queue, self.registry, self.max_len)
+            if not batch:  # cannot happen: first event is always extractable
+                break
+            word = [ev.type_id for ev in batch]
+            code = self.composer.codec.encode(word)
+            ts = [jnp.float32(ev.time) for ev in batch]
+            args = [ev.arg for ev in batch]
+            state, emitted = self.composer.execute(code, state, ts, args)
+            # Deferred scheduling (§IV.D): emissions buffered during the
+            # batch are inserted only now.
+            last_t = batch[-1].time
+            for (delay, type_id, arg) in emitted:
+                t_new = float(batch[-1].time) + float(delay)
+                if self.check_causality and t_new < last_t:
+                    raise RuntimeError(
+                        f"causality violation: event type {type_id} emitted "
+                        f"at {t_new} < batch end {last_t}; lookahead too "
+                        "large for this model"
+                    )
+                queue.push(t_new, type_id, arg)
+            stats.record_batch(len(batch))
+            stats.final_time = last_t
+        return state, stats
+
+
+def run_unbatched(
+    registry: EventRegistry,
+    state,
+    queue: HostEventQueue,
+    *,
+    jit_handlers: bool = True,
+    max_events: int | None = None,
+) -> tuple[Any, RunStats]:
+    """One-by-one execution, the common sequential DES baseline.
+
+    Each handler is individually jitted (that is what a production JAX
+    DES without cross-event batching would do) so the comparison against
+    batched execution isolates the *cross-event* optimization, not
+    jit-vs-python overhead.
+    """
+    stats = RunStats()
+    progs = {}
+    for et in registry:
+        progs[et.type_id] = jax.jit(et.handler) if jit_handlers else et.handler
+    budget = float("inf") if max_events is None else max_events
+    while queue and stats.events_executed < budget:
+        ev = queue.pop()
+        et = registry[ev.type_id]
+        result = progs[ev.type_id](state, jnp.float32(ev.time), ev.arg)
+        if et.returns_events:
+            state, emitted = result
+            for (delay, type_id, arg) in emitted:
+                queue.push(ev.time + float(delay), type_id, arg)
+        else:
+            state = result
+        stats.record_batch(1)
+        stats.final_time = ev.time
+    return state, stats
+
+
+class SpeculativeScheduler:
+    """Optimistic batches with rollback (paper §IV.D future work).
+
+    Events are extracted up to ``max_len`` ignoring the lookahead window
+    (but still in timestamp order).  The state pytree is snapshotted
+    before the batch; if the batch emits an event whose timestamp falls
+    *before* the timestamp of the last event executed in the batch, the
+    causality constraint may have been violated, so the batch is rolled
+    back and re-executed conservatively one event at a time.
+
+    Snapshot/restore is O(state) but on-device (no transfers): JAX arrays
+    are immutable, so the "snapshot" is just keeping the old pytree alive
+    — rollback is free unless the batch committed, which makes this a
+    particularly cheap Time-Warp on immutable arrays.
+    """
+
+    def __init__(self, registry: EventRegistry, composer: _ComposerBase,
+                 *, window_slack: float = float("inf")):
+        self.registry = registry
+        self.composer = composer
+        self.max_len = composer.codec.max_len
+        # How far past t_max we are willing to speculate.
+        self.window_slack = window_slack
+
+    def _extract_speculative(self, queue: HostEventQueue):
+        batch: list[Event] = []
+        t_max = float("inf")
+        while queue and len(batch) < self.max_len:
+            head = queue.peek()
+            if head.time > t_max + self.window_slack:
+                break
+            batch.append(queue.pop())
+            la = self.registry[head.type_id].lookahead
+            t_max = min(t_max, head.time + la)
+        return batch, t_max
+
+    def run(self, state, queue: HostEventQueue, *,
+            max_events: int | None = None) -> tuple[Any, RunStats]:
+        stats = RunStats()
+        budget = float("inf") if max_events is None else max_events
+        while queue and stats.events_executed < budget:
+            batch, t_max = self._extract_speculative(queue)
+            word = [ev.type_id for ev in batch]
+            code = self.composer.codec.encode(word)
+            ts = [jnp.float32(ev.time) for ev in batch]
+            args = [ev.arg for ev in batch]
+            snapshot = state  # immutable pytree: snapshot is a reference
+            state_new, emitted = self.composer.execute(code, state, ts, args)
+            last_t = batch[-1].time
+            violated = any(
+                float(batch[-1].time) + float(delay) < last_t
+                or float(batch[-1].time) + float(delay) < t_max
+                and any(ev.time > float(batch[-1].time) + float(delay)
+                        for ev in batch)
+                for (delay, _ty, _a) in emitted
+            )
+            if violated:
+                # Rollback: restore snapshot, requeue, replay one by one.
+                stats.rollbacks += 1
+                state = snapshot
+                for ev in batch:
+                    queue.push_event(ev)
+                for _ in range(len(batch)):
+                    ev = queue.pop()
+                    et = self.registry[ev.type_id]
+                    result = et.handler(state, jnp.float32(ev.time), ev.arg)
+                    if et.returns_events:
+                        state, new = result
+                        for (delay, ty, a) in new:
+                            queue.push(ev.time + float(delay), ty, a)
+                    else:
+                        state = result
+                    stats.record_batch(1)
+                    stats.final_time = ev.time
+                continue
+            state = state_new
+            for (delay, type_id, arg) in emitted:
+                queue.push(float(batch[-1].time) + float(delay), type_id, arg)
+            stats.record_batch(len(batch))
+            stats.final_time = last_t
+        return state, stats

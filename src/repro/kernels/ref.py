@@ -1,0 +1,101 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+These are the ground truth the kernels are tested against with
+``assert_allclose`` across shape/dtype sweeps (tests/test_kernels.py).
+They are deliberately naive — full score matrices, no blocking — so
+their correctness is auditable at a glance.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+_NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        scale: float | None = None):
+    """q: [B,H,T,D]; k/v: [B,KV,S,D]; H = KV*G.  Returns [B,H,T,D]."""
+    B, H, T, D = q.shape
+    KV, S = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qg = q.reshape(B, KV, G, T, D).astype(jnp.float32)
+    s = jnp.einsum("bkgtd,bksd->bkgts", qg, k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.arange(T)[:, None] >= jnp.arange(S)[None, :]
+        s = jnp.where(mask[None, None, None], s, _NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgts,bksd->bkgtd", w, v.astype(jnp.float32))
+    return o.reshape(B, H, T, D).astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths,
+                         *, scale: float | None = None):
+    """q: [B,H,D]; caches: [B,KV,S,D]; lengths: i32[B] valid lengths."""
+    B, H, D = q.shape
+    KV, S = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qg = q.reshape(B, KV, G, D).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bksd->bkgs", qg,
+                   k_cache.astype(jnp.float32)) * scale
+    valid = jnp.arange(S)[None, :] < lengths[:, None]
+    s = jnp.where(valid[:, None, None], s, _NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bksd->bkgd", w, v_cache.astype(jnp.float32))
+    return o.reshape(B, H, D).astype(q.dtype)
+
+
+def rwkv6_scan_ref(r, k, v, logw, u):
+    """Sequential RWKV6 WKV recurrence — the exact oracle.
+
+    r/k/v: [B,H,T,K]; logw: [B,H,T,K] (log decay, <0); u: [H,K] bonus.
+    Returns y [B,H,T,K] (V == K) in fp32:
+
+        y_t = r_t · (S_{t-1} + u ⊙ k_t v_tᵀ)
+        S_t = diag(w_t) S_{t-1} + k_t v_tᵀ
+    """
+    B, H, T, K = r.shape
+    r = r.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    w = jnp.exp(logw.astype(jnp.float32))
+
+    def step(S, xs):
+        rt, kt, vt, wt = xs                     # [B,H,K]
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, S + u[None, :, :, None] * kv)
+        S = wt[..., None] * S + kv
+        return S, y
+
+    S0 = jnp.zeros((B, H, K, K), jnp.float32)
+    xs = tuple(jnp.moveaxis(t, 2, 0) for t in (r, k, v, w))
+    _, ys = jax.lax.scan(step, S0, xs)
+    return jnp.moveaxis(ys, 0, 2)               # [B,H,T,K]
+
+
+def mamba_scan_ref(xdt, dt, bc, cc, a):
+    """Sequential selective-scan oracle.
+
+    xdt/dt: [B,T,I]; bc/cc: [B,T,N]; a: [I,N] (negative) -> y [B,T,I]:
+        h_t = exp(dt_t·A) h_{t-1} + xdt_t·B_t;   y_t = C_t · h_t
+    """
+    B, T, I = xdt.shape
+    N = bc.shape[-1]
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp
+        decay = jnp.exp(dt_t[:, :, None] * a)          # [B,I,N]
+        h = decay * h + x_t[:, :, None] * b_t[:, None, :]
+        y = jnp.sum(h * c_t[:, None, :], axis=-1)
+        return h, y
+
+    h0 = jnp.zeros((B, I, N), jnp.float32)
+    xs = tuple(jnp.moveaxis(t.astype(jnp.float32), 1, 0)
+               for t in (xdt, dt, bc, cc))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1)

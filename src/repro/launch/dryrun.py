@@ -1,0 +1,160 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+Proves the distribution config is coherent without hardware: for every
+(architecture × applicable input shape × mesh), ``jax.jit(step,
+in_shardings, out_shardings).lower(**ShapeDtypeStructs).compile()`` must
+succeed on the 16×16 single-pod mesh AND the 2×16×16 multi-pod mesh.
+Memory/cost/collective stats are recorded to a JSON the roofline tables
+in EXPERIMENTS.md are generated from.
+
+The XLA_FLAGS line above MUST run before any jax import (device count
+locks at first init) — this module is the only place it is set.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                 # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-405b \
+        --shape train_4k --mesh multi                            # one cell
+    PYTHONPATH=src python -m repro.launch.dryrun --out results.json
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import SHAPES, get_config, list_configs, shape_applicable
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_cell
+
+DEFAULT_OUT = "dryrun_results.json"
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str, *,
+             attn_impl: str = "blockwise", fsdp: bool = True,
+             verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    ok, reason = shape_applicable(cfg, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "skipped", "reason": reason}
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    chips = mesh.size
+    cell = build_cell(cfg, shape_name, mesh, attn_impl=attn_impl, fsdp=fsdp)
+    t0 = time.time()
+    with mesh:
+        lowered = jax.jit(
+            cell.fn,
+            in_shardings=cell.in_shardings,
+            out_shardings=cell.out_shardings,
+            donate_argnums=cell.donate_argnums,
+        ).lower(*cell.arg_specs)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    shape = SHAPES[shape_name]
+    mf = rl.model_flops_for(cfg, cell.kind, cell.static_info["tokens"],
+                            shape["seq_len"])
+    roof = rl.analyze(compiled, arch=arch, shape=shape_name,
+                      mesh_name=mesh_name, chips=chips, model_flops=mf)
+    score_bytes = rl.attention_score_hbm_bytes(
+        cfg, cell.kind, shape["global_batch"], shape["seq_len"])
+    mem_adj = max(0.0, roof.memory_seconds -
+                  score_bytes / chips / rl.HBM_BW)
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "status": "ok", "kind": cell.kind,
+        "lower_seconds": round(t_lower, 2),
+        "compile_seconds": round(t_compile, 2),
+        "static_info": cell.static_info,
+        "roofline": roof.to_dict(),
+        "memory_seconds_pallas_adj": mem_adj,
+        "attention_score_hbm_bytes_total": score_bytes,
+    }
+    if verbose:
+        ms = roof.memory_stats
+        print(f"[{arch} × {shape_name} × {mesh_name}] OK "
+              f"compile={t_compile:.1f}s "
+              f"args={ms['argument_bytes']/1e9:.2f}GB/dev "
+              f"temp={ms['temp_bytes']/1e9:.2f}GB/dev "
+              f"compute={roof.compute_seconds*1e3:.2f}ms "
+              f"memory={roof.memory_seconds*1e3:.2f}ms "
+              f"collective={roof.collective_seconds*1e3:.2f}ms "
+              f"dominant={roof.dominant} mfu@bound={roof.mfu:.3f}",
+              flush=True)
+        # the brief asks for these two printed verbatim:
+        print("  memory_analysis:", compiled.memory_analysis(), flush=True)
+        ca = compiled.cost_analysis()
+        ca = ca[0] if isinstance(ca, list) else ca
+        print("  cost_analysis: flops=%.3e bytes=%.3e" %
+              (ca.get("flops", 0.0), ca.get("bytes accessed", 0.0)),
+              flush=True)
+    return result
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default=None, help="one arch id (default all)")
+    p.add_argument("--shape", default=None, choices=list(SHAPES),
+                   help="one shape (default all)")
+    p.add_argument("--mesh", default=None, choices=["single", "multi"],
+                   help="one mesh (default both)")
+    p.add_argument("--attn-impl", default="blockwise")
+    p.add_argument("--no-fsdp", action="store_true")
+    p.add_argument("--out", default=DEFAULT_OUT)
+    p.add_argument("--append", action="store_true",
+                   help="merge into an existing results file")
+    args = p.parse_args()
+
+    archs = [args.arch] if args.arch else list_configs()
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [args.mesh] if args.mesh else ["single", "multi"]
+
+    results = []
+    if args.append and os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    # re-attempt FAILED cells on resume; keep ok/skipped
+    results = [r for r in results if r["status"] != "FAILED"]
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in results}
+
+    failures = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for mesh_name in meshes:
+                key = (arch, shape_name, mesh_name)
+                if key in done:
+                    continue
+                try:
+                    r = run_cell(arch, shape_name, mesh_name,
+                                 attn_impl=args.attn_impl,
+                                 fsdp=not args.no_fsdp)
+                except Exception as e:  # a failure here is a system bug
+                    traceback.print_exc()
+                    r = {"arch": arch, "shape": shape_name,
+                         "mesh": mesh_name, "status": "FAILED",
+                         "error": f"{type(e).__name__}: {e}"}
+                    failures += 1
+                if r["status"] == "skipped":
+                    print(f"[{arch} × {shape_name} × {mesh_name}] "
+                          f"skipped: {r['reason']}", flush=True)
+                results.append(r)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+    ok = sum(1 for r in results if r["status"] == "ok")
+    sk = sum(1 for r in results if r["status"] == "skipped")
+    print(f"\ndry-run complete: {ok} ok, {sk} skipped, {failures} FAILED "
+          f"-> {args.out}")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,359 @@
+"""Loop-aware cost model over optimized (per-device, partitioned) HLO.
+
+XLA's ``compiled.cost_analysis()`` counts every computation ONCE — a
+``lax.scan`` over 126 layers contributes a single body's FLOPs, which
+under-counts deep models by orders of magnitude (verified in
+tests/test_roofline.py).  This module re-walks the HLO text with loop
+multipliers:
+
+* ``while`` ops carry ``backend_config={"known_trip_count":{"n":K}}``
+  after XLA optimization — body and condition costs are multiplied by K
+  (nested loops multiply through).  Fallback: largest integer constant
+  in the condition closure.
+* **FLOPs** — 2·result_elems·contracted_size for every ``dot`` (operand
+  shapes resolved from the instruction's computation; batch dims are in
+  the result).  Elementwise FLOPs are excluded by convention (matches
+  the MODEL_FLOPS=6ND accounting).
+* **Memory traffic** — Σ(operand bytes + result bytes) of every
+  *materializing* top-level instruction (fusions count at their call
+  boundary; fusion-internal values never touch HBM; parameter /
+  constant / tuple plumbing excluded).  An estimate of post-fusion HBM
+  traffic.
+* **Collective bytes** — Σ operand bytes of all-gather / all-reduce /
+  reduce-scatter / all-to-all / collective-permute, × loop multipliers.
+
+All numbers are PER DEVICE (the module is the partitioned per-device
+program).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%[\w.-]+)\s*=\s*(.*?)\s*([\w-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?(%[\w.-]+)\s*\(.*\{\s*$")
+_TRIP_RE = re.compile(r'known_trip_count[="{\s]*\{?["\s]*n["\':\s]+"?(\d+)')
+_REF_RE = re.compile(r"%[\w.-]+")
+
+_PLUMBING = {"parameter", "constant", "get-tuple-element", "tuple",
+             "bitcast", "after-all", "partition-id", "replica-id",
+             "iota"}
+
+
+def _dims(dimstr: str) -> list[int]:
+    return [int(d) for d in dimstr.split(",") if d] if dimstr else []
+
+
+def _type_bytes(typestr: str) -> int:
+    return sum(
+        (lambda n: n * _DTYPE_BYTES.get(dt, 0))(
+            __import__("math").prod(_dims(dims)) if dims else 1)
+        for dt, dims in _SHAPE_RE.findall(typestr)
+    )
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    typestr: str
+    opcode: str
+    rest: str          # everything after the opening paren of the call
+    result_bytes: int
+    shapes: list       # [(dtype, [dims])] of the result type
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    mem_bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_op: dict = dataclasses.field(default_factory=dict)
+
+    def __add__(self, o):
+        by = dict(self.coll_by_op)
+        for k, v in o.coll_by_op.items():
+            d = by.setdefault(k, {"bytes": 0.0, "count": 0.0})
+            d["bytes"] += v["bytes"]
+            d["count"] += v["count"]
+        return Cost(self.flops + o.flops, self.mem_bytes + o.mem_bytes,
+                    self.coll_bytes + o.coll_bytes, by)
+
+    def scaled(self, k: float) -> "Cost":
+        by = {op: {"bytes": v["bytes"] * k, "count": v["count"] * k}
+              for op, v in self.coll_by_op.items()}
+        return Cost(self.flops * k, self.mem_bytes * k,
+                    self.coll_bytes * k, by)
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.comps: dict[str, list[Instr]] = {}
+        self._parse(text)
+        self._memo: dict[tuple, Cost] = {}
+
+    def _parse(self, text: str) -> None:
+        cur: Optional[str] = None
+        for line in text.splitlines():
+            mc = _COMP_RE.match(line)
+            if mc and "->" in line:
+                cur = mc.group(1)
+                self.comps[cur] = []
+                continue
+            if line.startswith("}"):
+                cur = None
+                continue
+            if cur is None:
+                continue
+            mi = _INSTR_RE.match(line)
+            if not mi:
+                continue
+            name, typestr, opcode, rest = mi.groups()
+            self.comps[cur].append(Instr(
+                name=name, typestr=typestr, opcode=opcode, rest=rest,
+                result_bytes=_type_bytes(typestr),
+                shapes=[( dt, _dims(d)) for dt, d in
+                        _SHAPE_RE.findall(typestr)],
+            ))
+
+    # -- helpers -----------------------------------------------------------
+    def _defs(self, comp: str) -> dict[str, Instr]:
+        return {i.name: i for i in self.comps.get(comp, [])}
+
+    def _operand_refs(self, instr: Instr) -> list[str]:
+        args = instr.rest
+        for cut in ("), ", ") ,", "),\t"):
+            idx = args.find(cut)
+            if idx >= 0:
+                args = args[:idx]
+                break
+        else:
+            idx = args.rfind(")")
+            if idx >= 0:
+                args = args[:idx]
+        return _REF_RE.findall(args)
+
+    def _attr(self, instr: Instr, key: str) -> Optional[str]:
+        m = re.search(key + r"=(%[\w.-]+)", instr.rest)
+        return m.group(1) if m else None
+
+    def _trip_count(self, instr: Instr) -> int:
+        m = _TRIP_RE.search(instr.rest)
+        if m:
+            return int(m.group(1))
+        cond = self._attr(instr, "condition")
+        if cond and cond in self.comps:
+            consts = []
+            for i in self.comps[cond]:
+                if i.opcode == "constant":
+                    mm = re.match(r"(\d+)", i.rest)
+                    if mm:
+                        consts.append(int(mm.group(1)))
+            if consts:
+                return max(consts)
+        return 1
+
+    def _fusion_operand_bytes(self, instr: Instr, called: str, pos: int,
+                              defs: dict) -> int:
+        """HBM bytes read for a fusion's ``pos``-th operand.
+
+        When the operand's matching parameter inside the fused
+        computation is consumed ONLY by dynamic-slice / gather ops, the
+        fusion reads just the slice(s), not the whole buffer — e.g. the
+        per-layer weight slice from a [L, ...] stacked tensor inside a
+        scan body.  Counting full operands there inflated llama3-405b
+        train memory ~20x (EXPERIMENTS §Roofline methodology).
+        """
+        refs = self._operand_refs(instr)
+        full = defs[refs[pos]].result_bytes if refs[pos] in defs else 0
+        comp = self.comps.get(called)
+        if not comp:
+            return full
+        pname = None
+        for i in comp:
+            if i.opcode == "parameter" and i.rest.startswith(f"{pos})"):
+                pname = i.name
+                break
+        if pname is None:
+            return full
+        sliced = 0
+        for i in comp:
+            if i.opcode == "parameter":
+                continue
+            if pname in self._operand_refs(i):
+                if i.opcode in ("dynamic-slice", "gather", "slice"):
+                    sliced += i.result_bytes
+                else:
+                    return full  # some consumer reads it wholesale
+        return min(full, sliced) if sliced else full
+
+    def _dot_flops(self, instr: Instr, defs: dict) -> float:
+        result_elems = 1
+        for _dt, dims in instr.shapes:
+            for d in dims:
+                result_elems *= d
+        refs = self._operand_refs(instr)
+        contracted = 1
+        m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.rest)
+        if m and refs:
+            lhs = defs.get(refs[0])
+            if lhs is not None and lhs.shapes:
+                dims = lhs.shapes[0][1]
+                for ci in _dims(m.group(1)):
+                    if ci < len(dims):
+                        contracted *= dims[ci]
+        return 2.0 * result_elems * contracted
+
+    # -- the walk ------------------------------------------------------------
+    def cost(self, comp: str, *, count_mem: bool = True) -> Cost:
+        key = (comp, count_mem)
+        if key in self._memo:
+            return self._memo[key]
+        total = Cost()
+        defs = self._defs(comp)
+        for instr in self.comps.get(comp, []):
+            op = instr.opcode
+            if op == "while":
+                body = self._attr(instr, "body")
+                cond = self._attr(instr, "condition")
+                trip = self._trip_count(instr)
+                sub = Cost()
+                if body in self.comps:
+                    sub = sub + self.cost(body, count_mem=count_mem)
+                if cond in self.comps:
+                    sub = sub + self.cost(cond, count_mem=count_mem)
+                total = total + sub.scaled(trip)
+                continue
+            if op == "conditional":
+                branches = re.findall(r"%[\w.-]+", instr.rest)
+                comps = [b for b in branches if b in self.comps]
+                if comps:
+                    subs = [self.cost(b, count_mem=count_mem)
+                            for b in comps]
+                    best = max(subs, key=lambda c: c.flops + c.mem_bytes)
+                    total = total + best
+                continue
+            if op == "fusion":
+                called = self._attr(instr, "calls")
+                if called in self.comps:
+                    # fusion internals never touch HBM
+                    total = total + self.cost(called, count_mem=False)
+                if count_mem:
+                    ops_b = [self._fusion_operand_bytes(instr, called, pos,
+                                                        defs)
+                             for pos, _ in enumerate(
+                                 self._operand_refs(instr))]
+                    root = (self.comps[called][-1]
+                            if called in self.comps and self.comps[called]
+                            else None)
+                    # CPU-backend artifact: bf16 dots are legalized to
+                    # f32, and XLA hoists the converts through cache
+                    # updates, wrapping the in-place DUS in full-buffer
+                    # converts (convert(DUS(convert(stack)))).  On TPU
+                    # (native bf16 MXU) the DUS roots cleanly and
+                    # aliases.  With assume_native_bf16 we look through
+                    # a convert root to the DUS beneath.
+                    if root is not None and root.opcode == "convert" and \
+                            getattr(self, "assume_native_bf16", False):
+                        for cand in reversed(self.comps.get(called, [])):
+                            if cand.opcode in ("dynamic-update-slice",
+                                               "scatter"):
+                                root = cand
+                                break
+                    if root is not None and \
+                            root.opcode in ("dynamic-update-slice",
+                                            "scatter"):
+                        # In-place scan-slice / cache-scatter update:
+                        # XLA aliases the destination buffer; real
+                        # traffic is the update (read + region write),
+                        # not the whole stacked tensor.
+                        upd_refs = self._operand_refs(root)
+                        cdefs = self._defs(called)
+                        upd_ref = (upd_refs[1]
+                                   if root.opcode == "dynamic-update-slice"
+                                   else (upd_refs[-1] if upd_refs else None))
+                        upd = (cdefs[upd_ref].result_bytes
+                               if upd_ref in cdefs else 0)
+                        big = max(ops_b) if ops_b else 0
+                        total.mem_bytes += sum(ops_b) - big + 2 * upd
+                    else:
+                        total.mem_bytes += sum(ops_b) + instr.result_bytes
+                continue
+            if op == "dynamic-update-slice":
+                if count_mem:
+                    refs = self._operand_refs(instr)
+                    upd = (defs[refs[1]].result_bytes
+                           if len(refs) > 1 and refs[1] in defs else 0)
+                    total.mem_bytes += 2 * upd
+                continue
+            if op == "scatter":
+                # KV-cache token updates: donated buffers alias, so the
+                # real traffic is the updates (operand 2), not a full
+                # cache rewrite (that overcounted decode cells ~700x).
+                if count_mem:
+                    refs = self._operand_refs(instr)
+                    upd = (defs[refs[-1]].result_bytes
+                           if refs and refs[-1] in defs else 0)
+                    total.mem_bytes += 2 * upd
+                continue
+            if op == "dynamic-slice":
+                if count_mem:
+                    total.mem_bytes += 2 * instr.result_bytes
+                continue
+            if op in ("call",):
+                called = self._attr(instr, "to_apply")
+                if called in self.comps:
+                    total = total + self.cost(called, count_mem=count_mem)
+                continue
+            base = op.replace("-start", "").replace("-done", "")
+            if base in _COLLECTIVES and not op.endswith("-done"):
+                opbytes = sum(defs[r].result_bytes
+                              for r in self._operand_refs(instr)
+                              if r in defs)
+                total.coll_bytes += opbytes
+                d = total.coll_by_op.setdefault(
+                    base, {"bytes": 0.0, "count": 0.0})
+                d["bytes"] += opbytes
+                d["count"] += 1
+                if count_mem:
+                    total.mem_bytes += opbytes + instr.result_bytes
+                continue
+            if op == "dot":
+                total.flops += self._dot_flops(instr, defs)
+            if count_mem and op not in _PLUMBING:
+                opbytes = sum(defs[r].result_bytes
+                              for r in self._operand_refs(instr)
+                              if r in defs)
+                total.mem_bytes += opbytes + instr.result_bytes
+        self._memo[key] = total
+        return total
+
+    def entry_cost(self) -> Cost:
+        # the ENTRY computation is conventionally named %main.*
+        entry = None
+        for name in self.comps:
+            if name.startswith("%main"):
+                entry = name
+                break
+        if entry is None:
+            entry = next(iter(self.comps))
+        return self.cost(entry)
+
+
+def analyze_hlo(text: str, *, assume_native_bf16: bool = False) -> Cost:
+    mod = HloModule(text)
+    mod.assume_native_bf16 = assume_native_bf16
+    return mod.entry_cost()

@@ -1,0 +1,46 @@
+"""Mesh construction for the production topology.
+
+Single pod: (16, 16) = 256 chips, axes ("data", "model") — TP within
+the "model" axis (ICI-adjacent), DP/FSDP over "data".
+
+Multi-pod:  (2, 16, 16) = 512 chips, axes ("pod", "data", "model") —
+the "pod" axis carries ONLY data parallelism (gradient all-reduce over
+DCN); parameters, FSDP shards and TP stay within a pod, which is the
+standard DCN-aware layout (params never cross the slow inter-pod links
+outside the once-per-step gradient reduction).
+
+Everything here is a FUNCTION — importing this module never touches JAX
+device state (the dry-run must set XLA_FLAGS before any device query).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_axis: int = 1):
+    """A mesh over whatever devices exist (CPU tests: 1 device)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))
+
+
+def dp_axes(mesh) -> tuple:
+    """The axes carrying the batch dimension."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def dp_size(mesh) -> int:
+    n = 1
+    for a in dp_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def tp_size(mesh) -> int:
+    return mesh.shape["model"] if "model" in mesh.axis_names else 1

@@ -1,0 +1,251 @@
+"""Partitioning rules: param / batch / cache shardings for every arch.
+
+Parallelism layout (DESIGN.md §7):
+
+* **TP** over ``model``: attention heads (wq/wk/wv out-dim), wo in-dim,
+  MLP hidden, MoE experts (EP), mamba d_inner, rwkv projections, vocab.
+* **FSDP** over ``data``: the *other* matrix dim of every 2-D param —
+  ZeRO-3-style; under GSPMD the per-layer all-gathers materialize inside
+  the layer scan.  Optimizer moments inherit leaf-for-leaf.
+* **DP** over ``(pod, data)``: the batch dim of activations.  The pod
+  axis appears ONLY here — params/FSDP/TP never cross DCN.
+
+Rules are (regex over the leaf path, spec for the TRAILING dims);
+leading dims (the layer-stack axis) are padded with None.  First match
+wins — order matters (e.g. ``ffn.*wv`` before the attention ``wv``).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import dp_axes
+
+# ---------------------------------------------------------------------------
+# Activation batch-axis anchoring
+# ---------------------------------------------------------------------------
+# The embedding gather's output sharding is ambiguous to GSPMD (vocab-
+# sharded table x batch-sharded ids); left alone it picks feature-
+# sharded/batch-REPLICATED activations and every layer downstream runs
+# the full batch on every data shard (16x executed FLOPs — caught by the
+# loop-aware HLO cost model, EXPERIMENTS §Perf).  The launcher registers
+# the DP axes here; the model anchors its post-embed activations.
+
+_BATCH_AXES = None
+
+
+def set_batch_axes(axes) -> None:
+    """Called by the launcher (dry-run/train/serve) before tracing."""
+    global _BATCH_AXES
+    _BATCH_AXES = tuple(axes) if axes else None
+
+
+def shard_batch_dim(x, dim: int = 0):
+    """with_sharding_constraint pinning the batch dim to the DP axes
+    (no-op when no launcher registered axes — e.g. CPU unit tests)."""
+    if _BATCH_AXES is None:
+        return x
+    spec = [None] * x.ndim
+    spec[dim] = _BATCH_AXES
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def gather_head_for_unembed(head):
+    """Constrain the unembedding table to P('model', None) right before
+    the logits einsum: the D (FSDP) dim is all-gathered ONCE per use
+    (~weights/TP bytes) instead of GSPMD's default strategy of
+    contracting the sharded D into partial logits and all-reducing the
+    [B,T,V/TP] fp32 logits over the data axis — which cost phi4-mini
+    (200k vocab, tied embeddings) 500+ GB/dev/step (EXPERIMENTS §Perf
+    cell B)."""
+    if _BATCH_AXES is None:
+        return head
+    if head.shape[0] % 16 == 0:
+        return jax.lax.with_sharding_constraint(head, P("model", None))
+    return head
+
+
+def shard_seq_dim(x, batch_dim: int = 0, seq_dim: int = 1):
+    """Sequence-parallel residual constraint: batch over DP axes AND the
+    sequence dim over 'model' (Megatron-SP style).  GSPMD then lowers
+    the TP projection all-reduces as reduce-scatter + all-gather pairs
+    and runs norms/elementwise on T/tp tokens per chip."""
+    if _BATCH_AXES is None:
+        return x
+    if x.shape[seq_dim] % 16:
+        return shard_batch_dim(x, batch_dim)
+    spec = [None] * x.ndim
+    spec[batch_dim] = _BATCH_AXES
+    spec[seq_dim] = "model"
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+# (path regex, trailing-dims spec). "fsdp" -> data, "tp" -> model.
+_RULES: list[tuple[str, tuple]] = [
+    # --- embeddings / head: [V, D] ---
+    (r"embed|head", ("tp", "fsdp")),
+    # --- rwkv channel-mix (must precede attention wk/wv rules) ---
+    (r"ffn.*\bwk\b", ("fsdp", "tp")),
+    (r"ffn.*\bwv\b", ("tp", "fsdp")),
+    (r"ffn.*\bwr\b", ("fsdp", "tp")),
+    # --- MoE ---
+    (r"router", ("fsdp", None)),
+    (r"experts.*(gate|up)", ("tp", "fsdp", None)),
+    (r"experts.*down", ("tp", None, "fsdp")),
+    (r"shared.*(gate|up)", ("fsdp", "tp")),
+    (r"shared.*down", ("tp", "fsdp")),
+    # --- attention (GQA + MLA) ---
+    (r"\bwq\b|\bwk\b|\bwv\b", ("fsdp", "tp")),
+    (r"\bwo\b", ("tp", "fsdp")),
+    (r"wdkv", ("fsdp", "tp")),
+    (r"wkr", ("fsdp", None)),
+    (r"wuk|wuv", ("fsdp", "tp")),
+    # --- dense MLP ---
+    (r"gate|up", ("fsdp", "tp")),
+    (r"down", ("tp", "fsdp")),
+    # --- mamba ---
+    (r"in_proj", ("fsdp", "tp")),
+    (r"out_proj", ("tp", "fsdp")),
+    (r"conv_w", (None, "tp")),
+    (r"conv_b", ("tp",)),
+    (r"x_proj", ("tp", None)),
+    (r"dt_proj", (None, "tp")),
+    (r"dt_bias", ("tp",)),
+    (r"A_log", ("tp", None)),
+    (r"\bD\b", ("tp",)),
+    # --- rwkv time-mix ---
+    (r"\bwg\b|\bwr\b", ("fsdp", "tp")),
+    (r"decay_A", ("fsdp", None)),
+    (r"decay_B", (None, "tp")),
+    # everything else (norm scales, mixes, bonus_u, ...) replicated
+]
+
+
+def _spec_for(path: str, shape: tuple, mesh, *, fsdp: bool = True) -> P:
+    ndim = len(shape)
+    for pat, core in _RULES:
+        if re.search(pat, path):
+            core = tuple(
+                ("model" if a == "tp" else
+                 ("data" if (a == "fsdp" and fsdp) else None))
+                for a in core
+            )
+            if len(core) > ndim:   # e.g. scalar-ish leaves
+                core = core[-ndim:]
+            spec = (None,) * (ndim - len(core)) + core
+            # divisibility guard: drop axes that don't divide the dim
+            # (e.g. 36-head minicpm attention on a 16-way model axis).
+            spec = tuple(
+                a if a is not None and dim % mesh.shape[a] == 0 and
+                dim >= mesh.shape[a] else None
+                for dim, a in zip(shape, spec)
+            )
+            return P(*spec)
+    return P(*((None,) * ndim))
+
+
+def param_shardings(mesh, params, *, fsdp: bool = True):
+    """NamedSharding pytree matching ``params`` leaf-for-leaf."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        spec = _spec_for(jax.tree_util.keystr(path), tuple(leaf.shape),
+                         mesh, fsdp=fsdp)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def state_shardings(mesh, state, *, fsdp: bool = True):
+    """TrainState sharding: m/v/ef mirror params; step replicated."""
+    def shard_like_params(subtree):
+        return param_shardings(mesh, subtree, fsdp=fsdp)
+
+    out = {"params": shard_like_params(state["params"]),
+           "opt": {
+               "m": shard_like_params(state["opt"]["m"]),
+               "v": shard_like_params(state["opt"]["v"]),
+               "step": NamedSharding(mesh, P()),
+           }}
+    if "ef" in state:
+        out["ef"] = shard_like_params(state["ef"])
+    return out
+
+
+def batch_shardings(mesh, batch):
+    """Batch-dim DP sharding for input pytrees (tokens/labels/embeds).
+
+    m_rope 'positions' have shape (3, B, T): batch is dim 1.
+    """
+    dp = dp_axes(mesh)
+
+    def spec(path, leaf):
+        name = jax.tree_util.keystr(path)
+        if "positions" in name and leaf.ndim == 3:
+            return NamedSharding(mesh, P(None, dp, *(None,) * (leaf.ndim - 2)))
+        return NamedSharding(mesh, P(dp, *(None,) * (leaf.ndim - 1)))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(batch)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec(p, l) for p, l in flat])
+
+
+def cache_shardings(mesh, cache, *, batch: int):
+    """Decode-cache sharding.
+
+    Cache leaves are [L, B, S, ...] (attention) or [L, B, ...] (states).
+    If the batch covers the DP axes, shard batch over DP and the seq dim
+    over model; for tiny batches (long_500k: B=1) shard the SEQ dim over
+    all axes instead — attention over the sharded length then lowers to
+    partial-softmax + all-reduce instead of a cache all-gather.
+    """
+    dp = dp_axes(mesh)
+    dp_n = 1
+    for a in dp:
+        dp_n *= mesh.shape[a]
+    batch_covers = batch % dp_n == 0 and batch >= dp_n
+
+    def axes_size(ax) -> int:
+        if ax is None:
+            return 1
+        if isinstance(ax, tuple):
+            n = 1
+            for a in ax:
+                n *= mesh.shape[a]
+            return n
+        return mesh.shape[ax]
+
+    def guard(leaf, proposal):
+        """Drop axes that don't divide the dim (divisibility guard)."""
+        out = []
+        for dim, ax in zip(leaf.shape, proposal):
+            out.append(ax if dim % axes_size(ax) == 0 and
+                       dim >= axes_size(ax) else None)
+        return NamedSharding(mesh, P(*out))
+
+    def spec(path, leaf):
+        name = jax.tree_util.keystr(path)
+        nd = leaf.ndim
+        if "lengths" in name:
+            return NamedSharding(mesh, P())
+        bdim = dp if batch_covers else None
+        if re.search(r"\['k'\]$|\['v'\]$|ckv|kr", name):
+            # attention caches [L, B, S, ...]
+            sdim = "model" if batch_covers else dp + ("model",)
+            return guard(leaf, (None, bdim, sdim) + (None,) * (nd - 3))
+        if "conv" in name:     # [L, B, K-1, I]
+            return guard(leaf, (None, bdim, None, "model"))
+        if re.search(r"x_att|x_ffn", name):   # [L, B, 1, D]
+            return guard(leaf, (None, bdim, None, "model"))
+        if name.endswith("['h']"):            # mamba [L, B, I, N]
+            return guard(leaf, (None, bdim, "model", None))
+        if name.endswith("['S']"):            # rwkv [L, B, H, K, V]
+            return guard(leaf, (None, bdim, "model", None, None))
+        return NamedSharding(mesh, P(*((None,) * nd)))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec(p, l) for p, l in flat])

@@ -1,0 +1,139 @@
+"""Per-(arch × shape) lowering specs for the dry-run and launchers.
+
+``build_cell(cfg, shape_name, mesh)`` returns a :class:`CellSpec` with
+the step function, ShapeDtypeStruct argument avatars (no allocation),
+and in/out shardings — everything ``jax.jit(...).lower()`` needs.
+
+Shape kinds (configs/base.SHAPES):
+* train_*   -> train_step   (microbatched, remat, AdamW)
+* prefill_* -> prefill_step (full sequence -> last logits + cache)
+* decode_*  -> serve_step   (ONE new token against a seq_len cache)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SHAPES, ArchConfig
+from repro.launch.mesh import dp_axes, dp_size
+from repro.launch.sharding import (
+    batch_shardings,
+    cache_shardings,
+    param_shardings,
+    set_batch_axes,
+    state_shardings,
+)
+from repro.models import LM
+from repro.training.optim import AdamWConfig
+from repro.training.train_step import init_train_state, make_train_step
+
+
+@dataclasses.dataclass
+class CellSpec:
+    arch: str
+    shape: str
+    kind: str
+    fn: Callable
+    arg_specs: tuple
+    in_shardings: Any
+    out_shardings: Any
+    donate_argnums: tuple
+    static_info: dict
+
+
+def _batch_specs(cfg: ArchConfig, B: int, T: int):
+    specs = {}
+    if cfg.input_mode == "embeds":
+        specs["embeds"] = jax.ShapeDtypeStruct((B, T, cfg.d_model),
+                                               jnp.bfloat16)
+    else:
+        specs["tokens"] = jax.ShapeDtypeStruct((B, T), jnp.int32)
+    specs["labels"] = jax.ShapeDtypeStruct((B, T), jnp.int32)
+    if cfg.m_rope:
+        specs["positions"] = jax.ShapeDtypeStruct((3, B, T), jnp.int32)
+    return specs
+
+
+def pick_microbatches(global_batch: int, dp: int, *,
+                      target_per_device: int = 1, cap: int = 16) -> int:
+    per_dev = max(1, global_batch // dp)
+    return max(1, min(cap, per_dev // target_per_device))
+
+
+def build_cell(cfg: ArchConfig, shape_name: str, mesh, *,
+               num_microbatches: int | None = None,
+               attn_impl: str = "blockwise",
+               fsdp: bool = True,
+               model_kwargs: dict | None = None) -> CellSpec:
+    shape = SHAPES[shape_name]
+    kind = shape["kind"]
+    B, T = shape["global_batch"], shape["seq_len"]
+    model = LM(cfg, attn_impl=attn_impl, **(model_kwargs or {}))
+    dp = dp_size(mesh)
+    set_batch_axes(dp_axes(mesh))  # anchor activation batch sharding
+
+    params_spec = jax.eval_shape(
+        lambda: model.init(jax.random.PRNGKey(0)))
+    ps = param_shardings(mesh, params_spec, fsdp=fsdp)
+
+    if kind == "train":
+        nm = num_microbatches or pick_microbatches(B, dp)
+        opt = AdamWConfig()
+        step = make_train_step(model, opt, num_microbatches=nm, remat=True)
+        state_spec = jax.eval_shape(
+            lambda: init_train_state(model, jax.random.PRNGKey(0)))
+        ss = state_shardings(mesh, state_spec, fsdp=fsdp)
+        bspec = _batch_specs(cfg, B, T)
+        bs = batch_shardings(mesh, bspec)
+        return CellSpec(
+            arch=cfg.name, shape=shape_name, kind=kind, fn=step,
+            arg_specs=(state_spec, bspec), in_shardings=(ss, bs),
+            out_shardings=(ss, None), donate_argnums=(0,),
+            static_info={"num_microbatches": nm, "tokens": B * T},
+        )
+
+    if kind == "prefill":
+        def prefill_step(params, batch):
+            return model.prefill(
+                params, tokens=batch.get("tokens"),
+                embeds=batch.get("embeds"),
+                positions=batch.get("positions"), max_len=T)
+
+        bspec = _batch_specs(cfg, B, T)
+        bspec.pop("labels")
+        bs = batch_shardings(mesh, bspec)
+        with mesh:  # shard_batch_dim constraints need the mesh context
+            out_spec = jax.eval_shape(prefill_step, params_spec, bspec)
+        logits_sh = NamedSharding(mesh, P(dp_axes(mesh), "model"))
+        cs = cache_shardings(mesh, out_spec[1], batch=B)
+        return CellSpec(
+            arch=cfg.name, shape=shape_name, kind=kind, fn=prefill_step,
+            arg_specs=(params_spec, bspec), in_shardings=(ps, bs),
+            out_shardings=(logits_sh, cs), donate_argnums=(),
+            static_info={"tokens": B * T},
+        )
+
+    # decode: one new token against a seq_len cache
+    def serve_step(params, cache, tokens):
+        return model.decode_step(params, cache, tokens)
+
+    cache_spec = jax.eval_shape(lambda: model.init_cache(B, T))
+    # pretend the cache is nearly full (ShapeDtypeStruct: lengths only
+    # matter dynamically; the lowering covers any fill level)
+    cs = cache_shardings(mesh, cache_spec, batch=B)
+    tok_spec = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    tok_sh = NamedSharding(mesh, P(dp_axes(mesh) if B >= dp else None, None))
+    logits_sh = NamedSharding(
+        mesh, P(dp_axes(mesh) if B >= dp else None, None, "model"))
+    return CellSpec(
+        arch=cfg.name, shape=shape_name, kind=kind, fn=serve_step,
+        arg_specs=(params_spec, cache_spec, tok_spec),
+        in_shardings=(ps, cs, tok_sh),
+        out_shardings=(logits_sh, cs), donate_argnums=(1,),
+        static_info={"tokens": B},
+    )

@@ -1,0 +1,437 @@
+"""Attention: GQA/MHA with RoPE or M-RoPE, and DeepSeek MLA.
+
+Three execution paths, selected by ``impl``:
+
+* ``"blockwise"`` (default) — flash-style O(T·block) memory attention in
+  pure JAX (lax.scan over KV blocks with running max/denominator).  This
+  is the path the distributed dry-run lowers: it never materializes the
+  (T, S) score matrix, so 32k-prefill fits HBM, and its HLO is plain
+  dot-generals that cost_analysis reads faithfully.
+* ``"reference"`` — naive full-matrix softmax attention; the oracle the
+  kernels and the blockwise path are tested against.
+* ``"pallas"`` — the TPU Pallas flash kernel (kernels/flash_attention.py),
+  validated in interpret mode on CPU; selected on real TPU runs.
+
+Decode uses a dense KV cache (models/kvcache.py) and a single-token
+attention with full-length masking; MLA decode uses the weight-absorbed
+form operating directly on the compressed latent cache.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (
+    DEFAULT_DTYPE,
+    apply_m_rope,
+    apply_rope,
+    dense_init,
+    proj_einsum,
+    rmsnorm,
+    rmsnorm_init,
+)
+
+_NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Reference attention (oracle)
+# ---------------------------------------------------------------------------
+
+def reference_attention(q, k, v, *, causal: bool, scale: float | None = None,
+                        q_offset: int = 0):
+    """q: [B,T,H,D], k/v: [B,S,KV,D] with H = KV*G.  fp32 softmax."""
+    B, T, H, D = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qg = q.reshape(B, T, KV, G, D)
+    logits = jnp.einsum("btkgd,bskd->bkgts", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        qpos = jnp.arange(T) + q_offset
+        mask = qpos[:, None] >= jnp.arange(S)[None, :]
+        logits = jnp.where(mask[None, None, None], logits, _NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgts,bskd->btkgd", w, v.astype(jnp.float32))
+    return out.reshape(B, T, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise (flash-style) attention in pure JAX
+# ---------------------------------------------------------------------------
+
+def blockwise_attention(q, k, v, *, causal: bool, q_block: int = 512,
+                        kv_block: int = 1024, scale: float | None = None,
+                        skip_masked_blocks: bool = True):
+    """Numerically exact flash-style attention, O(T·kv_block) memory.
+
+    Outer lax.scan over query blocks; inner lax.scan over KV blocks with
+    running (m, l, acc) in fp32.  With ``skip_masked_blocks`` (causal
+    only) fully-masked KV blocks are skipped with ``lax.cond``, halving
+    the executed FLOPs for long causal sequences.
+
+    SHARDING CONTRACT: requires k/v already expanded to H heads
+    (``expand_kv``) — the head dim stays a single axis end-to-end, so a
+    model-axis sharding on H propagates through every reshape here.  (A
+    [B,T,KV,G,D] split breaks GSPMD propagation and silently replicates
+    the whole attention on every model shard — a 16x executed-FLOP
+    regression found via the loop-aware HLO cost model; see
+    EXPERIMENTS.md §Perf.)
+    """
+    B, T, H, D = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    if KV != H:
+        raise ValueError("blockwise_attention requires expanded KV heads "
+                         f"(got H={H}, KV={KV}); use expand_kv()")
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    q_block = min(q_block, T)
+    kv_block = min(kv_block, S)
+    # Pad T and S to block multiples (padded keys are masked out).
+    Tp = -(-T // q_block) * q_block
+    Sp = -(-S // kv_block) * kv_block
+    if Tp != T:
+        q = jnp.pad(q, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    if Sp != S:
+        k = jnp.pad(k, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+    nq, nk = Tp // q_block, Sp // kv_block
+
+    qb = q.reshape(B, nq, q_block, H, D)
+    kb = k.reshape(B, nk, kv_block, H, D)
+    vb = v.reshape(B, nk, kv_block, H, D)
+
+    kv_pos = jnp.arange(Sp).reshape(nk, kv_block)
+
+    def q_step(_, qi):
+        qblk, q_idx = qi          # [B, q_block, H, D], scalar
+        q_pos = q_idx * q_block + jnp.arange(q_block)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kblk, vblk, k_idx = ki
+
+            def compute(args):
+                m, l, acc = args
+                s = jnp.einsum(
+                    "bqhd,bshd->bhqs",
+                    qblk.astype(jnp.float32), kblk.astype(jnp.float32)
+                ) * scale
+                valid = kv_pos[k_idx] < S
+                if causal:
+                    cm = q_pos[:, None] >= kv_pos[k_idx][None, :]
+                    valid = valid[None, :] & cm
+                else:
+                    valid = jnp.broadcast_to(valid[None, :],
+                                             (q_block, kv_block))
+                s = jnp.where(valid[None, None], s, _NEG_INF)
+                m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+                p = jnp.exp(s - m_new[..., None])
+                corr = jnp.exp(m - m_new)
+                l_new = l * corr + jnp.sum(p, axis=-1)
+                pv = jnp.einsum("bhqs,bshd->bhqd", p,
+                                vblk.astype(jnp.float32))
+                acc_new = acc * corr[..., None] + pv
+                return m_new, l_new, acc_new
+
+            if causal and skip_masked_blocks:
+                # Entire KV block is in the future -> skip it.
+                needed = (k_idx * kv_block) <= (q_idx * q_block + q_block - 1)
+                m, l, acc = jax.lax.cond(
+                    needed, compute, lambda args: args, (m, l, acc)
+                )
+            else:
+                m, l, acc = compute((m, l, acc))
+            return (m, l, acc), None
+
+        m0 = jnp.full((B, H, q_block), _NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, q_block), jnp.float32)
+        a0 = jnp.zeros((B, H, q_block, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0), jnp.arange(nk)),
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]     # [B,H,qb,D]
+        out = jnp.moveaxis(out, 2, 1)                     # [B,qb,H,D]
+        return None, out
+
+    _, outs = jax.lax.scan(
+        q_step, None, (jnp.moveaxis(qb, 1, 0), jnp.arange(nq))
+    )
+    # outs: [nq, B, q_block, H, D] -> [B, T, H, D]
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Tp, H, D)[:, :T]
+    return out.astype(q.dtype)
+
+
+def expand_kv(k, G: int):
+    """[B,S,KV,D] -> [B,S,KV*G,D]: replicate each KV head for its G query
+    heads.  The TP-friendly layout: head dim stays one axis, sharded over
+    the model mesh axis; the replication is the standard per-TP-rank KV
+    copy and never hits HBM un-sharded."""
+    if G == 1:
+        return k
+    B, S, KV, D = k.shape
+    return jnp.broadcast_to(
+        k[:, :, :, None, :], (B, S, KV, G, D)
+    ).reshape(B, S, KV * G, D)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *,
+                     scale: float | None = None):
+    """Single-token attention against a dense KV cache.
+
+    q: [B,H,D]; k_cache/v_cache: [B,S,KV,D]; cache_len: i32[B] valid
+    lengths (the new token's position is cache_len-1 inclusive).
+
+    The cache-touching dots run in the CACHE dtype (bf16): upcasting the
+    cache forces XLA to materialize an f32 copy of the full [L,B,S,..]
+    stack per layer (EXPERIMENTS §Perf cell D).  Only the small [B,H,S]
+    score tensor is f32 (exact softmax); production decode uses the
+    Pallas kernel, which accumulates f32 in VMEM.
+    """
+    B, H, D = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qg = q.reshape(B, KV, G, D).astype(k_cache.dtype)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache).astype(jnp.float32)
+    s = s * scale
+    valid = jnp.arange(S)[None, :] < cache_len[:, None]      # [B,S]
+    s = jnp.where(valid[:, None, None], s, _NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", w.astype(v_cache.dtype), v_cache)
+    return out.reshape(B, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block
+# ---------------------------------------------------------------------------
+
+def gqa_init(key, *, d_model: int, num_heads: int, num_kv_heads: int,
+             head_dim: int, dtype=DEFAULT_DTYPE):
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d_model, num_heads * head_dim, dtype=dtype),
+        "wk": dense_init(ks[1], d_model, num_kv_heads * head_dim, dtype=dtype),
+        "wv": dense_init(ks[2], d_model, num_kv_heads * head_dim, dtype=dtype),
+        "wo": dense_init(ks[3], num_heads * head_dim, d_model, dtype=dtype),
+    }
+
+
+def _project_qkv(params, x, *, num_heads, num_kv_heads, head_dim):
+    B, T, _ = x.shape
+    q = proj_einsum("btd,dh->bth", x, params["wq"], out_dtype=x.dtype)
+    k = proj_einsum("btd,dh->bth", x, params["wk"], out_dtype=x.dtype)
+    v = proj_einsum("btd,dh->bth", x, params["wv"], out_dtype=x.dtype)
+    q = q.reshape(B, T, num_heads, head_dim)
+    k = k.reshape(B, T, num_kv_heads, head_dim)
+    v = v.reshape(B, T, num_kv_heads, head_dim)
+    return q, k, v
+
+
+def gqa_apply(params, x, *, num_heads: int, num_kv_heads: int,
+              head_dim: int, positions, causal: bool = True,
+              rope_theta: float = 10000.0, m_rope: bool = False,
+              m_rope_sections=(16, 24, 24), impl: str = "blockwise",
+              q_block: int = 512, kv_block: int = 1024):
+    """Full-sequence (train/prefill) GQA.  Returns (y, (k, v)) so callers
+    can build the KV cache during prefill."""
+    B, T, _ = x.shape
+    q, k, v = _project_qkv(params, x, num_heads=num_heads,
+                           num_kv_heads=num_kv_heads, head_dim=head_dim)
+    if m_rope:
+        q = apply_m_rope(q, positions, theta=rope_theta,
+                         sections=m_rope_sections)
+        k = apply_m_rope(k, positions, theta=rope_theta,
+                         sections=m_rope_sections)
+    elif positions is not None:
+        q = apply_rope(q, positions, theta=rope_theta)
+        k = apply_rope(k, positions, theta=rope_theta)
+    G = num_heads // num_kv_heads
+    if impl == "reference":
+        o = reference_attention(q, k, v, causal=causal)
+    elif impl == "blockwise":
+        o = blockwise_attention(q, expand_kv(k, G), expand_kv(v, G),
+                                causal=causal, q_block=q_block,
+                                kv_block=kv_block)
+    elif impl == "pallas":
+        from repro.kernels import ops as kops
+        o = kops.flash_attention(q, k, v, causal=causal)
+    else:
+        raise ValueError(impl)
+    y = proj_einsum("bth,hd->btd", o.reshape(B, T, num_heads * head_dim),
+                    params["wo"], out_dtype=x.dtype)
+    return y, (k, v)
+
+
+def gqa_decode_apply(params, x, cache_k, cache_v, cache_len, *,
+                     num_heads: int, num_kv_heads: int, head_dim: int,
+                     positions, rope_theta: float = 10000.0,
+                     m_rope: bool = False, m_rope_sections=(16, 24, 24),
+                     impl: str = "blockwise"):
+    """One-token decode.  x: [B,1,d]; cache_*: [B,S,KV,D]; cache_len:
+    i32[B] length INCLUDING the new token.  Returns (y, k_new, v_new)."""
+    B = x.shape[0]
+    q, k, v = _project_qkv(params, x, num_heads=num_heads,
+                           num_kv_heads=num_kv_heads, head_dim=head_dim)
+    if m_rope:
+        q = apply_m_rope(q, positions, theta=rope_theta,
+                         sections=m_rope_sections)
+        k = apply_m_rope(k, positions, theta=rope_theta,
+                         sections=m_rope_sections)
+    elif positions is not None:
+        q = apply_rope(q, positions, theta=rope_theta)
+        k = apply_rope(k, positions, theta=rope_theta)
+    # Write the new K/V at position cache_len-1, then attend.
+    idx = cache_len - 1                                   # [B]
+    cache_k = _scatter_token(cache_k, k[:, 0], idx)
+    cache_v = _scatter_token(cache_v, v[:, 0], idx)
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        o = kops.decode_attention(q[:, 0], cache_k, cache_v, cache_len)
+    else:
+        o = decode_attention(q[:, 0], cache_k, cache_v, cache_len)
+    y = jnp.einsum("bh,hd->bd", o.reshape(B, num_heads * head_dim),
+                   params["wo"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    return y[:, None, :], cache_k, cache_v
+
+
+def _scatter_token(cache, new, idx):
+    """cache: [B,S,KV,D]; new: [B,KV,D]; idx: i32[B] -> cache updated."""
+    B = cache.shape[0]
+    return cache.at[jnp.arange(B), idx].set(new.astype(cache.dtype))
+
+
+# ---------------------------------------------------------------------------
+# DeepSeek MLA (multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def mla_init(key, *, d_model: int, num_heads: int, kv_lora_rank: int,
+             qk_nope_head_dim: int, qk_rope_head_dim: int,
+             v_head_dim: int, dtype=DEFAULT_DTYPE):
+    ks = jax.random.split(key, 6)
+    qd = qk_nope_head_dim + qk_rope_head_dim
+    return {
+        "wq": dense_init(ks[0], d_model, num_heads * qd, dtype=dtype),
+        "wdkv": dense_init(ks[1], d_model, kv_lora_rank, dtype=dtype),
+        "wkr": dense_init(ks[2], d_model, qk_rope_head_dim, dtype=dtype),
+        "kv_norm": rmsnorm_init(kv_lora_rank),
+        "wuk": dense_init(ks[3], kv_lora_rank,
+                          num_heads * qk_nope_head_dim, dtype=dtype),
+        "wuv": dense_init(ks[4], kv_lora_rank,
+                          num_heads * v_head_dim, dtype=dtype),
+        "wo": dense_init(ks[5], num_heads * v_head_dim, d_model, dtype=dtype),
+    }
+
+
+def mla_apply(params, x, *, num_heads: int, kv_lora_rank: int,
+              qk_nope_head_dim: int, qk_rope_head_dim: int,
+              v_head_dim: int, positions, causal: bool = True,
+              rope_theta: float = 10000.0, impl: str = "blockwise",
+              q_block: int = 512, kv_block: int = 1024):
+    """Full-sequence MLA (naive/un-absorbed form).  Returns
+    (y, (c_kv, k_rope)) — the COMPRESSED cache entries."""
+    B, T, _ = x.shape
+    H, dn, dr, dv = num_heads, qk_nope_head_dim, qk_rope_head_dim, v_head_dim
+    q = jnp.einsum("btd,dh->bth", x, params["wq"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    q = q.reshape(B, T, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    c_kv = jnp.einsum("btd,dr->btr", x, params["wdkv"],
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+    c_kv = rmsnorm(params["kv_norm"], c_kv)
+    k_rope = jnp.einsum("btd,dr->btr", x, params["wkr"],
+                        preferred_element_type=jnp.float32).astype(x.dtype)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                        theta=rope_theta)                # [B,T,1,dr]
+    q_rope = apply_rope(q_rope, positions, theta=rope_theta)
+    k_nope = jnp.einsum("btr,rh->bth", c_kv, params["wuk"],
+                        preferred_element_type=jnp.float32).astype(x.dtype)
+    k_nope = k_nope.reshape(B, T, H, dn)
+    v = jnp.einsum("btr,rh->bth", c_kv, params["wuv"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    v = v.reshape(B, T, H, dv)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (B, T, H, dr))], axis=-1
+    )
+    qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+    scale = 1.0 / math.sqrt(dn + dr)
+    # v head dim (dv) may differ from qk dim; pad v to qk dim for the
+    # shared blockwise path, then slice.
+    if dv < dn + dr:
+        v_p = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dn + dr - dv)))
+    else:
+        v_p = v
+    if impl == "reference":
+        o = reference_attention(qf, k, v_p, causal=causal, scale=scale)
+    else:
+        o = blockwise_attention(qf, k, v_p, causal=causal, scale=scale,
+                                q_block=q_block, kv_block=kv_block)
+    o = o[..., :dv]
+    y = jnp.einsum("bth,hd->btd", o.reshape(B, T, H * dv), params["wo"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    return y, (c_kv, k_rope[:, :, 0, :])
+
+
+def mla_decode_apply(params, x, cache_ckv, cache_kr, cache_len, *,
+                     num_heads: int, kv_lora_rank: int,
+                     qk_nope_head_dim: int, qk_rope_head_dim: int,
+                     v_head_dim: int, positions,
+                     rope_theta: float = 10000.0):
+    """Weight-absorbed MLA decode on the compressed cache.
+
+    score_nope = (q_nope W_uk^T) · c_kv   — absorb W_uk into the query
+    out        = (attn · c_kv) W_uv       — absorb W_uv into the output
+    The per-token cache row is only (kv_lora_rank + rope_dim) wide — the
+    whole point of MLA — and decode never expands K/V to H heads.
+    """
+    B = x.shape[0]
+    H, dn, dr, dv = num_heads, qk_nope_head_dim, qk_rope_head_dim, v_head_dim
+    R = kv_lora_rank
+    q = jnp.einsum("btd,dh->bth", x, params["wq"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    q = q.reshape(B, 1, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, theta=rope_theta)[:, 0]  # [B,H,dr]
+    # absorb W_uk: q_lat[b,h,r] = sum_dn q_nope * wuk[r, h*dn+dn']
+    wuk = params["wuk"].reshape(R, H, dn)
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(jnp.float32),
+                       wuk.astype(jnp.float32))            # [B,H,R]
+    # new cache rows
+    c_new = jnp.einsum("btd,dr->btr", x, params["wdkv"],
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+    c_new = rmsnorm(params["kv_norm"], c_new)[:, 0]         # [B,R]
+    kr_new = jnp.einsum("btd,dr->btr", x, params["wkr"],
+                        preferred_element_type=jnp.float32).astype(x.dtype)
+    kr_new = apply_rope(kr_new[:, :, None, :], positions,
+                        theta=rope_theta)[:, 0, 0]          # [B,dr]
+    idx = cache_len - 1
+    cache_ckv = cache_ckv.at[jnp.arange(B), idx].set(
+        c_new.astype(cache_ckv.dtype))
+    cache_kr = cache_kr.at[jnp.arange(B), idx].set(
+        kr_new.astype(cache_kr.dtype))
+    scale = 1.0 / math.sqrt(dn + dr)
+    # latent-cache dots in cache dtype (see decode_attention docstring)
+    s = (
+        jnp.einsum("bhr,bsr->bhs", q_lat.astype(cache_ckv.dtype),
+                   cache_ckv).astype(jnp.float32)
+        + jnp.einsum("bhd,bsd->bhs", q_rope.astype(cache_kr.dtype),
+                     cache_kr).astype(jnp.float32)
+    ) * scale
+    S = cache_ckv.shape[1]
+    valid = jnp.arange(S)[None, :] < cache_len[:, None]
+    s = jnp.where(valid[:, None], s, _NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhs,bsr->bhr", w.astype(cache_ckv.dtype),
+                       cache_ckv).astype(jnp.float32)       # [B,H,R]
+    wuv = params["wuv"].reshape(R, H, dv)
+    o = jnp.einsum("bhr,rhd->bhd", o_lat, wuv.astype(jnp.float32))
+    y = jnp.einsum("bh,hd->bd", o.reshape(B, H * dv).astype(x.dtype),
+                   params["wo"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    return y[:, None, :], cache_ckv, cache_kr

@@ -1,0 +1,54 @@
+"""KV / recurrent-state caches for decode.
+
+Caches are pytrees with leaves stacked over the layer (or block) axis so
+the decode step can ``lax.scan`` over layers.  Three layouts:
+
+* GQA:   k/v  [L, B, S, KV, D]
+* MLA:   ckv  [L, B, S, R],  kr [L, B, S, dr]   (compressed latents)
+* SSM:   mamba {h: [L,B,I,N], conv: [L,B,K-1,I]}, rwkv {x_prev_att,
+         x_prev_ffn: [L,B,1,D], S: [L,B,H,K,V]}
+
+``lengths: i32[B]`` counts valid tokens per sequence (shared across
+layers).  All caches are bf16 except recurrent/conv states (fp32) —
+decode numerics are dominated by the state recurrences.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gqa_cache_init(num_layers, batch, max_len, num_kv_heads, head_dim,
+                   dtype=jnp.bfloat16):
+    shape = (num_layers, batch, max_len, num_kv_heads, head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+    }
+
+
+def mla_cache_init(num_layers, batch, max_len, kv_lora_rank, rope_dim,
+                   dtype=jnp.bfloat16):
+    return {
+        "ckv": jnp.zeros((num_layers, batch, max_len, kv_lora_rank), dtype),
+        "kr": jnp.zeros((num_layers, batch, max_len, rope_dim), dtype),
+    }
+
+
+def mamba_cache_init(num_layers, batch, d_inner, d_state, d_conv,
+                     conv_dtype=jnp.bfloat16):
+    return {
+        "h": jnp.zeros((num_layers, batch, d_inner, d_state), jnp.float32),
+        "conv": jnp.zeros((num_layers, batch, d_conv - 1, d_inner),
+                          conv_dtype),
+    }
+
+
+def rwkv_cache_init(num_layers, batch, d_model, num_heads, head_dim,
+                    dtype=jnp.bfloat16):
+    return {
+        "x_att": jnp.zeros((num_layers, batch, 1, d_model), dtype),
+        "x_ffn": jnp.zeros((num_layers, batch, 1, d_model), dtype),
+        "S": jnp.zeros((num_layers, batch, num_heads, head_dim, head_dim),
+                       jnp.float32),
+    }

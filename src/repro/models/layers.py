@@ -1,0 +1,213 @@
+"""Shared neural-net layers (pure functional JAX, no framework deps).
+
+All params are plain dict pytrees; every layer is an ``init(key, ...)``
+returning params plus an ``apply(params, x, ...)``.  Weights are stored
+bf16 by default with fp32 norm scales and router weights (standard mixed
+precision discipline); matmuls accumulate in fp32 via
+``preferred_element_type``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_DTYPE = jnp.bfloat16
+
+# §Perf experiment knob: when False, projection einsums emit bf16
+# outputs directly (partial sums + TP all-reduces run in bf16 — half the
+# collective bytes; TPU MXU accumulates fp32 internally either way).
+PREFER_F32_PROJ = True
+
+
+def set_matmul_precision(prefer_f32: bool) -> None:
+    global PREFER_F32_PROJ
+    PREFER_F32_PROJ = prefer_f32
+
+
+def proj_einsum(spec, x, w, out_dtype=None):
+    """Projection einsum honoring the PREFER_F32_PROJ knob."""
+    if PREFER_F32_PROJ:
+        y = jnp.einsum(spec, x, w, preferred_element_type=jnp.float32)
+    else:
+        y = jnp.einsum(spec, x, w)
+    return y.astype(out_dtype) if out_dtype is not None else y
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, in_dim: int, out_dim: int, *, dtype=DEFAULT_DTYPE,
+               scale: float | None = None):
+    """Truncated-normal fan-in init (the MaxText/T5 default)."""
+    std = scale if scale is not None else 1.0 / math.sqrt(in_dim)
+    w = jax.random.truncated_normal(key, -2.0, 2.0, (in_dim, out_dim)) * std
+    return w.astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, *, dtype=DEFAULT_DTYPE):
+    w = jax.random.normal(key, (vocab, dim)) * (1.0 / math.sqrt(dim))
+    return w.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(dim: int):
+    return {"scale": jnp.ones((dim,), jnp.float32)}
+
+
+def rmsnorm(params, x, *, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * params["scale"]
+    return y.astype(x.dtype)
+
+
+def layernorm_init(dim: int):
+    return {
+        "scale": jnp.ones((dim,), jnp.float32),
+        "bias": jnp.zeros((dim,), jnp.float32),
+    }
+
+
+def layernorm(params, x, *, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps) * params["scale"] + params["bias"]
+    return y.astype(x.dtype)
+
+
+def make_norm(kind: str):
+    if kind == "rmsnorm":
+        return rmsnorm_init, rmsnorm
+    if kind == "layernorm":
+        return layernorm_init, layernorm
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (RoPE and Qwen2-VL's M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies f32[head_dim // 2]."""
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)
+
+
+def apply_rope(x, positions, *, theta: float = 10000.0):
+    """Rotate pairs (x[..., :d/2], x[..., d/2:]) by position angles.
+
+    x: [..., T, H, D]; positions: broadcastable to [..., T] (i32/f32).
+    Uses the "split halves" convention (llama-style).
+    """
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)                       # [d/2]
+    angles = positions.astype(jnp.float32)[..., None] * inv  # [..., T, d/2]
+    # broadcast over the head axis: x is [..., T, H, D]
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_m_rope(x, positions_thw, *, theta: float = 10000.0,
+                 sections=(16, 24, 24)):
+    """Qwen2-VL multimodal RoPE: the head dim is split into
+    (temporal, height, width) sections, each rotated by its own position
+    stream.  ``positions_thw``: i32[3, ..., T].  ``sections`` are in
+    *pairs* (halves of each section), summing to head_dim//2.
+    """
+    d = x.shape[-1]
+    assert sum(sections) == d // 2, (sections, d)
+    inv = rope_freqs(d, theta)                       # [d/2]
+    # Build per-pair position by section.
+    sec_id = jnp.repeat(
+        jnp.arange(3), jnp.asarray(sections), total_repeat_length=d // 2
+    )                                                 # [d/2] in {0,1,2}
+    # positions_thw[sec_id] per pair: gather -> [..., T, d/2]
+    pos = jnp.moveaxis(positions_thw, 0, -1).astype(jnp.float32)  # [..., T, 3]
+    pos_per_pair = jnp.take(pos, sec_id, axis=-1)     # [..., T, d/2]
+    angles = pos_per_pair * inv
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int, *, activation: str = "swiglu",
+             dtype=DEFAULT_DTYPE):
+    ks = jax.random.split(key, 3)
+    if activation in ("swiglu", "geglu"):
+        return {
+            "gate": dense_init(ks[0], d_model, d_ff, dtype=dtype),
+            "up": dense_init(ks[1], d_model, d_ff, dtype=dtype),
+            "down": dense_init(ks[2], d_ff, d_model, dtype=dtype),
+        }
+    return {
+        "up": dense_init(ks[0], d_model, d_ff, dtype=dtype),
+        "down": dense_init(ks[1], d_ff, d_model, dtype=dtype),
+    }
+
+
+def mlp_apply(params, x, *, activation: str = "swiglu"):
+    dtype = x.dtype
+    if activation in ("swiglu", "geglu"):
+        g = proj_einsum("...d,df->...f", x, params["gate"])
+        u = proj_einsum("...d,df->...f", x, params["up"])
+        act = jax.nn.silu(g) if activation == "swiglu" else jax.nn.gelu(g)
+        h = (act * u).astype(dtype)
+    else:
+        u = proj_einsum("...d,df->...f", x, params["up"])
+        if activation == "gelu":
+            h = jax.nn.gelu(u).astype(dtype)
+        elif activation == "sqrelu":  # RWKV channel-mix
+            h = jnp.square(jax.nn.relu(u)).astype(dtype)
+        else:
+            raise ValueError(activation)
+    return proj_einsum("...f,fd->...d", h, params["down"],
+                       out_dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_apply(embedding, tokens):
+    return jnp.take(embedding, tokens, axis=0)
+
+
+def unembed_apply(embedding_or_head, x):
+    """Logits in fp32 (loss-numerics discipline).
+
+    The head is constrained to P('model', None) first so the logits
+    einsum contracts a REPLICATED d — see gather_head_for_unembed."""
+    from repro.launch.sharding import gather_head_for_unembed
+    head = gather_head_for_unembed(embedding_or_head)
+    return jnp.einsum("...d,vd->...v", x, head,
+                      preferred_element_type=jnp.float32)
+
+
+def cross_entropy_loss(logits, labels, *, ignore_id: int = -1):
+    """Mean token NLL in fp32; ``labels == ignore_id`` masked out."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1
+    )[..., 0]
+    nll = logz - gold
+    mask = (labels != ignore_id).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,498 @@
+"""LM: config-driven composable model (all 10 assigned architectures).
+
+The layer stack is organized into *stages* (configs/base.py): each stage
+is a pattern of layers whose params are stacked along a leading axis and
+applied with ONE ``lax.scan`` — compile time and HLO size are O(1) in
+depth (126-layer llama3-405b compiles as fast as a 2-layer model), and
+the stacked leaves carry the FSDP/TP shardings on their trailing dims.
+
+Three entry points per model, matching the brief's shape kinds:
+
+* ``forward``/``loss``  — full-sequence training (train_4k)
+* ``prefill``           — full sequence + returns the decode cache
+* ``decode_step``       — one token against the cache (decode_32k,
+                          long_500k)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, LayerSpec
+from repro.models import kvcache
+from repro.models.attention import (
+    gqa_apply,
+    gqa_decode_apply,
+    gqa_init,
+    mla_apply,
+    mla_decode_apply,
+    mla_init,
+)
+from repro.models.layers import (
+    DEFAULT_DTYPE,
+    cross_entropy_loss,
+    dense_init,
+    embed_apply,
+    embed_init,
+    make_norm,
+    mlp_apply,
+    mlp_init,
+    unembed_apply,
+)
+from repro.models.moe import moe_apply, moe_apply_dense, moe_init
+from repro.models.ssm import (
+    mamba_apply,
+    mamba_decode_step,
+    mamba_init,
+    rwkv6_attn,
+    rwkv6_attn_decode,
+    rwkv6_channel_mix,
+    rwkv6_channel_mix_init,
+    rwkv6_init,
+)
+
+MOE_AUX_WEIGHT = 0.01
+
+
+class LM:
+    def __init__(self, cfg: ArchConfig, *, attn_impl: str = "blockwise",
+                 remat_prevent_cse: bool = False,
+                 seq_parallel: bool = False):
+        self.cfg = cfg
+        self.attn_impl = attn_impl
+        self.remat_prevent_cse = remat_prevent_cse
+        self.seq_parallel = seq_parallel
+        self.norm_init, self.norm_apply = make_norm(cfg.norm)
+        self.stages = cfg.stages()
+
+    # ------------------------------------------------------------------
+    # Init
+    # ------------------------------------------------------------------
+    def _init_layer(self, key, spec: LayerSpec):
+        cfg = self.cfg
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        p: dict[str, Any] = {
+            "mixer_norm": self.norm_init(cfg.d_model),
+            "ffn_norm": self.norm_init(cfg.d_model),
+        }
+        if spec.mixer == "gqa":
+            p["mixer"] = gqa_init(
+                k1, d_model=cfg.d_model, num_heads=cfg.num_heads,
+                num_kv_heads=cfg.num_kv_heads,
+                head_dim=cfg.resolved_head_dim)
+        elif spec.mixer == "mla":
+            m = cfg.mla
+            p["mixer"] = mla_init(
+                k1, d_model=cfg.d_model, num_heads=cfg.num_heads,
+                kv_lora_rank=m.kv_lora_rank,
+                qk_nope_head_dim=m.qk_nope_head_dim,
+                qk_rope_head_dim=m.qk_rope_head_dim,
+                v_head_dim=m.v_head_dim)
+        elif spec.mixer == "mamba":
+            mm = cfg.mamba
+            p["mixer"] = mamba_init(
+                k1, d_model=cfg.d_model, d_state=mm.d_state,
+                d_conv=mm.d_conv, expand=mm.expand)
+        elif spec.mixer == "rwkv":
+            p["mixer"] = rwkv6_init(
+                k1, d_model=cfg.d_model, head_dim=cfg.rwkv_head_dim)
+        else:
+            raise ValueError(spec.mixer)
+        if spec.ffn == "mlp":
+            p["ffn"] = mlp_init(k2, cfg.d_model, cfg.d_ff,
+                                activation=cfg.activation)
+        elif spec.ffn == "moe":
+            mo = cfg.moe
+            p["ffn"] = moe_init(
+                k2, d_model=cfg.d_model, d_ff_expert=mo.d_ff_expert,
+                num_experts=mo.num_experts, num_shared=mo.num_shared,
+                activation=cfg.activation)
+        elif spec.ffn == "rwkv_cm":
+            p["ffn"] = rwkv6_channel_mix_init(
+                k2, d_model=cfg.d_model, d_ff=cfg.d_ff)
+        else:
+            raise ValueError(spec.ffn)
+        return p
+
+    def init(self, key):
+        cfg = self.cfg
+        keys = jax.random.split(key, 3 + len(self.stages))
+        params: dict[str, Any] = {
+            "embed": embed_init(keys[0], cfg.padded_vocab, cfg.d_model),
+            "final_norm": self.norm_init(cfg.d_model),
+        }
+        if not cfg.tie_embeddings:
+            params["head"] = embed_init(keys[1], cfg.padded_vocab,
+                                        cfg.d_model)
+        stage_params = []
+        for si, (pattern, repeat) in enumerate(self.stages):
+            skeys = jax.random.split(keys[3 + si], repeat)
+
+            def init_unit(k, pattern=pattern):
+                uks = jax.random.split(k, len(pattern))
+                return {f"l{j}": self._init_layer(uks[j], spec)
+                        for j, spec in enumerate(pattern)}
+
+            stage_params.append(jax.vmap(init_unit)(skeys))
+        params["stages"] = stage_params
+        return params
+
+    # ------------------------------------------------------------------
+    # Full-sequence forward (train / prefill)
+    # ------------------------------------------------------------------
+    def _mixer_full(self, spec, lp, x, positions, collect_cache):
+        cfg = self.cfg
+        h = self.norm_apply(lp["mixer_norm"], x, eps=cfg.norm_eps)
+        cache = None
+        if spec.mixer == "gqa":
+            y, (k, v) = gqa_apply(
+                lp["mixer"], h, num_heads=cfg.num_heads,
+                num_kv_heads=cfg.num_kv_heads,
+                head_dim=cfg.resolved_head_dim, positions=positions,
+                causal=cfg.causal, rope_theta=cfg.rope_theta,
+                m_rope=cfg.m_rope, m_rope_sections=cfg.m_rope_sections,
+                impl=self.attn_impl, q_block=cfg.attn_q_block,
+                kv_block=cfg.attn_kv_block)
+            if collect_cache:
+                cache = {"k": k, "v": v}
+        elif spec.mixer == "mla":
+            m = cfg.mla
+            y, (ckv, kr) = mla_apply(
+                lp["mixer"], h, num_heads=cfg.num_heads,
+                kv_lora_rank=m.kv_lora_rank,
+                qk_nope_head_dim=m.qk_nope_head_dim,
+                qk_rope_head_dim=m.qk_rope_head_dim,
+                v_head_dim=m.v_head_dim, positions=positions,
+                causal=cfg.causal, rope_theta=cfg.rope_theta,
+                impl=self.attn_impl, q_block=cfg.attn_q_block,
+                kv_block=cfg.attn_kv_block)
+            if collect_cache:
+                cache = {"ckv": ckv, "kr": kr}
+        elif spec.mixer == "mamba":
+            mm = cfg.mamba
+            if collect_cache:
+                y, (hst, conv) = mamba_apply(
+                    lp["mixer"], h, d_state=mm.d_state, d_conv=mm.d_conv,
+                    chunk=mm.chunk, return_state=True)
+                cache = {"h": hst, "conv": conv}
+            else:
+                y = mamba_apply(lp["mixer"], h, d_state=mm.d_state,
+                                d_conv=mm.d_conv, chunk=mm.chunk)
+        elif spec.mixer == "rwkv":
+            if collect_cache:
+                y, (x_prev, S) = rwkv6_attn(
+                    lp["mixer"], h, head_dim=cfg.rwkv_head_dim,
+                    chunk=cfg.rwkv_chunk, return_state=True)
+                cache = {"x_att": x_prev, "S": S}
+            else:
+                y = rwkv6_attn(lp["mixer"], h, head_dim=cfg.rwkv_head_dim,
+                               chunk=cfg.rwkv_chunk)
+        else:
+            raise ValueError(spec.mixer)
+        return x + y, cache
+
+    def _ffn_full(self, spec, lp, x, collect_cache):
+        cfg = self.cfg
+        h = self.norm_apply(lp["ffn_norm"], x, eps=cfg.norm_eps)
+        aux = jnp.float32(0.0)
+        cache = None
+        if spec.ffn == "mlp":
+            y = mlp_apply(lp["ffn"], h, activation=cfg.activation)
+        elif spec.ffn == "moe":
+            mo = cfg.moe
+            y, aux = moe_apply(lp["ffn"], h, num_experts=mo.num_experts,
+                               top_k=mo.top_k,
+                               capacity_factor=mo.capacity_factor,
+                               activation=cfg.activation)
+        elif spec.ffn == "rwkv_cm":
+            if collect_cache:
+                y, x_prev = rwkv6_channel_mix(lp["ffn"], h,
+                                              return_state=True)
+                cache = {"x_ffn": x_prev}
+            else:
+                y = rwkv6_channel_mix(lp["ffn"], h)
+        else:
+            raise ValueError(spec.ffn)
+        return x + y, aux, cache
+
+    def _run_stages(self, params, x, positions, *, collect_cache=False,
+                    remat=False):
+        aux_total = jnp.float32(0.0)
+        caches = []
+        for (pattern, repeat), sp in zip(self.stages, params["stages"]):
+
+            def unit_body(carry, layer_params, pattern=pattern):
+                x, aux = carry
+                unit_cache = {}
+                for j, spec in enumerate(pattern):
+                    lp = layer_params[f"l{j}"]
+                    x, mc = self._mixer_full(spec, lp, x, positions,
+                                             collect_cache)
+                    x, aux_l, fc = self._ffn_full(spec, lp, x, collect_cache)
+                    aux = aux + aux_l
+                    if self.seq_parallel:
+                        from repro.launch.sharding import shard_seq_dim
+                        x = shard_seq_dim(x)
+                    if collect_cache:
+                        c = dict(mc or {})
+                        c.update(fc or {})
+                        unit_cache[f"l{j}"] = c
+                return (x, aux), (unit_cache if collect_cache else None)
+
+            body = unit_body
+            if remat:
+                body = jax.checkpoint(
+                    unit_body,
+                    policy=jax.checkpoint_policies.nothing_saveable,
+                    prevent_cse=self.remat_prevent_cse,
+                )
+            (x, aux_total), ys = jax.lax.scan(body, (x, aux_total), sp)
+            caches.append(ys)
+        return x, aux_total, caches
+
+    def _embed_in(self, params, tokens, embeds):
+        from repro.launch.sharding import shard_batch_dim
+        if embeds is not None:
+            return shard_batch_dim(embeds.astype(DEFAULT_DTYPE))
+        return shard_batch_dim(embed_apply(params["embed"], tokens))
+
+    def _positions(self, x_shape, positions):
+        B, T = x_shape[0], x_shape[1]
+        if positions is not None:
+            return positions
+        pos = jnp.arange(T, dtype=jnp.int32)[None, :].repeat(B, axis=0)
+        if self.cfg.m_rope:
+            pos = jnp.broadcast_to(pos[None], (3, B, T))
+        return pos
+
+    def _mask_pad(self, logits):
+        """-inf the vocab-padding tail (padded_vocab > vocab_size)."""
+        cfg = self.cfg
+        if cfg.padded_vocab == cfg.vocab_size:
+            return logits
+        import jax.numpy as _jnp
+        ids = _jnp.arange(cfg.padded_vocab)
+        return _jnp.where(ids < cfg.vocab_size, logits, -1e30)
+
+    def forward(self, params, tokens=None, embeds=None, positions=None,
+                *, remat=False):
+        """-> (logits [B,T,V] fp32, moe_aux scalar)."""
+        cfg = self.cfg
+        x = self._embed_in(params, tokens, embeds)
+        positions = self._positions(x.shape, positions)
+        x, aux, _ = self._run_stages(params, x, positions, remat=remat)
+        x = self.norm_apply(params["final_norm"], x, eps=cfg.norm_eps)
+        head = params["embed"] if cfg.tie_embeddings else params["head"]
+        return self._mask_pad(unembed_apply(head, x)), aux
+
+    def loss(self, params, batch, *, remat=False):
+        """batch: {'tokens' | 'embeds', 'labels'} -> scalar fp32 loss.
+
+        Causal LMs shift internally (labels may equal tokens); encoders
+        predict labels frame-wise.
+        """
+        logits, aux = self.forward(
+            params, tokens=batch.get("tokens"), embeds=batch.get("embeds"),
+            positions=batch.get("positions"), remat=remat)
+        labels = batch["labels"]
+        if self.cfg.causal:
+            logits = logits[:, :-1]
+            labels = labels[:, 1:]
+        ce = cross_entropy_loss(logits, labels)
+        return ce + MOE_AUX_WEIGHT * aux
+
+    # ------------------------------------------------------------------
+    # Decode cache
+    # ------------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int):
+        cfg = self.cfg
+        stage_caches = []
+        for pattern, repeat in self.stages:
+            unit = {}
+            for j, spec in enumerate(pattern):
+                c = {}
+                if spec.mixer == "gqa":
+                    c.update(kvcache.gqa_cache_init(
+                        repeat, batch, max_len, cfg.num_kv_heads,
+                        cfg.resolved_head_dim))
+                elif spec.mixer == "mla":
+                    m = cfg.mla
+                    c.update(kvcache.mla_cache_init(
+                        repeat, batch, max_len, m.kv_lora_rank,
+                        m.qk_rope_head_dim))
+                elif spec.mixer == "mamba":
+                    mm = cfg.mamba
+                    c.update({
+                        "h": jnp.zeros((repeat, batch,
+                                        mm.d_inner(cfg.d_model),
+                                        mm.d_state), jnp.float32),
+                        "conv": jnp.zeros((repeat, batch, mm.d_conv - 1,
+                                           mm.d_inner(cfg.d_model)),
+                                          DEFAULT_DTYPE),
+                    })
+                elif spec.mixer == "rwkv":
+                    H = cfg.d_model // cfg.rwkv_head_dim
+                    c.update({
+                        "x_att": jnp.zeros((repeat, batch, 1, cfg.d_model),
+                                           DEFAULT_DTYPE),
+                        "S": jnp.zeros((repeat, batch, H, cfg.rwkv_head_dim,
+                                        cfg.rwkv_head_dim), jnp.float32),
+                    })
+                if spec.ffn == "rwkv_cm":
+                    c["x_ffn"] = jnp.zeros((repeat, batch, 1, cfg.d_model),
+                                           DEFAULT_DTYPE)
+                unit[f"l{j}"] = c
+            stage_caches.append(unit)
+        return {"stages": stage_caches,
+                "lengths": jnp.zeros((batch,), jnp.int32)}
+
+    # ------------------------------------------------------------------
+    # Decode step
+    # ------------------------------------------------------------------
+    def _mixer_decode(self, spec, lp, x, cache, lengths, positions):
+        cfg = self.cfg
+        h = self.norm_apply(lp["mixer_norm"], x, eps=cfg.norm_eps)
+        new_cache = dict(cache)
+        if spec.mixer == "gqa":
+            y, ck, cv = gqa_decode_apply(
+                lp["mixer"], h, cache["k"], cache["v"], lengths,
+                num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+                head_dim=cfg.resolved_head_dim, positions=positions,
+                rope_theta=cfg.rope_theta, m_rope=cfg.m_rope,
+                m_rope_sections=cfg.m_rope_sections)
+            new_cache["k"], new_cache["v"] = ck, cv
+        elif spec.mixer == "mla":
+            m = cfg.mla
+            y, ckv, kr = mla_decode_apply(
+                lp["mixer"], h, cache["ckv"], cache["kr"], lengths,
+                num_heads=cfg.num_heads, kv_lora_rank=m.kv_lora_rank,
+                qk_nope_head_dim=m.qk_nope_head_dim,
+                qk_rope_head_dim=m.qk_rope_head_dim,
+                v_head_dim=m.v_head_dim, positions=positions,
+                rope_theta=cfg.rope_theta)
+            new_cache["ckv"], new_cache["kr"] = ckv, kr
+        elif spec.mixer == "mamba":
+            mm = cfg.mamba
+            y, st = mamba_decode_step(
+                lp["mixer"], h, {"h": cache["h"], "conv": cache["conv"]},
+                d_state=mm.d_state, d_conv=mm.d_conv)
+            new_cache["h"], new_cache["conv"] = st["h"], st["conv"]
+        elif spec.mixer == "rwkv":
+            y, (x_prev, S) = rwkv6_attn_decode(
+                lp["mixer"], h, cache["x_att"], cache["S"],
+                head_dim=cfg.rwkv_head_dim)
+            new_cache["x_att"], new_cache["S"] = x_prev, S
+        else:
+            raise ValueError(spec.mixer)
+        return x + y, new_cache
+
+    def _ffn_decode(self, spec, lp, x, cache):
+        cfg = self.cfg
+        h = self.norm_apply(lp["ffn_norm"], x, eps=cfg.norm_eps)
+        new_cache = cache
+        if spec.ffn == "mlp":
+            y = mlp_apply(lp["ffn"], h, activation=cfg.activation)
+        elif spec.ffn == "moe":
+            mo = cfg.moe
+            # Dropless dense-combine MoE at decode: exact and
+            # memory-roofline-equivalent (see moe_apply_dense docstring).
+            y = moe_apply_dense(lp["ffn"], h, num_experts=mo.num_experts,
+                                top_k=mo.top_k, activation=cfg.activation)
+        elif spec.ffn == "rwkv_cm":
+            y, x_prev = rwkv6_channel_mix(lp["ffn"], h, cache["x_ffn"],
+                                          return_state=True)
+            new_cache = dict(cache)
+            new_cache["x_ffn"] = x_prev
+        else:
+            raise ValueError(spec.ffn)
+        return x + y, new_cache
+
+    def decode_step(self, params, cache, tokens):
+        """tokens: i32[B,1] -> (logits [B,1,V] fp32, new cache).
+
+        ``cache['lengths']`` counts tokens BEFORE this step; the new
+        token is written at position lengths (0-based) and lengths
+        increments.
+        """
+        cfg = self.cfg
+        lengths = cache["lengths"] + 1            # incl. the new token
+        B = tokens.shape[0]
+        pos = (lengths - 1).astype(jnp.int32)[:, None]   # [B,1]
+        if cfg.m_rope:
+            pos = jnp.broadcast_to(pos[None], (3, B, 1))
+        x = embed_apply(params["embed"], tokens)
+        new_stage_caches = []
+        for (pattern, repeat), sp, sc in zip(
+                self.stages, params["stages"], cache["stages"]):
+
+            # The cache stack rides the scan CARRY and each iteration
+            # dynamic-updates its own layer slice — XLA aliases the
+            # donated buffer, so the update is in place.  Passing the
+            # cache through scan xs/ys instead re-materializes the FULL
+            # [L, B, S, ...] stack every layer (2x ~1 TB/token/dev for
+            # llama3-405b decode_32k; EXPERIMENTS §Perf cell D).
+            def body(carry, layer_params, pattern=pattern):
+                x, cstack, li = carry
+                take = lambda c: jax.lax.dynamic_index_in_dim(
+                    c, li, 0, keepdims=False)
+                put = lambda c, n: jax.lax.dynamic_update_index_in_dim(
+                    c, n.astype(c.dtype), li, 0)
+                for j, spec in enumerate(pattern):
+                    lp = layer_params[f"l{j}"]
+                    lc = jax.tree.map(take, cstack[f"l{j}"])
+                    x, nc = self._mixer_decode(spec, lp, x, lc, lengths, pos)
+                    x, nc2 = self._ffn_decode(spec, lp, x, nc)
+                    cstack = dict(cstack)
+                    cstack[f"l{j}"] = jax.tree.map(put, cstack[f"l{j}"], nc2)
+                return (x, cstack, li + 1), None
+
+            (x, new_sc, _), _ = jax.lax.scan(body, (x, sc, jnp.int32(0)), sp)
+            new_stage_caches.append(new_sc)
+        x = self.norm_apply(params["final_norm"], x, eps=cfg.norm_eps)
+        head = params["embed"] if cfg.tie_embeddings else params["head"]
+        logits = self._mask_pad(unembed_apply(head, x))
+        return logits, {"stages": new_stage_caches, "lengths": lengths}
+
+    # ------------------------------------------------------------------
+    # Prefill
+    # ------------------------------------------------------------------
+    def prefill(self, params, tokens=None, embeds=None, positions=None,
+                max_len: int | None = None):
+        """Full-sequence pass that also builds the decode cache.
+
+        Returns (last-token logits [B,V], cache padded to ``max_len``).
+        """
+        cfg = self.cfg
+        x = self._embed_in(params, tokens, embeds)
+        B, T = x.shape[0], x.shape[1]
+        max_len = max_len or T
+        positions = self._positions(x.shape, positions)
+        x, _aux, caches = self._run_stages(params, x, positions,
+                                           collect_cache=True)
+        x = self.norm_apply(params["final_norm"], x, eps=cfg.norm_eps)
+        head = params["embed"] if cfg.tie_embeddings else params["head"]
+        logits = self._mask_pad(unembed_apply(head, x[:, -1]))
+        # Assemble the padded cache.
+        full = self.init_cache(B, max_len)
+        for si, ((pattern, repeat), got) in enumerate(zip(self.stages,
+                                                          caches)):
+            for j, spec in enumerate(pattern):
+                tgt = full["stages"][si][f"l{j}"]
+                src = got[f"l{j}"]
+                for name, val in src.items():
+                    if name in ("k", "v", "ckv", "kr"):
+                        # [repeat,B,T,...] -> pad into [repeat,B,S,...]
+                        tgt[name] = jax.lax.dynamic_update_slice(
+                            tgt[name], val.astype(tgt[name].dtype),
+                            (0,) * tgt[name].ndim)
+                    else:
+                        tgt[name] = val.astype(tgt[name].dtype) \
+                            if tgt[name].dtype != val.dtype else val
+        full["lengths"] = jnp.full((B,), T, jnp.int32)
+        return logits, full

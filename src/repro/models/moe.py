@@ -1,0 +1,159 @@
+"""Mixture-of-Experts: top-k router + capacity-based one-hot dispatch.
+
+TPU-native (GShard/Mesh-TF style): token→expert assignment is realized
+with static-shape one-hot einsums and a per-expert capacity
+``C = ceil(T·k/E · capacity_factor)`` — no dynamic shapes, no sorts on
+the critical path.  The expert dimension is sharded over the ``model``
+mesh axis (expert parallelism); the dispatch/combine einsums then lower
+to all-to-all-style collectives under GSPMD.
+
+Auxiliary load-balancing loss (Switch-style) is returned alongside the
+output and accumulated by the model's scan.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import DEFAULT_DTYPE, dense_init, mlp_apply, mlp_init
+
+
+def moe_init(key, *, d_model: int, d_ff_expert: int, num_experts: int,
+             num_shared: int = 0, activation: str = "swiglu",
+             dtype=DEFAULT_DTYPE):
+    ks = jax.random.split(key, 3)
+    # Experts as stacked MLPs: leaves [E, d_model, d_ff] / [E, d_ff, d_model].
+    ekeys = jax.random.split(ks[0], num_experts)
+    experts = jax.vmap(
+        lambda k: mlp_init(k, d_model, d_ff_expert, activation=activation,
+                           dtype=dtype)
+    )(ekeys)
+    params = {
+        "router": dense_init(ks[1], d_model, num_experts,
+                             dtype=jnp.float32),   # router in fp32
+        "experts": experts,
+    }
+    if num_shared:
+        params["shared"] = mlp_init(
+            ks[2], d_model, d_ff_expert * num_shared, activation=activation,
+            dtype=dtype,
+        )
+    return params
+
+
+def _top_k_mask(logits, k):
+    """[T,E] fp32 -> (weights [T,E] renormalized over top-k, mask [T,E])."""
+    vals, idx = jax.lax.top_k(logits, k)                  # [T,k]
+    mask = jax.nn.one_hot(idx, logits.shape[-1],
+                          dtype=jnp.float32).sum(axis=-2)  # [T,E]
+    probs = jax.nn.softmax(vals, axis=-1)                  # renorm over top-k
+    weights = jnp.zeros_like(logits)
+    weights = jnp.einsum("tk,tke->te", probs,
+                         jax.nn.one_hot(idx, logits.shape[-1],
+                                        dtype=jnp.float32))
+    return weights, mask
+
+
+def moe_apply(params, x, *, num_experts: int, top_k: int,
+              capacity_factor: float = 1.25, activation: str = "swiglu",
+              group_size: int = 1024):
+    """x: [B,T,D] -> (y, aux_loss).
+
+    GROUPED GShard dispatch: tokens are split into groups of
+    ``group_size`` and capacity applies PER GROUP
+    (``C = ceil(group_size·k/E · cf)``).  The one-hot dispatch/combine
+    tensor is [G, n, E, C] — total bytes N·E·C_group ∝ N·k·cf·group_size
+    /... i.e. LINEAR in N (a global capacity makes it quadratic: at 1M
+    prefill tokens that materialized a 2.7 TB all-gathered tensor, see
+    EXPERIMENTS.md §Perf).  Groups align with the data axis; experts are
+    sharded over the model axis, so dispatch/expert/combine einsums are
+    all local to a (data, model) shard pair.
+    """
+    B, T, D = x.shape
+    E, K = num_experts, top_k
+    N = B * T
+    n = min(group_size, N)
+    if N % n:  # fall back to one group per sequence
+        n = T if N % T == 0 else N
+    G = N // n
+    xg = x.reshape(G, n, D)
+    capacity = max(1, int(math.ceil(n * K / E * capacity_factor)))
+
+    logits = jnp.einsum("gnd,de->gne", xg.astype(jnp.float32),
+                        params["router"])                  # fp32 router
+    vals, idx = jax.lax.top_k(logits, K)                   # [G,n,K]
+    probs = jax.nn.softmax(vals, axis=-1)
+    oh = jax.nn.one_hot(idx, E, dtype=jnp.float32)         # [G,n,K,E]
+    weights = jnp.einsum("gnk,gnke->gne", probs, oh)       # [G,n,E]
+    mask = oh.sum(axis=-2)                                 # [G,n,E]
+
+    # Load-balancing aux loss (Switch): E * sum_e f_e * p_e.
+    probs_full = jax.nn.softmax(logits, axis=-1)
+    f = jnp.mean(mask, axis=(0, 1))
+    p = jnp.mean(probs_full, axis=(0, 1))
+    aux = E * jnp.sum(f * p)
+
+    # Position of each token within its expert's per-group buffer.
+    pos_in_expert = jnp.cumsum(mask, axis=1) * mask - 1.0  # [G,n,E]
+    in_cap = (pos_in_expert < capacity) & (pos_in_expert >= 0)
+    pos_clipped = jnp.clip(pos_in_expert, 0, capacity - 1).astype(jnp.int32)
+    pos_oh = jax.nn.one_hot(pos_clipped, capacity, dtype=jnp.float32)
+    dispatch = pos_oh * in_cap[..., None]                  # [G,n,E,C]
+    combine = dispatch * weights[..., None]
+
+    xe = jnp.einsum("gnd,gnec->gecd", xg.astype(jnp.float32),
+                    dispatch).astype(x.dtype)              # [G,E,C,D]
+    # Expert FFN with the expert dim in place (weights [E,D,F]/[E,F,D]):
+    ex = params["experts"]
+    # NB: no preferred_element_type here — the CPU dot thunk rejects
+    # bf16xbf16->f32 on these 4D einsums; TPU MXU accumulates fp32
+    # internally either way.
+    if activation in ("swiglu", "geglu"):
+        gph = jnp.einsum("gecd,edf->gecf", xe, ex["gate"]).astype(
+            jnp.float32)
+        uph = jnp.einsum("gecd,edf->gecf", xe, ex["up"]).astype(
+            jnp.float32)
+        act = jax.nn.silu(gph) if activation == "swiglu" else \
+            jax.nn.gelu(gph)
+        he = (act * uph).astype(x.dtype)
+    else:
+        uph = jnp.einsum("gecd,edf->gecf", xe, ex["up"]).astype(
+            jnp.float32)
+        he = jax.nn.gelu(uph).astype(x.dtype) if activation == "gelu" \
+            else jnp.square(jax.nn.relu(uph)).astype(x.dtype)
+    ye = jnp.einsum("gecf,efd->gecd", he, ex["down"]).astype(jnp.float32)
+    yg = jnp.einsum("gecd,gnec->gnd", ye, combine).astype(x.dtype)
+
+    y = yg.reshape(B, T, D)
+    if "shared" in params:
+        y = y + mlp_apply(params["shared"], x.reshape(B * T, D),
+                          activation=activation).reshape(B, T, D)
+    return y, aux
+
+
+def moe_apply_dense(params, x, *, num_experts: int, top_k: int,
+                    activation: str = "swiglu"):
+    """Dropless decode-path MoE: every expert runs on every token, the
+    top-k weights combine.  EXACT (no capacity drops) and, for the
+    memory-bound decode regime, roofline-equivalent to sparse dispatch:
+    the HBM traffic is the expert weights either way (every expert is
+    active at decode batch sizes), while the extra FLOPs are far below
+    the memory roofline.  Keeps decode shapes fully static.
+    """
+    B, T, D = x.shape
+    xt = x.reshape(B * T, D)
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                        params["router"])
+    weights, _ = _top_k_mask(logits, top_k)               # [N,E]
+    ye = jax.vmap(
+        lambda p_: mlp_apply(p_, xt, activation=activation)
+    )(params["experts"])                                   # [E,N,D]
+    y = jnp.einsum("end,ne->nd", ye.astype(jnp.float32), weights)
+    y = y.astype(x.dtype)
+    if "shared" in params:
+        y = y + mlp_apply(params["shared"], xt, activation=activation)
+    return y.reshape(B, T, D)

@@ -1,0 +1,392 @@
+"""State-space / linear-recurrence blocks: Mamba (Jamba) and RWKV6.
+
+Both are implemented in the *chunked* form that is the TPU-native
+adaptation of their CUDA kernels (DESIGN.md §2): sequence chunks are
+processed with dense matmuls/cumsums (MXU-friendly), while a short
+``lax.scan`` carries the recurrent state across chunks.  Chunk size
+bounds the live state-expansion memory to O(B·chunk·d_inner·d_state)
+instead of O(B·T·d_inner·d_state) — this is what makes the 4k-train and
+500k-decode shapes fit HBM.
+
+Decode (single token) uses the exact recurrences.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import DEFAULT_DTYPE, dense_init
+
+
+# ===========================================================================
+# Mamba (v1 selective SSM, as interleaved in Jamba)
+# ===========================================================================
+
+def mamba_init(key, *, d_model: int, d_state: int = 16, d_conv: int = 4,
+               expand: int = 2, dt_rank: int | None = None,
+               dtype=DEFAULT_DTYPE):
+    d_inner = expand * d_model
+    dt_rank = dt_rank or max(1, math.ceil(d_model / 16))
+    ks = jax.random.split(key, 7)
+    # S4D-real initialization for A (negative, log-spaced).
+    a = jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32)[None, :],
+                 (d_inner, 1))
+    params = {
+        "in_proj": dense_init(ks[0], d_model, 2 * d_inner, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (d_conv, d_inner)) *
+                   (1.0 / math.sqrt(d_conv))).astype(dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "x_proj": dense_init(ks[2], d_inner, dt_rank + 2 * d_state,
+                             dtype=dtype),
+        "dt_proj": dense_init(ks[3], dt_rank, d_inner, dtype=dtype),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.clip(jax.random.uniform(ks[4], (d_inner,)) * 0.099 + 0.001,
+                     1e-4, None))).astype(jnp.float32),
+        "A_log": jnp.log(a),                      # fp32 [d_inner, d_state]
+        "D": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": dense_init(ks[5], d_inner, d_model, dtype=dtype),
+    }
+    params["meta"] = {}  # reserved
+    return params
+
+
+def _mamba_project(params, x, *, d_state: int, dt_rank: int):
+    """x: [B,L,D] -> (xz gate split, dt, Bc, Cc) all [B,L,...]."""
+    xz = jnp.einsum("bld,de->ble", x, params["in_proj"],
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    xs, z = jnp.split(xz, 2, axis=-1)                     # [B,L,d_inner]
+    return xs, z
+
+
+def _mamba_ssm_inputs(params, xs, *, d_state: int, dt_rank: int):
+    proj = jnp.einsum("bli,ie->ble", xs, params["x_proj"],
+                      preferred_element_type=jnp.float32)  # fp32
+    dt_in = proj[..., :dt_rank]
+    Bc = proj[..., dt_rank:dt_rank + d_state]              # [B,L,N]
+    Cc = proj[..., dt_rank + d_state:]                     # [B,L,N]
+    dt = jnp.einsum("blr,ri->bli", dt_in,
+                    params["dt_proj"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt + params["dt_bias"])           # [B,L,d_inner]
+    return dt, Bc, Cc
+
+
+def _conv1d_causal(params, xs, conv_state=None):
+    """Depthwise causal conv over time.  xs: [B,L,C]; conv_state:
+    [B,d_conv-1,C] tail of the previous segment (decode) or None."""
+    w = params["conv_w"].astype(jnp.float32)               # [K,C]
+    K = w.shape[0]
+    pad = xs if conv_state is None else jnp.concatenate(
+        [conv_state.astype(xs.dtype), xs], axis=1)
+    if conv_state is None:
+        pad = jnp.pad(pad, ((0, 0), (K - 1, 0), (0, 0)))
+    acc = jnp.zeros(xs.shape, jnp.float32)
+    L = xs.shape[1]
+    for i in range(K):
+        acc = acc + pad[:, i:i + L].astype(jnp.float32) * w[i]
+    acc = acc + params["conv_b"].astype(jnp.float32)
+    return jax.nn.silu(acc).astype(xs.dtype)
+
+
+def mamba_apply(params, x, *, d_state: int = 16, d_conv: int = 4,
+                dt_rank: int | None = None, chunk: int = 256,
+                h0=None, conv0=None, return_state: bool = False):
+    """Full-sequence selective scan, chunked.
+
+    x: [B,T,D] -> y [B,T,D].  When ``return_state`` also returns the
+    final (h [B,d_inner,N] fp32, conv tail [B,d_conv-1,d_inner]).
+    """
+    B, T, D = x.shape
+    dt_rank = dt_rank or max(1, math.ceil(D / 16))
+    xs, z = _mamba_project(params, x, d_state=d_state, dt_rank=dt_rank)
+    d_inner = xs.shape[-1]
+    conv_tail = xs[:, -(d_conv - 1):, :] if return_state else None
+    xs = _conv1d_causal(params, xs, conv0)
+    dt, Bc, Cc = _mamba_ssm_inputs(params, xs, d_state=d_state,
+                                   dt_rank=dt_rank)
+    A = -jnp.exp(params["A_log"])                          # [d_inner,N] <0
+
+    chunk = min(chunk, T)
+    nch = -(-T // chunk)
+    Tp = nch * chunk
+    if Tp != T:
+        padspec = ((0, 0), (0, Tp - T), (0, 0))
+        xs = jnp.pad(xs, padspec)
+        dt = jnp.pad(dt, padspec)
+        Bc = jnp.pad(Bc, padspec)
+        Cc = jnp.pad(Cc, padspec)
+
+    def reshape_c(t):
+        return t.reshape(B, nch, chunk, t.shape[-1]).swapaxes(0, 1)
+
+    xs_c, dt_c, B_c, C_c = map(reshape_c, (xs, dt, Bc, Cc))
+
+    h_init = (jnp.zeros((B, d_inner, d_state), jnp.float32)
+              if h0 is None else h0)
+
+    def chunk_step(h, inputs):
+        xc, dtc, bc, cc = inputs                # [B,chunk,...]
+        # a_t = exp(dt*A): [B,chunk,d_inner,N]; u_t = dt*B_t*x_t
+        dA = dtc[..., None] * A                 # fp32 [B,L,I,N]
+        u = (dtc * xc.astype(jnp.float32))[..., None] * bc[:, :, None, :]
+        # In-chunk associative scan over time for h_t = a h_{t-1} + u.
+        a = jnp.exp(dA)
+
+        def comb(p, q):
+            a1, b1 = p
+            a2, b2 = q
+            return a1 * a2, a2 * b1 + b2
+
+        a_sc, u_sc = jax.lax.associative_scan(comb, (a, u), axis=1)
+        # include the carried-in state: h_t = a_sc_t * h_init + u_sc_t
+        h_t = a_sc * h[:, None] + u_sc          # [B,L,I,N]
+        y = jnp.einsum("blin,bln->bli", h_t, cc)
+        y = y + params["D"] * xc.astype(jnp.float32)
+        return h_t[:, -1], y
+
+    h_fin, ys = jax.lax.scan(chunk_step, h_init, (xs_c, dt_c, B_c, C_c))
+    y = ys.swapaxes(0, 1).reshape(B, Tp, d_inner)[:, :T]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bli,id->bld", y, params["out_proj"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    if return_state:
+        return out, (h_fin, conv_tail)
+    return out
+
+
+def mamba_state_init(batch: int, *, d_model: int, d_state: int = 16,
+                     d_conv: int = 4, expand: int = 2):
+    d_inner = expand * d_model
+    return {
+        "h": jnp.zeros((batch, d_inner, d_state), jnp.float32),
+        "conv": jnp.zeros((batch, d_conv - 1, d_inner), DEFAULT_DTYPE),
+    }
+
+
+def mamba_decode_step(params, x, state, *, d_state: int = 16,
+                      d_conv: int = 4, dt_rank: int | None = None):
+    """One-token recurrence.  x: [B,1,D]; state: {'h','conv'}."""
+    B, _, D = x.shape
+    dt_rank = dt_rank or max(1, math.ceil(D / 16))
+    xs, z = _mamba_project(params, x, d_state=d_state, dt_rank=dt_rank)
+    new_conv = jnp.concatenate([state["conv"][:, 1:], xs.astype(
+        state["conv"].dtype)], axis=1) if d_conv > 1 else state["conv"]
+    xs = _conv1d_causal(params, xs, state["conv"])
+    dt, Bc, Cc = _mamba_ssm_inputs(params, xs, d_state=d_state,
+                                   dt_rank=dt_rank)
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt[:, 0, :, None] * A)                      # [B,I,N]
+    u = (dt[:, 0] * xs[:, 0].astype(jnp.float32))[..., None] * \
+        Bc[:, 0, None, :]
+    h = dA * state["h"] + u
+    y = jnp.einsum("bin,bn->bi", h, Cc[:, 0])
+    y = y + params["D"] * xs[:, 0].astype(jnp.float32)
+    y = (y * jax.nn.silu(z[:, 0].astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bi,id->bd", y, params["out_proj"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return out[:, None], {"h": h, "conv": new_conv}
+
+
+# ===========================================================================
+# RWKV6 ("Finch": data-dependent decay)
+# ===========================================================================
+
+def rwkv6_init(key, *, d_model: int, head_dim: int = 64,
+               decay_lora: int = 64, dtype=DEFAULT_DTYPE):
+    H = d_model // head_dim
+    ks = jax.random.split(key, 12)
+    def lin(k, o=d_model):
+        return dense_init(k, d_model, o, dtype=dtype)
+    # Decay per-channel base + data-dependent LoRA (the Finch signature).
+    decay_base = jnp.linspace(-6.0, -0.5, d_model).astype(jnp.float32)
+    params = {
+        "mix": {  # token-shift lerp coefficients per stream
+            "r": jnp.full((d_model,), 0.5, jnp.float32),
+            "k": jnp.full((d_model,), 0.5, jnp.float32),
+            "v": jnp.full((d_model,), 0.5, jnp.float32),
+            "w": jnp.full((d_model,), 0.5, jnp.float32),
+            "g": jnp.full((d_model,), 0.5, jnp.float32),
+        },
+        "wr": lin(ks[0]), "wk": lin(ks[1]), "wv": lin(ks[2]),
+        "wg": lin(ks[3]), "wo": lin(ks[4]),
+        "decay_base": decay_base,
+        "decay_A": dense_init(ks[5], d_model, decay_lora, dtype=dtype),
+        "decay_B": dense_init(ks[6], decay_lora, d_model, dtype=dtype),
+        "bonus_u": (jax.random.normal(ks[7], (d_model,)) * 0.1).astype(
+            jnp.float32),
+        "ln_x": {"scale": jnp.ones((d_model,), jnp.float32),
+                 "bias": jnp.zeros((d_model,), jnp.float32)},
+    }
+    return params
+
+
+def _token_shift(x, x_prev, mu):
+    """lerp(x_t, x_{t-1}, mu): RWKV token shift.  x: [B,T,D]; x_prev is
+    the last token of the previous segment [B,1,D] (zeros at start)."""
+    prev = jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+    return x + (prev - x) * mu
+
+
+def _rwkv_streams(params, x, x_prev):
+    mix = params["mix"]
+    xr = _token_shift(x, x_prev, mix["r"].astype(x.dtype))
+    xk = _token_shift(x, x_prev, mix["k"].astype(x.dtype))
+    xv = _token_shift(x, x_prev, mix["v"].astype(x.dtype))
+    xw = _token_shift(x, x_prev, mix["w"].astype(x.dtype))
+    xg = _token_shift(x, x_prev, mix["g"].astype(x.dtype))
+    r = jnp.einsum("btd,de->bte", xr, params["wr"],
+                   preferred_element_type=jnp.float32)
+    k = jnp.einsum("btd,de->bte", xk, params["wk"],
+                   preferred_element_type=jnp.float32)
+    v = jnp.einsum("btd,de->bte", xv, params["wv"],
+                   preferred_element_type=jnp.float32)
+    g = jnp.einsum("btd,de->bte", xg, params["wg"],
+                   preferred_element_type=jnp.float32)
+    # data-dependent decay (Finch): w = exp(-exp(base + tanh(x A) B))
+    dd = jnp.einsum("btd,dr->btr", xw, params["decay_A"],
+                    preferred_element_type=jnp.float32)
+    dd = jnp.einsum("btr,rd->btd", jnp.tanh(dd),
+                    params["decay_B"].astype(jnp.float32))
+    logw = -jnp.exp(jnp.clip(params["decay_base"] + dd, -20.0, 4.0))
+    return r, k, v, g, logw                     # all fp32 [B,T,D]
+
+
+def rwkv6_attn(params, x, *, head_dim: int = 64, chunk: int = 64,
+               x_prev=None, s0=None, return_state: bool = False):
+    """RWKV6 time-mix over a full sequence, chunked linear attention.
+
+    Within a chunk the decay factorizes as exp(A_t - A_s) with
+    A = cumsum(log w); pairs are computed with two matmuls on decayed
+    r'/k' (clamped at -30 in log space for stability).  The recurrent
+    state S [B,H,K,V] carries across chunks via lax.scan.
+    """
+    B, T, D = x.shape
+    H = D // head_dim
+    K = V = head_dim
+    if x_prev is None:
+        x_prev = jnp.zeros((B, 1, D), x.dtype)
+    r, k, v, g, logw = _rwkv_streams(params, x, x_prev)
+
+    chunk = min(chunk, T)
+    nch = -(-T // chunk)
+    Tp = nch * chunk
+    if Tp != T:
+        pads = ((0, 0), (0, Tp - T), (0, 0))
+        r = jnp.pad(r, pads)
+        k = jnp.pad(k, pads)
+        v = jnp.pad(v, pads)
+        logw = jnp.pad(logw, pads)  # log w = 0 -> w = 1 on padding
+
+    def heads(t):  # [B,Tp,D] -> [nch,B,H,chunk,hd]
+        t = t.reshape(B, nch, chunk, H, K).transpose(1, 0, 3, 2, 4)
+        return t
+
+    r_c, k_c, v_c, lw_c = map(heads, (r, k, v, logw))
+    u = params["bonus_u"].reshape(H, 1, K)
+
+    s_init = jnp.zeros((B, H, K, V), jnp.float32) if s0 is None else s0
+
+    def chunk_step(S, inp):
+        rc, kc, vc, lwc = inp                   # [B,H,L,hd]
+        Acum = jnp.cumsum(lwc, axis=2)          # inclusive cumsum of log w
+        # decay of state from chunk start to *before* token t:
+        # prod_{j<t} w_j = exp(Acum_{t-1}) = exp(Acum_t - lwc_t)
+        A_before = Acum - lwc
+        L = rc.shape[2]
+        # Intra-chunk pair decays EXACT (exponent <= 0 for t > s, no
+        # clipping — the factorized form underflows under strong decay;
+        # see kernels/rwkv6_scan.py for the same construction in VMEM).
+        tri = (jnp.arange(L)[:, None] > jnp.arange(L)[None, :])[..., None]
+        expo = A_before[:, :, :, None, :] - Acum[:, :, None, :, :]
+        pair = jnp.where(tri, jnp.exp(jnp.where(tri, expo, 0.0)), 0.0)
+        scores = jnp.einsum("bhlk,bhmk,bhlmk->bhlm", rc, kc, pair)
+        y_intra = jnp.einsum("bhlm,bhmv->bhlv", scores, vc)
+        # bonus: current-token diagonal, (r_t ⊙ u)·k_t scalar times v_t
+        y_diag = jnp.einsum("bhl,bhlv->bhlv",
+                            jnp.einsum("bhlk,bhlk->bhl", rc * u, kc), vc)
+        # inter-chunk: y_t += (r_t * exp(A_before_t)) . S
+        r_dec = rc * jnp.exp(A_before)
+        y_inter = jnp.einsum("bhlk,bhkv->bhlv", r_dec, S)
+        y = y_intra + y_diag + y_inter
+        # state update: S' = exp(Acum_L) S + sum_s exp(Acum_L - Acum_s) k v^T
+        # (exponents <= 0: exact, no clipping)
+        wtot = jnp.exp(Acum[:, :, -1])          # [B,H,K]
+        k_for_state = kc * jnp.exp(Acum[:, :, -1:, :] - Acum)
+        S_new = wtot[..., None] * S + jnp.einsum(
+            "bhlk,bhlv->bhkv", k_for_state, vc)
+        return S_new, y
+
+    S_fin, ys = jax.lax.scan(chunk_step, s_init, (r_c, k_c, v_c, lw_c))
+    # ys: [nch,B,H,chunk,V] -> [B,Tp,D]
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(B, Tp, D)[:, :T]
+    # group-norm per head (ln_x), then gate
+    y = y.reshape(B, T, H, K)
+    mu = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.var(y, axis=-1, keepdims=True)
+    y = (y - mu) * jax.lax.rsqrt(var + 64e-5)
+    y = y.reshape(B, T, D) * params["ln_x"]["scale"] + params["ln_x"]["bias"]
+    y = y * jax.nn.silu(g)
+    out = jnp.einsum("btd,de->bte", y.astype(x.dtype), params["wo"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    if return_state:
+        return out, (x[:, -1:, :], S_fin)
+    return out
+
+
+def rwkv6_attn_decode(params, x, x_prev, S, *, head_dim: int = 64):
+    """Exact single-token recurrence.  x: [B,1,D]."""
+    B, _, D = x.shape
+    H = D // head_dim
+    K = V = head_dim
+    r, k, v, g, logw = _rwkv_streams(params, x, x_prev)
+    rh = r.reshape(B, H, K)
+    kh = k.reshape(B, H, K)
+    vh = v.reshape(B, H, V)
+    w = jnp.exp(logw.reshape(B, H, K))
+    u = params["bonus_u"].reshape(H, K)
+    kv = jnp.einsum("bhk,bhv->bhkv", kh, vh)
+    y = jnp.einsum("bhk,bhkv->bhv", rh, S + u[None, :, :, None] * kv)
+    S_new = w[..., None] * S + kv
+    y = y.reshape(B, 1, H, V)
+    mu = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.var(y, axis=-1, keepdims=True)
+    y = (y - mu) * jax.lax.rsqrt(var + 64e-5)
+    y = y.reshape(B, 1, D) * params["ln_x"]["scale"] + params["ln_x"]["bias"]
+    y = y * jax.nn.silu(g)
+    out = jnp.einsum("btd,de->bte", y.astype(x.dtype), params["wo"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return out, (x, S_new)
+
+
+def rwkv6_channel_mix_init(key, *, d_model: int, d_ff: int,
+                           dtype=DEFAULT_DTYPE):
+    ks = jax.random.split(key, 3)
+    return {
+        "mix_k": jnp.full((d_model,), 0.5, jnp.float32),
+        "mix_r": jnp.full((d_model,), 0.5, jnp.float32),
+        "wk": dense_init(ks[0], d_model, d_ff, dtype=dtype),
+        "wv": dense_init(ks[1], d_ff, d_model, dtype=dtype),
+        "wr": dense_init(ks[2], d_model, d_model, dtype=dtype),
+    }
+
+
+def rwkv6_channel_mix(params, x, x_prev=None, *, return_state: bool = False):
+    B, T, D = x.shape
+    if x_prev is None:
+        x_prev = jnp.zeros((B, 1, D), x.dtype)
+    xk = _token_shift(x, x_prev, params["mix_k"].astype(x.dtype))
+    xr = _token_shift(x, x_prev, params["mix_r"].astype(x.dtype))
+    k = jnp.einsum("btd,df->btf", xk, params["wk"],
+                   preferred_element_type=jnp.float32)
+    k = jnp.square(jax.nn.relu(k)).astype(x.dtype)
+    v = jnp.einsum("btf,fd->btd", k, params["wv"],
+                   preferred_element_type=jnp.float32)
+    r = jnp.einsum("btd,de->bte", xr, params["wr"],
+                   preferred_element_type=jnp.float32)
+    out = (jax.nn.sigmoid(r) * v).astype(x.dtype)
+    if return_state:
+        return out, x[:, -1:, :]
+    return out

@@ -1,0 +1,103 @@
+"""The paper's synthetic proof-of-concept model (§IV.A).
+
+Two event types over a global scalar ``sum``:
+
+* ``Increment`` — K iterations of ``sum += sum + 1`` (paper: K = 1e6),
+  i.e. ``sum <- 2*sum + 1``, a computationally intensive loop whose
+  result is only observable through the final value of ``sum``.
+* ``Set`` — ``sum <- 10``, a constant store.
+
+When a batch contains ``Increment`` followed (eventually) by ``Set``, the
+increment loop is dead code *within the batch's contiguous program* and
+the compiler removes it — clang in the paper, XLA here (the ``while`` op
+vanishes from the optimized HLO; asserted in tests/test_poc_hlo.py).
+
+State is a single uint32 (C++ unsigned overflow semantics = wraparound,
+matching the paper's native arithmetic).  Neither event schedules new
+events (§IV.A), so any lookahead is valid; the paper uses a lookahead of
+1e6 so every batch reaches the maximum length.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.events import EventRegistry
+
+SET_VALUE = 10
+PAPER_ITERS = 1_000_000     # paper §IV.A
+DEFAULT_ITERS = 100_000     # container default (single-core CPU; DESIGN §6.4)
+
+
+def increment_body(sum_, iters: int):
+    """K iterations of ``sum += sum + 1`` as a lax.fori_loop."""
+    return jax.lax.fori_loop(
+        0, iters, lambda _i, s: s * jnp.uint32(2) + jnp.uint32(1), sum_
+    )
+
+
+def build_registry(iters: int = DEFAULT_ITERS,
+                   lookahead: float = 1_000_000.0) -> EventRegistry:
+    """Registry with the paper's two event types.
+
+    Handlers follow the (state, t, arg) -> state convention; ``state`` is
+    the global uint32 ``sum``.  ``arg`` is unused (the PoC events carry
+    no payload).
+    """
+    reg = EventRegistry()
+
+    def increment(state, t, arg):
+        del t, arg
+        return increment_body(state, iters)
+
+    def set_(state, t, arg):
+        del state, t, arg
+        return jnp.uint32(SET_VALUE)
+
+    reg.register("Increment", increment, lookahead=lookahead)
+    reg.register("Set", set_, lookahead=lookahead)
+    return reg.freeze()
+
+
+INCREMENT, SET = 0, 1  # type ids, in registration order
+
+
+def initial_state():
+    return jnp.uint32(0)
+
+
+def schedule_poc_events(num_events: int, p_set: float, seed: int):
+    """§IV.B workload: one event per integer time step, type ~ Bernoulli.
+
+    Returns a list of (time, type_id) pairs.
+    """
+    rng = np.random.default_rng(seed)
+    types = np.where(rng.random(num_events) < p_set, SET, INCREMENT)
+    return [(float(t), int(ty)) for t, ty in enumerate(types)]
+
+
+def reference_final_sum(types, iters: int) -> int:
+    """Pure-Python oracle for the final value of ``sum`` (mod 2^32)."""
+    s = 0
+    mask = (1 << 32) - 1
+    for ty in types:
+        if ty == SET:
+            s = SET_VALUE
+        else:
+            # 2^K * s + (2^K - 1) mod 2^32 (closed form of K doublings).
+            twoK = pow(2, iters, 1 << 32)
+            s = (twoK * s + twoK - 1) & mask
+    return s
+
+
+def s_max(n: int, p_i: float) -> float:
+    """Analytic maximum speedup (paper Corollary 1)."""
+    if p_i <= 0.0:
+        return float(n)
+    if p_i >= 1.0:
+        return 1.0
+    return n * (1.0 - p_i) / (1.0 - p_i ** n)

@@ -1,0 +1,314 @@
+"""Event-driven serving engine: continuous batching as a DES.
+
+The serving control plane IS a discrete-event simulation (DESIGN.md §4):
+
+* ``ARRIVE``  — a request joins; lookahead = the trace's minimum
+  inter-arrival gap (known from the ingress SLA).
+* ``PREFILL`` — prompt processed into a cache slot.
+* ``DECODE``  — one generation step for every active slot, pre-scheduled
+  on the integer time grid (decode cadence is deterministic while any
+  slot is active); lookahead 1.
+* ``EVICT``   — slot freed when a sequence finishes.
+
+The paper's compile-time event batching applies directly: *runs* of
+DECODE events inside the dynamic lookahead window are dispatched to
+pre-composed **fused k-step decode programs** — one ``jax.jit`` tracing
+``lax.scan`` over k decode steps + greedy sampling, so XLA optimizes
+across the k events (single dispatch, cross-step fusion, no host sync
+per token).  This is the serving-side analogue of the paper's
+Increment/Set batch: the batch is composed at compile time (first use,
+LazyComposer-style) and selected at runtime by the lookahead window.
+
+Mixed windows (a DECODE run interrupted by an ARRIVE) fall back to
+per-event execution, exactly like a batch whose window closes early.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.events import EventRegistry
+from repro.core.queue import HostEventQueue
+from repro.core.scheduler import extract_window
+from repro.models import LM
+
+ARRIVE, PREFILL, DECODE, EVICT = 0, 1, 2, 3
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list
+    max_new_tokens: int
+    arrival: float
+    slot: int = -1
+    output: list = dataclasses.field(default_factory=list)
+    done: bool = False
+    finish_time: float = -1.0
+
+
+@dataclasses.dataclass
+class ServeStats:
+    decode_events: int = 0
+    fused_batches: int = 0
+    fused_events: int = 0
+    singles: int = 0
+    prefills: int = 0
+    compiled_programs: dict = dataclasses.field(default_factory=dict)
+    wall_seconds: float = 0.0
+
+    @property
+    def mean_fused_length(self) -> float:
+        return self.fused_events / self.fused_batches if self.fused_batches \
+            else 0.0
+
+
+class ServingEngine:
+    def __init__(self, model: LM, params, *, max_slots: int = 8,
+                 max_len: int = 256, max_batch_len: int = 4,
+                 arrival_lookahead: float = 4.0,
+                 prompt_buckets=(32, 64, 128)):
+        self.model = model
+        self.params = params
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.max_batch_len = max_batch_len
+        self.arrival_lookahead = arrival_lookahead
+        self.prompt_buckets = tuple(sorted(prompt_buckets))
+
+        self.cache = model.init_cache(max_slots, max_len)
+        self.slot_req: list[Optional[Request]] = [None] * max_slots
+        self.waiting: list[Request] = []
+        self.requests: dict[int, Request] = {}
+        self.stats = ServeStats()
+
+        # --- compile-time batch composition (lazy, per run-length k) ---
+        self._decode_k_programs: dict[int, Any] = {}
+        self._prefill_programs: dict[int, Any] = {}
+
+        # --- the event alphabet (paper §III-A: constant handler array) ---
+        reg = EventRegistry()
+        reg.register("ARRIVE", self._h_arrive, lookahead=arrival_lookahead)
+        reg.register("PREFILL", self._h_prefill, lookahead=0.0)
+        # DECODE lookahead = arrival lookahead: the only events a decode
+        # emits are EVICTs, and evictions cannot affect other DECODEs in
+        # the window (slot reuse requires a PREFILL, which is gated by
+        # the ARRIVE lookahead) — so decode runs may batch up to the
+        # next possible arrival, the paper's dynamic window at work.
+        reg.register("DECODE", self._h_decode_single,
+                     lookahead=arrival_lookahead)
+        reg.register("EVICT", self._h_evict, lookahead=0.0)
+        self.registry = reg.freeze()
+        self.queue = HostEventQueue()
+
+    # ------------------------------------------------------------------
+    # Composed programs (the compile-time batching)
+    # ------------------------------------------------------------------
+    def _decode_k(self, k: int):
+        """Fused k-step decode program: ONE jit containing a lax.scan of
+        k (decode_step -> greedy sample) iterations.  XLA sees the k
+        events as a contiguous procedure — the paper's batch."""
+        if k not in self._decode_k_programs:
+            model = self.model
+
+            def fused(params, cache, tokens, active):
+                def step(carry, _):
+                    cache, tokens = carry
+                    logits, cache = model.decode_step(params, cache, tokens)
+                    nxt = jnp.argmax(logits[:, -1], axis=-1)
+                    nxt = jnp.where(active, nxt, tokens[:, 0]).astype(
+                        jnp.int32)[:, None]
+                    return (cache, nxt), nxt
+
+                (cache, _), toks = jax.lax.scan(
+                    step, (cache, tokens), None, length=k)
+                return cache, jnp.swapaxes(toks[..., 0], 0, 1)  # [B, k]
+
+            t0 = time.perf_counter()
+            prog = jax.jit(fused)
+            self._decode_k_programs[k] = prog
+            self.stats.compiled_programs[f"decode_{k}"] = (
+                time.perf_counter() - t0)
+        return self._decode_k_programs[k]
+
+    def _prefill_bucket(self, length: int) -> int:
+        # Recurrent mixers (mamba/rwkv) carry state across EVERY token,
+        # so right-padding a prompt would corrupt the state: use exact
+        # lengths (one compile per distinct length). Attention-only
+        # archs use buckets (lengths mask the padded cache tail).
+        if any(spec.mixer in ("mamba", "rwkv")
+               for pattern, _ in self.model.cfg.stages()
+               for spec in pattern):
+            return length
+        for b in self.prompt_buckets:
+            if length <= b:
+                return b
+        return self.prompt_buckets[-1]
+
+    def _prefill_prog(self, bucket: int):
+        if bucket not in self._prefill_programs:
+            model = self.model
+
+            def prefill_one(params, tokens, length):
+                # tokens [1, bucket]; returns (next_token, cache slice)
+                logits, cache = model.prefill(params, tokens=tokens,
+                                              max_len=self.max_len)
+                del logits
+                pos = length - 1
+                # recompute last VALID logit (bucket padding may exceed
+                # length): cheap decode-free gather via forward logits
+                full_logits, _ = model.forward(params, tokens=tokens)
+                last = jnp.take_along_axis(
+                    full_logits, pos[None, None, None].astype(jnp.int32),
+                    axis=1)[:, 0]
+                nxt = jnp.argmax(last, axis=-1).astype(jnp.int32)
+                return nxt, cache
+
+            self._prefill_programs[bucket] = jax.jit(prefill_one)
+        return self._prefill_programs[bucket]
+
+    # ------------------------------------------------------------------
+    # Event handlers (host side; device work inside)
+    # ------------------------------------------------------------------
+    def _h_arrive(self, state, t, req: Request):
+        self.waiting.append(req)
+        self.queue.push(float(t), PREFILL, None)
+        return state
+
+    def _free_slot(self) -> int:
+        for i, r in enumerate(self.slot_req):
+            if r is None:
+                return i
+        return -1
+
+    def _h_prefill(self, state, t, arg):
+        if not self.waiting:
+            return state
+        slot = self._free_slot()
+        if slot < 0:   # no capacity: retry after the next decode tick
+            self.queue.push(float(t) + 1.0, PREFILL, None)
+            return state
+        req = self.waiting.pop(0)
+        req.slot = slot
+        self.slot_req[slot] = req
+        bucket = self._prefill_bucket(len(req.prompt))
+        toks = jnp.zeros((1, bucket), jnp.int32)
+        toks = toks.at[0, :len(req.prompt)].set(
+            jnp.asarray(req.prompt, jnp.int32))
+        nxt, cache1 = self._prefill_prog(bucket)(
+            self.params, toks, jnp.int32(len(req.prompt)))
+        # splice the single-slot cache into the global slot cache
+        self.cache = _splice_slot(self.cache, cache1, slot)
+        self.cache["lengths"] = self.cache["lengths"].at[slot].set(
+            len(req.prompt))
+        req.output.append(int(nxt[0]))
+        self.stats.prefills += 1
+        return state
+
+    def _pending_tokens_default(self):
+        toks = []
+        for r in self.slot_req:
+            toks.append(r.output[-1] if r is not None and r.output else 0)
+        return jnp.asarray(toks, jnp.int32)[:, None]
+
+    def _active_mask(self):
+        return jnp.asarray(
+            [r is not None and not r.done for r in self.slot_req],
+            dtype=bool)
+
+    def _h_decode_single(self, state, t, arg):
+        """Fallback: one DECODE event executed alone."""
+        self._decode_run(1, float(t))
+        self.stats.singles += 1
+        return state
+
+    def _h_evict(self, state, t, arg):
+        for i, r in enumerate(self.slot_req):
+            if r is not None and r.done:
+                self.slot_req[i] = None
+                self.cache["lengths"] = self.cache["lengths"].at[i].set(0)
+        return state
+
+    # ------------------------------------------------------------------
+    # Decode execution (single or fused run)
+    # ------------------------------------------------------------------
+    def _decode_run(self, k: int, t_end: float):
+        active = self._active_mask()
+        if not bool(active.any()):
+            return
+        tokens = self._pending_tokens_default()
+        prog = self._decode_k(k)
+        self.cache, toks = prog(self.params, self.cache, tokens, active)
+        toks = jax.device_get(toks)              # [slots, k]
+        self.stats.decode_events += k
+        for i, r in enumerate(self.slot_req):
+            if r is None or r.done:
+                continue
+            for j in range(k):
+                r.output.append(int(toks[i, j]))
+                if len(r.output) >= r.max_new_tokens:
+                    r.done = True
+                    r.finish_time = t_end
+                    self.queue.push(t_end, EVICT, None)
+                    break
+
+    # ------------------------------------------------------------------
+    # Main loop: lookahead-window batch extraction (paper §III-B)
+    # ------------------------------------------------------------------
+    def submit(self, rid: int, prompt, max_new_tokens: int, at: float):
+        req = Request(rid=rid, prompt=list(prompt),
+                      max_new_tokens=max_new_tokens, arrival=at)
+        self.requests[rid] = req
+        self.queue.push(at, ARRIVE, req)
+        return req
+
+    def schedule_decode_grid(self, t0: float, t1: float):
+        """Pre-schedule the decode cadence (one event per integer t)."""
+        t = float(t0)
+        while t <= t1:
+            self.queue.push(t, DECODE, None)
+            t += 1.0
+
+    def run(self, *, max_events: int | None = None):
+        t_start = time.perf_counter()
+        processed = 0
+        budget = float("inf") if max_events is None else max_events
+        while self.queue and processed < budget:
+            batch = extract_window(self.queue, self.registry,
+                                   self.max_batch_len)
+            types = [ev.type_id for ev in batch]
+            if all(ty == DECODE for ty in types) and len(batch) > 1:
+                # the composed-batch fast path
+                self._decode_run(len(batch), batch[-1].time)
+                self.stats.fused_batches += 1
+                self.stats.fused_events += len(batch)
+            else:
+                for ev in batch:
+                    et = self.registry[ev.type_id]
+                    et.handler(None, ev.time, ev.arg)
+            processed += len(batch)
+            # stop once every submitted request finished (only the
+            # pre-scheduled decode grid remains in the queue)
+            if self.requests and all(r.done
+                                     for r in self.requests.values()):
+                break
+        self.stats.wall_seconds = time.perf_counter() - t_start
+        return self.stats
+
+
+def _splice_slot(cache, cache1, slot: int):
+    """Write the single-sequence cache1 (batch size 1) into ``slot`` of
+    the multi-slot cache (same structure, batch dim 1 vs max_slots)."""
+    def splice(big, small):
+        if big.ndim < 2:
+            return big
+        # batch dim is axis 1 for stage leaves [L, B, ...]
+        return big.at[:, slot].set(small[:, 0].astype(big.dtype))
+
+    new_stages = jax.tree.map(splice, cache["stages"], cache1["stages"])
+    return {"stages": new_stages, "lengths": cache["lengths"]}

@@ -1,0 +1,123 @@
+"""Optimizer: AdamW with mixed-precision discipline + LR schedules.
+
+Hand-rolled (no optax dependency): params may be bf16; first/second
+moments and the update math are fp32; weight decay is decoupled.  The
+optimizer state pytree mirrors the param tree, so the FSDP shardings of
+the params apply leaf-for-leaf to ``m`` and ``v`` (ZeRO-style sharded
+optimizer state for free under GSPMD).
+
+Schedules: cosine (default) and WSD (warmup-stable-decay), the MiniCPM
+schedule the minicpm-2b config calls for.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    schedule: str = "cosine"      # constant | cosine | wsd
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    stable_frac: float = 0.9      # WSD: fraction of steps at peak lr
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def schedule_lr(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "constant":
+        mult = jnp.float32(1.0)
+    elif cfg.schedule == "cosine":
+        t = jnp.clip((step - cfg.warmup_steps) /
+                     jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                     0.0, 1.0)
+        mult = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    elif cfg.schedule == "wsd":
+        # Warmup -> Stable (peak lr) -> exponential-ish Decay tail.
+        stable_end = cfg.warmup_steps + cfg.stable_frac * (
+            cfg.total_steps - cfg.warmup_steps)
+        t = jnp.clip((step - stable_end) /
+                     jnp.maximum(cfg.total_steps - stable_end, 1), 0.0, 1.0)
+        mult = jnp.where(step < stable_end, 1.0, 0.5 ** (t * 10.0))
+    else:
+        raise ValueError(cfg.schedule)
+    return cfg.lr * warm * mult
+
+
+def global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+_NO_DECAY_TOKENS = ("norm", "scale", "bias", "decay_base", "bonus_u",
+                    "dt_bias", "A_log", "mix")
+
+
+def _decay_mask(path: str) -> bool:
+    return not any(tok in path for tok in _NO_DECAY_TOKENS)
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, opt_state):
+    """Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    lr = schedule_lr(cfg, step)
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    flat_p, treedef = jax.tree_util.tree_flatten_with_path(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt_state["m"])
+    flat_v = jax.tree.leaves(opt_state["v"])
+
+    new_p, new_m, new_v = [], [], []
+    for (path, p), g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
+        pathstr = jax.tree_util.keystr(path)
+        gf = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * gf
+        v = b2 * v + (1 - b2) * jnp.square(gf)
+        update = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        if _decay_mask(pathstr):
+            update = update + cfg.weight_decay * p.astype(jnp.float32)
+        pnew = p.astype(jnp.float32) - lr * update
+        new_p.append(pnew.astype(p.dtype))
+        new_m.append(m)
+        new_v.append(v)
+
+    unflatten = jax.tree_util.tree_unflatten
+    params = unflatten(treedef, new_p)
+    opt_state = {
+        "m": unflatten(treedef, new_m),
+        "v": unflatten(treedef, new_v),
+        "step": step,
+    }
+    return params, opt_state, {"lr": lr, "grad_norm": gnorm}

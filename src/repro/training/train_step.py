@@ -1,0 +1,117 @@
+"""The training step: loss -> grad -> AdamW, with microbatching + remat.
+
+``make_train_step`` returns a pure ``(state, batch) -> (state, metrics)``
+suitable for ``jax.jit`` under a mesh.  Gradient accumulation runs as a
+``lax.scan`` over microbatches (bounding activation memory to one
+microbatch), with fp32 accumulators; the optimizer applies once per
+global step.  Remat (full ``nothing_saveable`` per scanned layer) is on
+by default for the large train shapes.
+
+TrainState is a plain dict pytree: {"params", "opt", ["ef"]} — the
+error-feedback buffer appears only when gradient compression is on.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import LM
+from repro.training.optim import AdamWConfig, adamw_init, adamw_update
+
+
+def init_train_state(model: LM, key, *, compression: bool = False):
+    params = model.init(key)
+    state = {"params": params, "opt": adamw_init(params)}
+    if compression:
+        from repro.training.compression import error_feedback_init
+        state["ef"] = error_feedback_init(params)
+    return state
+
+
+def _split_microbatches(batch, num_micro: int):
+    """Split the global batch into scan-able microbatches, STRIDED.
+
+    ``x.reshape(num_micro, per, ...)`` would place the DP-sharded batch
+    dim onto the microbatch axis — every microbatch then lives on one
+    data shard and GSPMD replicates the whole forward pass (a 16x
+    executed-FLOP regression caught by the HLO cost model; EXPERIMENTS
+    §Perf).  Reshaping to [per, num_micro] and swapping axes assigns
+    element (m, k) = global index m + num_micro·k: each microbatch takes
+    one slice from EVERY data shard, so the batch dim stays sharded.
+
+    m_rope 'positions' [3, B, T] split along dim 1.
+    """
+    def split(x, axis=0):
+        b = x.shape[axis]
+        if b % num_micro:
+            raise ValueError(f"batch {b} not divisible by {num_micro}")
+        per = b // num_micro
+        new = x.shape[:axis] + (per, num_micro) + x.shape[axis + 1:]
+        return jnp.moveaxis(x.reshape(new), axis + 1, 0)
+
+    def split_leaf(path, x):
+        name = jax.tree_util.keystr(path)
+        if "positions" in name and x.ndim == 3:
+            return split(x, axis=1)
+        return split(x, axis=0)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(batch)
+    return jax.tree_util.tree_unflatten(
+        treedef, [split_leaf(p, l) for p, l in flat])
+
+
+def make_train_step(model: LM, opt_cfg: AdamWConfig, *,
+                    num_microbatches: int = 1, remat: bool = True):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def loss_fn(params, micro):
+        return model.loss(params, micro, remat=remat)
+
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if num_microbatches == 1:
+            loss, grads = grad_fn(params, batch)
+        else:
+            micros = _split_microbatches(batch, num_microbatches)
+
+            def acc_step(carry, micro):
+                loss_acc, grads_acc = carry
+                loss, grads = grad_fn(params, micro)
+                grads_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32),
+                    grads_acc, grads)
+                return (loss_acc + loss, grads_acc), None
+
+            zero_grads = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                acc_step, (jnp.float32(0.0), zero_grads), micros)
+            inv = 1.0 / num_microbatches
+            loss = loss * inv
+            grads = jax.tree.map(lambda g: g * inv, grads)
+
+        if "ef" in state:
+            from repro.training.compression import (
+                apply_error_feedback, compress_residual)
+            grads = apply_error_feedback(grads, state["ef"])
+            pairs = jax.tree.map(compress_residual, grads)
+            grads = jax.tree.map(lambda p: p[0], pairs,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+            new_ef = jax.tree.map(lambda p: p[1], pairs,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+
+        params, opt, metrics = adamw_update(opt_cfg, params, grads,
+                                            state["opt"])
+        new_state = {"params": params, "opt": opt}
+        if "ef" in state:
+            new_state["ef"] = new_ef
+        metrics["loss"] = loss
+        return new_state, metrics
+
+    return train_step

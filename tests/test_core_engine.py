@@ -1,0 +1,211 @@
+"""End-to-end tests of the DES core on the paper's PoC model."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import poc
+from repro.core import (
+    DeviceEngine,
+    EventRegistry,
+    HostEventQueue,
+    Simulator,
+    emits_events,
+    extract_window,
+    run_unbatched,
+)
+
+ITERS = 64  # small loop for tests; still > 32 so the closed form saturates
+
+
+def make_sim(**kw):
+    reg = poc.build_registry(iters=ITERS)
+    return Simulator(reg, **kw)
+
+
+def schedule_all(sim, types):
+    for t, ty in enumerate(types):
+        sim.queue.push(float(t), int(ty))
+
+
+TYPES_MIXED = [poc.INCREMENT, poc.SET, poc.INCREMENT, poc.INCREMENT,
+               poc.SET, poc.SET, poc.INCREMENT]
+
+
+@pytest.mark.parametrize("mode", ["conservative", "speculative", "unbatched"])
+@pytest.mark.parametrize("codec", ["dense", "paper"])
+def test_host_modes_match_oracle(mode, codec):
+    sim = make_sim(max_batch_len=3, codec=codec)
+    schedule_all(sim, TYPES_MIXED)
+    state, stats = sim.run(poc.initial_state(), mode=mode)
+    assert int(state) == poc.reference_final_sum(TYPES_MIXED, ITERS)
+    assert stats.events_executed == len(TYPES_MIXED)
+    if mode != "unbatched":
+        # infinite-lookahead PoC events -> all batches are maximal
+        assert stats.batches_executed == -(-len(TYPES_MIXED) // 3)
+
+
+def test_batched_equals_unbatched_random():
+    rng = np.random.default_rng(0)
+    types = [int(t) for t in (rng.random(40) < 0.4).astype(int)]
+    sim_b = make_sim(max_batch_len=4)
+    schedule_all(sim_b, types)
+    sb, _ = sim_b.run(poc.initial_state(), mode="conservative")
+    sim_u = make_sim(max_batch_len=4)
+    schedule_all(sim_u, types)
+    su, _ = sim_u.run(poc.initial_state(), mode="unbatched")
+    assert int(sb) == int(su) == poc.reference_final_sum(types, ITERS)
+
+
+def test_lookahead_window_limits_batch():
+    """Events outside the dynamic lookahead window must not be batched."""
+    reg = EventRegistry()
+    log = []
+
+    def h(state, t, arg):
+        return state + 1
+
+    reg.register("A", h, lookahead=1.5)  # t_max = t_first + 1.5
+    reg.freeze()
+    q = HostEventQueue()
+    for t in [0.0, 1.0, 2.0, 3.0]:
+        q.push(t, 0)
+    batch = extract_window(q, reg, max_len=4)
+    # e@0 -> t_max = 0+1.5 = 1.5; e@1 <= 1.5 extracted (t_max stays 1.5);
+    # e@2 > 1.5 closes the window.
+    assert [ev.time for ev in batch] == [0.0, 1.0]
+    del log
+
+
+def test_emitted_events_are_scheduled():
+    """Self-scheduling handler: each A at t emits another A at t+2."""
+    reg = EventRegistry()
+
+    @emits_events
+    def a(state, t, arg):
+        return state + 1, [(2.0, 0, None)]
+
+    reg.register("A", a, lookahead=2.0)
+    sim = Simulator(reg, max_batch_len=2)
+    sim.queue.push(0.0, 0)
+    state, stats = sim.run(jnp.int32(0), max_events=5)
+    assert int(state) == 5
+    assert stats.final_time == 8.0  # 0,2,4,6,8
+
+
+def test_causality_check_fires():
+    from repro.core.scheduler import ConservativeScheduler
+
+    reg = EventRegistry()
+
+    @emits_events
+    def bad(state, t, arg):
+        return state, [(-5.0, 0, None)]  # violates its declared lookahead
+
+    reg.register("Bad", bad, lookahead=10.0)
+    sim = Simulator(reg, max_batch_len=2)
+    sched = ConservativeScheduler(sim.registry, sim.composer, check_causality=True)
+    q = HostEventQueue()
+    q.push(0.0, 0)
+    q.push(1.0, 0)
+    with pytest.raises(RuntimeError, match="causality"):
+        sched.run(jnp.int32(0), q)
+
+
+def test_speculative_rollback_matches_sequential():
+    """A model where speculation must roll back: event B emits an event
+    that lands between already-extracted events."""
+    reg = EventRegistry()
+
+    @emits_events
+    def emitter(state, t, arg):
+        # emits at +0.5: inside the next integer slot
+        return state * 2 + 1, [(0.5, 1, None)]
+
+    def absorber(state, t, arg):
+        return state * 3
+
+    reg.register("E", emitter, lookahead=0.5)
+    reg.register("Ab", absorber, lookahead=10.0)
+
+    def build_queue():
+        q = HostEventQueue()
+        q.push(0.0, 0)
+        q.push(1.0, 1)
+        q.push(2.0, 1)
+        return q
+
+    sim = Simulator(reg, max_batch_len=3)
+    from repro.core.scheduler import SpeculativeScheduler, run_unbatched
+
+    spec = SpeculativeScheduler(sim.registry, sim.composer)
+    s_spec, st_spec = spec.run(jnp.int32(0), build_queue(), max_events=16)
+    s_seq, _ = run_unbatched(sim.registry, jnp.int32(0), build_queue(),
+                             max_events=16)
+    assert int(s_spec) == int(s_seq)
+
+
+def test_eager_composer_precompiles_all():
+    reg = poc.build_registry(iters=ITERS)
+    sim = Simulator(
+        reg,
+        max_batch_len=2,
+        codec="dense",
+        composer="eager",
+        state_spec=jax.ShapeDtypeStruct((), jnp.uint32),
+        arg_spec=None,
+    )
+    assert sim.composer.num_composed == 2 + 4  # Σ^1 + Σ^2
+    schedule_all(sim, TYPES_MIXED)
+    state, _ = sim.run(poc.initial_state(), mode="conservative")
+    assert int(state) == poc.reference_final_sum(TYPES_MIXED, ITERS)
+
+
+# ---------------------------------------------------------------------------
+# On-device engine
+# ---------------------------------------------------------------------------
+
+def test_device_engine_poc_matches_oracle():
+    reg = poc.build_registry(iters=ITERS)
+    eng = DeviceEngine(reg, max_batch_len=3, capacity=64)
+    types = TYPES_MIXED
+    queue = eng.initial_queue([(float(t), ty, None) for t, ty in enumerate(types)])
+    state, queue, stats = eng.run(poc.initial_state(), queue)
+    assert int(state) == poc.reference_final_sum(types, ITERS)
+    assert int(stats["events"]) == len(types)
+    assert int(stats["batches"]) == -(-len(types) // 3)
+    assert int(queue.size) == 0
+
+
+def test_device_engine_emitting_handlers():
+    """On-device self-scheduling: A at t emits A at t+2, runs to budget."""
+    from repro.core.events import ARG_WIDTH
+
+    reg = EventRegistry()
+
+    @emits_events
+    def a(state, t, arg):
+        emit = jnp.zeros((1, 2 + ARG_WIDTH), jnp.float32)
+        emit = emit.at[0, 0].set(t + 2.0).at[0, 1].set(0.0)
+        return state + 1, emit
+
+    reg.register("A", a, lookahead=2.0)
+    eng = DeviceEngine(reg, max_batch_len=2, capacity=32, max_emit=1)
+    queue = eng.initial_queue([(0.0, 0, None)])
+    state, queue, stats = eng.run(jnp.int32(0), queue, max_batches=5)
+    assert int(state) == 5
+    assert float(stats["time"]) == 8.0
+
+
+def test_device_engine_respects_lookahead():
+    """Two-type model where the window closes after 2 events."""
+    reg = EventRegistry()
+    reg.register("Short", lambda s, t, a: s + 1, lookahead=1.0)
+    reg.register("Long", lambda s, t, a: s + 100, lookahead=100.0)
+    eng = DeviceEngine(reg, max_batch_len=4, capacity=32)
+    # events at t=0 (Short, la=1) -> window closes at 1.0; t=2 not batched
+    queue = eng.initial_queue([(0.0, 0, None), (0.5, 1, None), (2.0, 1, None)])
+    state, queue, stats = eng.run(jnp.int32(0), queue)
+    assert int(state) == 201
+    assert int(stats["batches"]) == 2  # [Short,Long] then [Long]

@@ -1,0 +1,303 @@
+"""Substrate tests: optimizer, data, checkpointing, compression,
+supervisor fault handling, serving engine."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, make_batch, shard_slice
+from repro.models import LM
+from repro.training.compression import (
+    apply_error_feedback,
+    compress_residual,
+    dequantize_int8,
+    error_feedback_init,
+    quantize_int8,
+)
+from repro.training.optim import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    schedule_lr,
+)
+from repro.training.train_step import init_train_state, make_train_step
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_descends_quadratic():
+    params = {"w": jnp.asarray([3.0, -2.0]), "scale": jnp.asarray([1.0])}
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, schedule="constant",
+                      warmup_steps=0)
+    opt = adamw_init(params)
+    for _ in range(200):
+        grads = jax.tree.map(lambda p: 2 * p, params)  # d/dp p^2
+        params, opt, m = adamw_update(cfg, params, grads, opt)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+
+
+def test_weight_decay_mask():
+    """Norm scales and biases must not be decayed."""
+    params = {"w": jnp.ones((2,)), "mixer_norm": {"scale": jnp.ones((2,))}}
+    cfg = AdamWConfig(lr=0.0, weight_decay=1.0, schedule="constant")
+    # lr=0: updates are identically zero; this is a smoke check on paths
+    opt = adamw_init(params)
+    p2, _, _ = adamw_update(cfg, params,
+                            jax.tree.map(jnp.zeros_like, params), opt)
+    assert jnp.allclose(p2["mixer_norm"]["scale"], 1.0)
+
+
+def test_wsd_schedule_shape():
+    cfg = AdamWConfig(lr=1.0, schedule="wsd", warmup_steps=10,
+                      total_steps=100, stable_frac=0.8)
+    lrs = [float(schedule_lr(cfg, jnp.int32(s))) for s in range(101)]
+    assert lrs[0] == 0.0
+    assert abs(lrs[10] - 1.0) < 1e-6          # end of warmup
+    assert abs(lrs[50] - 1.0) < 1e-6          # stable plateau
+    assert lrs[100] < 0.25 * lrs[50]          # decay tail
+    cfg2 = AdamWConfig(lr=1.0, schedule="cosine", warmup_steps=10,
+                       total_steps=100)
+    lrs2 = [float(schedule_lr(cfg2, jnp.int32(s))) for s in (10, 55, 100)]
+    assert lrs2[0] > lrs2[1] > lrs2[2] >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_data_deterministic_and_restart_safe():
+    cfg = DataConfig(vocab_size=1000, seq_len=16, global_batch=8, seed=3)
+    b1 = make_batch(cfg, 7)
+    b2 = make_batch(cfg, 7)
+    assert jnp.array_equal(b1["tokens"], b2["tokens"])
+    b3 = make_batch(cfg, 8)
+    assert not jnp.array_equal(b1["tokens"], b3["tokens"])
+    assert int(b1["tokens"].max()) < 1000
+
+
+def test_data_shard_slices_partition_global_batch():
+    cfg = DataConfig(vocab_size=100, seq_len=4, global_batch=8)
+    full = make_batch(cfg, 0)
+    parts = [shard_slice(cfg, 0, s, 4)["tokens"] for s in range(4)]
+    assert jnp.array_equal(jnp.concatenate(parts, 0), full["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# checkpoint manager
+# ---------------------------------------------------------------------------
+
+def _tree():
+    return {
+        "a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "b": {"c": jnp.ones((4,), jnp.bfloat16) * 1.5,
+              "step": jnp.int32(7)},
+    }
+
+
+def test_checkpoint_roundtrip_bf16(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    tree = _tree()
+    mgr.save(3, tree)
+    template = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    restored, step = mgr.restore(template)
+    assert step == 3
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_async_and_retention(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_last=2)
+    for s in (1, 2, 3, 4):
+        mgr.save_async(s, _tree())
+    mgr.wait()
+    assert mgr.all_steps() == [3, 4]
+
+
+def test_checkpoint_integrity_check(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    path = mgr.save(1, _tree())
+    # corrupt one leaf
+    victim = os.path.join(path, "a.npy")
+    arr = np.load(victim)
+    arr[0, 0] += 1
+    np.save(victim, arr)
+    template = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), _tree())
+    with pytest.raises(IOError, match="checksum"):
+        mgr.restore(template)
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 5))
+@settings(max_examples=6, deadline=None)
+def test_quantize_roundtrip_error_bound(seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (256,)) * 10
+    q, s = quantize_int8(x)
+    err = jnp.abs(dequantize_int8(q, s) - x)
+    assert float(err.max()) <= float(s) * 0.5 + 1e-6
+
+
+def test_error_feedback_preserves_signal():
+    """Sum of (compressed + residual) over steps equals the true sum —
+    error feedback loses nothing asymptotically."""
+    key = jax.random.PRNGKey(0)
+    grads = [jax.random.normal(jax.random.fold_in(key, i), (64,)) * 0.01
+             for i in range(20)]
+    ef = jnp.zeros((64,))
+    sent_total = jnp.zeros((64,))
+    for g in grads:
+        comp = g + ef
+        sent, ef = compress_residual(comp)
+        sent_total = sent_total + sent
+    true_total = sum(grads)
+    # all that is missing is the final residual
+    np.testing.assert_allclose(np.asarray(sent_total + ef),
+                               np.asarray(true_total), rtol=1e-4, atol=1e-5)
+
+
+def test_train_step_with_compression_descends():
+    cfg = get_config("granite-moe-1b-a400m").reduced()
+    model = LM(cfg)
+    state = init_train_state(model, jax.random.PRNGKey(0),
+                             compression=True)
+    assert "ef" in state
+    step = jax.jit(make_train_step(model, AdamWConfig(lr=1e-3),
+                                   num_microbatches=2, remat=False))
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=16, global_batch=4)
+    losses = []
+    for i in range(6):
+        state, metrics = step(state, make_batch(dc, i))
+        losses.append(float(metrics["loss"]))
+    assert np.isfinite(losses).all()
+
+
+# ---------------------------------------------------------------------------
+# microbatching consistency
+# ---------------------------------------------------------------------------
+
+def test_microbatched_grads_match_full_batch():
+    cfg = get_config("stablelm-12b").reduced()
+    model = LM(cfg)
+    state = init_train_state(model, jax.random.PRNGKey(1))
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=16, global_batch=8)
+    batch = make_batch(dc, 0)
+    s1 = jax.jit(make_train_step(model, AdamWConfig(), num_microbatches=1,
+                                 remat=False))
+    s4 = jax.jit(make_train_step(model, AdamWConfig(), num_microbatches=4,
+                                 remat=False))
+    _, m1 = s1(state, batch)
+    _, m4 = s4(state, batch)
+    assert abs(float(m1["loss"]) - float(m4["loss"])) < 2e-2
+    assert abs(float(m1["grad_norm"]) - float(m4["grad_norm"])) < 5e-2
+
+
+# ---------------------------------------------------------------------------
+# supervisor
+# ---------------------------------------------------------------------------
+
+def test_supervisor_crash_recovery(tmp_path):
+    from repro.runtime.supervisor import (
+        FailureEvent, FailureInjector, TrainSupervisor)
+
+    cfg = get_config("stablelm-12b").reduced()
+    model = LM(cfg)
+    opt_cfg = AdamWConfig(lr=1e-3)
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=8, global_batch=2)
+
+    def make_step(n):
+        return jax.jit(make_train_step(model, opt_cfg))
+
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    sup = TrainSupervisor(
+        make_step=make_step, make_batch=lambda s: make_batch(dc, s),
+        init_state=state, ckpt=CheckpointManager(str(tmp_path)),
+        ckpt_every=4,
+        injector=FailureInjector([
+            FailureEvent(step=6, kind="crash"),
+            FailureEvent(step=9, kind="slow_node", node=0),
+        ]))
+    report = sup.run(12)
+    assert report.restarts == 1
+    assert report.straggler_mitigations == 1
+    assert int(sup.state["opt"]["step"]) == 12
+    # crash at 6 restores ckpt@4 and replays 4..6: extra steps run
+    assert report.steps_run == 12 + 2
+    assert np.isfinite(report.final_loss)
+
+
+# ---------------------------------------------------------------------------
+# serving engine (DES-driven continuous batching)
+# ---------------------------------------------------------------------------
+
+def test_serving_engine_fuses_decode_runs():
+    cfg = get_config("stablelm-12b").reduced()
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    from repro.serving.engine import ServingEngine
+
+    eng = ServingEngine(model, params, max_slots=2, max_len=64,
+                        max_batch_len=4, arrival_lookahead=5.0)
+    eng.submit(0, [5, 6, 7], max_new_tokens=6, at=0.0)
+    eng.submit(1, [8, 9], max_new_tokens=6, at=6.0)
+    eng.schedule_decode_grid(1.0, 40.0)
+    stats = eng.run()
+    assert all(r.done for r in eng.requests.values())
+    assert stats.fused_batches > 0, "no decode runs were batch-fused"
+    assert stats.mean_fused_length > 1.5
+    for r in eng.requests.values():
+        assert len(r.output) == 6
+
+
+def test_serving_fused_matches_single_step_decode():
+    """The composed k-step program must produce the same tokens as k
+    single steps (cross-event fusion is an optimization, not a change
+    in semantics)."""
+    cfg = get_config("stablelm-12b").reduced()
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    from repro.serving.engine import ServingEngine
+
+    def serve(max_batch_len):
+        eng = ServingEngine(model, params, max_slots=1, max_len=64,
+                            max_batch_len=max_batch_len,
+                            arrival_lookahead=3.0)
+        eng.submit(0, [11, 12, 13, 14], max_new_tokens=8, at=0.0)
+        eng.schedule_decode_grid(1.0, 30.0)
+        eng.run()
+        return eng.requests[0].output
+
+    assert serve(1) == serve(4)
+
+
+def test_serving_slot_exhaustion_queues_requests():
+    """More requests than slots: later arrivals wait for evictions and
+    still complete (the PREFILL retry path)."""
+    cfg = get_config("stablelm-12b").reduced()
+    model = LM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    from repro.serving.engine import ServingEngine
+
+    eng = ServingEngine(model, params, max_slots=1, max_len=64,
+                        max_batch_len=3, arrival_lookahead=2.0)
+    for rid in range(3):
+        eng.submit(rid, [5 + rid, 6], max_new_tokens=3, at=float(rid))
+    eng.schedule_decode_grid(1.0, 60.0)
+    eng.run()
+    assert all(r.done for r in eng.requests.values())
+    finish = [eng.requests[r].finish_time for r in range(3)]
+    assert finish[0] < finish[1] < finish[2]  # served in order
