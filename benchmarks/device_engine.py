@@ -1,20 +1,42 @@
-"""Beyond-paper: fully on-device DES vs host-driven dispatch.
+"""Beyond-paper: fully on-device DES vs host-driven dispatch, plus the
+per-batch scheduling-overhead split (extract / dispatch / insert).
 
-The TPU-native adaptation (DESIGN.md §2) compiles the WHOLE simulation
-— queue, lookahead window, Horner encode, lax.switch dispatch — into one
-XLA program.  This benchmark measures events/second of the on-device
-engine against the host-driven batched scheduler on the PoC model.
+Two measurements:
+
+* ``run``  — events/second of the on-device engine against the
+  host-driven batched scheduler on the PoC model (as in the seed).
+
+* ``scheduling_overhead`` — the cost of the queue machinery itself, on
+  a trivial-handler workload (each event bumps a counter and emits one
+  far-future event, so per-batch time is almost pure scheduling): the
+  vectorized single-pass queue ops (sorted-prefix extract + counting
+  merge insert) against the seed per-event reference ops
+  (serial peek/pop argmin chains + one-at-a-time pushes), whole-run
+  per-batch and per-op.  Results land in ``BENCH_device_engine.json``
+  at the repo root so future PRs have a perf trajectory to track.
 """
 
 from __future__ import annotations
 
+import json
 import time
+from pathlib import Path
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro import poc
-from repro.core import DeviceEngine, Simulator
+from repro.core import DeviceEngine, EventRegistry, Simulator, emits_events
+from repro.core.events import ARG_WIDTH
+from repro.core.queue import (
+    device_queue_extract,
+    device_queue_extract_ref,
+    device_queue_fill_rows,
+    device_queue_push_rows,
+)
+
+JSON_PATH = Path(__file__).resolve().parents[1] / "BENCH_device_engine.json"
 
 
 def run(quick: bool = False):
@@ -61,13 +83,148 @@ def run(quick: bool = False):
     }
 
 
+def _trivial_registry():
+    """One trivial emitting type: bump a counter, emit one event far in
+    the future (keeps the queue at steady occupancy, so every batch
+    pays full-queue scheduling cost)."""
+    reg = EventRegistry()
+
+    @emits_events
+    def tick(state, t, arg):
+        emit = jnp.zeros((1, 2 + ARG_WIDTH), jnp.float32)
+        emit = emit.at[0, 0].set(t + 1e6).at[0, 1].set(0.0)
+        return state + 1, emit
+
+    reg.register("Tick", tick, lookahead=1e6)
+    return reg.freeze()
+
+
+def _bench_op_loop(step, init, iters):
+    """µs per application of ``step``, chained in one jitted fori_loop
+    (matches how the ops run inside the engine — per-call dispatch
+    overhead would otherwise dominate and invert the comparison)."""
+    looped = jax.jit(
+        lambda init: jax.lax.fori_loop(0, iters, lambda i, c: step(c), init)
+    )
+    jax.block_until_ready(looped(init))
+    best = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        out = looped(init)
+        jax.block_until_ready(out)
+        best = min(best, (time.perf_counter() - t0) / iters)
+    return best * 1e6
+
+
+def scheduling_overhead(quick: bool = False):
+    capacity = 1024 if quick else 4096
+    max_len = 16
+    max_batches = 128 if quick else 512
+    num_events = capacity - 2 * max_len
+    events = [(float(t), 0, None) for t in range(num_events)]
+
+    per_batch = {}
+    engines = {}
+    for name, vec in (("vectorized", True), ("reference", False)):
+        reg = _trivial_registry()
+        eng = DeviceEngine(reg, max_batch_len=max_len, capacity=capacity,
+                           max_emit=1, use_vectorized_queue=vec)
+        engines[name] = eng
+        q = eng.initial_queue(events)
+        eng.run(jnp.int32(0), q, max_batches=max_batches)  # warm
+        best = float("inf")
+        for _ in range(3):
+            q = eng.initial_queue(events)
+            t0 = time.perf_counter()
+            s, _q, stats = eng.run(jnp.int32(0), q, max_batches=max_batches)
+            jax.block_until_ready(s)
+            best = min(best, time.perf_counter() - t0)
+        per_batch[name] = best / int(stats["batches"]) * 1e6
+
+    # Per-op split: each op chained in its own fused loop, from a
+    # representative steady state.
+    eng = engines["vectorized"]
+    la = eng._lookaheads
+    q_full = eng.initial_queue(events)
+    q_half = eng.initial_queue(events[: num_events // 2])
+    rows = np.full((max_len, 2 + ARG_WIDTH), -1.0, np.float32)
+    rows[:, 0] = np.arange(max_len) + float(num_events)
+    rows[:, 1] = 0.0
+    rows = jnp.asarray(rows)
+    _, ts, tys, args, length = device_queue_extract(q_full, max_len, la)
+    code = eng.codec.encode_jnp(tys, length)
+    state0 = jnp.int32(0)
+
+    # Iteration counts keep the extract loop from draining the queue and
+    # the insert loop from overflowing it.
+    ex_iters = max(1, (num_events - max_len) // max_len)
+    in_iters = max(1, (capacity - num_events // 2 - max_len) // max_len)
+    phase = {
+        "extract": {
+            "vectorized": _bench_op_loop(
+                lambda q: device_queue_extract(q, max_len, la)[0],
+                q_full, ex_iters),
+            "reference": _bench_op_loop(
+                lambda q: device_queue_extract_ref(q, max_len, la)[0],
+                q_full, ex_iters),
+        },
+        "insert": {
+            "vectorized": _bench_op_loop(
+                lambda q: device_queue_fill_rows(q, rows), q_half, in_iters),
+            "reference": _bench_op_loop(
+                lambda q: device_queue_push_rows(q, rows), q_half, in_iters),
+        },
+        "dispatch": {
+            "shared": _bench_op_loop(
+                lambda s: eng.dispatch(code, s, ts, tys, args)[0],
+                state0, 256),
+        },
+    }
+
+    result = {
+        "workload": {
+            "description": "trivial emitting handler (counter + 1 far-future"
+                           " emit); per-batch time ~= scheduling overhead",
+            "capacity": capacity,
+            "max_batch_len": max_len,
+            "max_emit": 1,
+            "num_seed_events": num_events,
+            "batches_timed": max_batches,
+        },
+        "per_batch_us": {
+            **per_batch,
+            "speedup": per_batch["reference"] / per_batch["vectorized"],
+        },
+        "per_op_us": phase,
+    }
+    return result
+
+
 def main(quick: bool = False):
+    sched = scheduling_overhead(quick=quick)
     r = run(quick=quick)
+    payload = {"host_vs_device": r, "scheduling_overhead": sched}
+    if quick:
+        # Quick mode uses a smaller workload — don't clobber the
+        # recorded full-run perf baseline future PRs track.
+        print("quick mode: not overwriting", JSON_PATH.name)
+    else:
+        JSON_PATH.write_text(json.dumps(payload, indent=2) + "\n")
     print("events,host_us_per_event,device_us_per_event,device_speedup")
     print(f"{r['events']},{r['host_us_per_event']:.1f},"
           f"{r['device_us_per_event']:.1f},{r['device_speedup']:.2f}")
+    pb = sched["per_batch_us"]
+    print(f"scheduling us/batch: vectorized={pb['vectorized']:.1f} "
+          f"reference={pb['reference']:.1f} speedup={pb['speedup']:.2f}x "
+          f"(capacity={sched['workload']['capacity']}, "
+          f"k={sched['workload']['max_batch_len']})")
+    if not quick:
+        print(f"wrote {JSON_PATH}")
+    r = dict(r)
+    r["sched_speedup"] = pb["speedup"]
     return r
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+    main(quick="--quick" in sys.argv)

@@ -53,7 +53,8 @@ def main() -> None:
         elif name.startswith("serving") and result:
             derived = f"fusion_speedup_k8={result[-1]['speedup_vs_k1']:.2f}"
         elif name.startswith("device_engine") and result:
-            derived = f"device_speedup={result['device_speedup']:.2f}"
+            derived = (f"device_speedup={result['device_speedup']:.2f};"
+                       f"sched_speedup={result['sched_speedup']:.2f}")
         summary.append((name, dt * 1e6, derived))
     print("\n===== summary =====")
     print("name,us_per_call,derived")

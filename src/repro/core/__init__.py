@@ -27,20 +27,30 @@ from repro.core.events import ARG_WIDTH, Event, EventRegistry, EventType, emits_
 from repro.core.queue import (
     DeviceQueue,
     HostEventQueue,
+    device_queue_extract,
+    device_queue_extract_ref,
+    device_queue_fill_rows,
+    device_queue_from_host,
     device_queue_init,
     device_queue_peek,
     device_queue_pop,
     device_queue_push,
     device_queue_push_rows,
+    window_prefix_mask,
 )
 from repro.core.scheduler import (
     ConservativeScheduler,
     RunStats,
     SpeculativeScheduler,
     extract_window,
+    extract_window_presorted,
     run_unbatched,
 )
-from repro.core.vectorize import is_single_type_run, make_run_handler
+from repro.core.vectorize import (
+    is_single_type_run,
+    make_masked_run_handler,
+    make_run_handler,
+)
 
 __all__ = [
     "ARG_WIDTH",
@@ -61,6 +71,10 @@ __all__ = [
     "build_switch_dispatcher",
     "compose_word_fn",
     "dense_batch_count",
+    "device_queue_extract",
+    "device_queue_extract_ref",
+    "device_queue_fill_rows",
+    "device_queue_from_host",
     "device_queue_init",
     "device_queue_peek",
     "device_queue_pop",
@@ -68,9 +82,12 @@ __all__ = [
     "device_queue_push_rows",
     "emits_events",
     "extract_window",
+    "extract_window_presorted",
     "is_single_type_run",
     "make_codec",
+    "make_masked_run_handler",
     "make_run_handler",
+    "window_prefix_mask",
     "paper_batch_count",
     "redundant_batch_count",
     "run_unbatched",

@@ -26,7 +26,10 @@ Handlers follow the conventions of :mod:`repro.core.events`.  Emitted
 events are buffered and returned to the caller *after* the whole batch
 has run — the paper's §IV.D "postponing the scheduling of all new events
 to the end of a batch execution" optimization (always on here; the
-unbatched baseline in benchmarks/ inserts eagerly).
+unbatched baseline in benchmarks/ inserts eagerly).  Each buffered
+emission carries the in-batch index of its emitting event, so schedulers
+anchor the new event at the emitter's timestamp — results never depend
+on how events were grouped into batches.
 """
 
 from __future__ import annotations
@@ -51,7 +54,11 @@ def compose_word_fn(registry: EventRegistry, word: Sequence[int]) -> Callable:
     Returns ``fn(state, ts, args) -> (state, emitted)`` where ``ts`` is a
     length-``len(word)`` sequence of timestamps and ``args`` the matching
     handler arguments.  ``emitted`` is the Python list of events created
-    by any handler, in execution order (deferred scheduling, §IV.D).
+    by any handler, in execution order (deferred scheduling, §IV.D), as
+    ``(src, delay, type_id, arg)`` tuples where ``src`` is the index
+    within the batch of the emitting event — schedulers anchor the new
+    event at ``ts[src] + delay``, so emission times do not depend on how
+    events were grouped into batches.
     """
     types = [registry[t] for t in word]
 
@@ -62,7 +69,7 @@ def compose_word_fn(registry: EventRegistry, word: Sequence[int]) -> Callable:
             state, new = normalize_handler_result(
                 result, returns_events=et.returns_events
             )
-            emitted.extend(new)
+            emitted.extend((i, delay, ty, a) for (delay, ty, a) in new)
         return state, emitted
 
     batch_fn.__name__ = "batch_" + "_".join(t.name for t in types)
@@ -247,4 +254,7 @@ def build_switch_dispatcher(
     dispatch.max_emit = max_emit
     dispatch.emit_rows = emit_rows
     dispatch.emit_width = emit_width
+    # Layout helper for callers (e.g. the engine's vmapped run path and
+    # the bulk scatter insert) that need a no-emission block.
+    dispatch.empty_emits = _empty_emits
     return dispatch

@@ -7,13 +7,25 @@ Two runtimes (DESIGN.md §2):
   programs — the direct analogue of the paper's function-pointer
   dispatch.
 
-* **Device runtime** (TPU-native adaptation): :func:`run_on_device`
+* **Device runtime** (TPU-native adaptation): :class:`DeviceEngine`
   compiles the ENTIRE simulation — queue, lookahead-window extraction,
   Horner encoding, batch dispatch — into one XLA program built around
   ``lax.while_loop`` + ``lax.switch``.  Every composed batch body is a
   contiguous fragment inside that module, so XLA applies cross-event
   optimization exactly as clang does in the paper, and there are zero
   host round-trips during the run.
+
+Per-batch scheduling is a constant number of vectorized passes
+(:func:`repro.core.queue.device_queue_extract` +
+:func:`repro.core.queue.device_queue_fill_rows`); pass
+``use_vectorized_queue=False`` to run the seed per-event reference ops
+instead (kept for differential testing and the overhead benchmark).
+
+Single-type-run windows can additionally bypass the sequential switch
+branch: event types listed in ``entity_handlers`` are dispatched through
+``vmap`` over entity slices of the state
+(:func:`repro.core.vectorize.make_masked_run_handler`) — the
+serving-style data-parallel win, now available on the device engine.
 
 On-device emit convention: handlers marked with ``@emits_events`` return
 ``(state, emits)`` with ``emits: f32[max_emit, 2 + ARG_WIDTH]`` rows of
@@ -23,8 +35,7 @@ On-device emit convention: handlers marked with ``@emits_events`` return
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any
+from typing import Any, Callable, Mapping
 
 import jax
 import jax.numpy as jnp
@@ -35,14 +46,14 @@ from repro.core.composer import (
     LazyComposer,
     build_switch_dispatcher,
 )
-from repro.core.events import ARG_WIDTH, EventRegistry
+from repro.core.events import EventRegistry
 from repro.core.queue import (
     DeviceQueue,
     HostEventQueue,
-    device_queue_init,
-    device_queue_peek,
-    device_queue_pop,
-    device_queue_push,
+    device_queue_extract,
+    device_queue_extract_ref,
+    device_queue_fill_rows,
+    device_queue_from_host,
     device_queue_push_rows,
 )
 from repro.core.scheduler import (
@@ -51,6 +62,7 @@ from repro.core.scheduler import (
     SpeculativeScheduler,
     run_unbatched,
 )
+from repro.core.vectorize import make_masked_run_handler
 
 
 class Simulator:
@@ -107,7 +119,18 @@ class DeviceEngine:
                                                   max_batches=10_000)
 
     ``eng.run`` is jitted once; repeat calls with same-shaped inputs are
-    pure device execution.
+    pure device execution.  Run stats include ``dropped``, the number of
+    emitted events lost to queue-capacity overflow.
+
+    ``entity_handlers`` maps a type_id to an entity-local handler
+    ``(entity_state, t, arg) -> entity_state`` over slices of the state
+    pytree (leading axis = entity).  When an extracted window is a
+    single-type run of such a type, the engine dispatches it as one
+    ``vmap`` over the touched entities (``arg[0]`` is the entity index)
+    instead of the sequential switch branch.  The registered sequential
+    handler must match the local handler's semantics — it still serves
+    mixed windows.  Entity-parallel types must not emit events, and a
+    window must not contain two events for the same entity.
     """
 
     registry: EventRegistry
@@ -115,6 +138,8 @@ class DeviceEngine:
     capacity: int = 1024
     max_emit: int = 2
     t_end: float = float("inf")
+    use_vectorized_queue: bool = True
+    entity_handlers: Mapping[int, Callable] | None = None
 
     def __post_init__(self):
         self.registry.freeze()
@@ -123,66 +148,105 @@ class DeviceEngine:
             self.registry, self.codec, max_emit=self.max_emit
         )
         self._lookaheads = self.registry.lookaheads()
+        if self.entity_handlers:
+            entity_types = sorted(self.entity_handlers)
+            for ty in entity_types:
+                if not 0 <= ty < len(self.registry):
+                    raise ValueError(
+                        f"entity_handlers key {ty} is not a registered "
+                        f"type id (registry has {len(self.registry)} types)"
+                    )
+                if self.registry[ty].returns_events:
+                    raise ValueError(
+                        f"entity-parallel type {self.registry[ty].name!r} "
+                        "must not emit events"
+                    )
+            branch_of_type = [-1] * len(self.registry)
+            for i, ty in enumerate(entity_types):
+                branch_of_type[ty] = i
+            self._run_branch_of_type = jnp.asarray(branch_of_type, jnp.int32)
+            self._run_branches = [
+                make_masked_run_handler(self.entity_handlers[ty])
+                for ty in entity_types
+            ]
+        else:
+            self._run_branch_of_type = None
+            self._run_branches = []
         self._run_jit = jax.jit(self._run, static_argnames=("max_batches",))
 
     # -- queue construction -------------------------------------------------
     def initial_queue(self, events) -> DeviceQueue:
-        q = device_queue_init(self.capacity)
-        for (t, ty, arg) in events:
-            arg = jnp.zeros((ARG_WIDTH,), jnp.float32) if arg is None else (
-                jnp.asarray(arg, jnp.float32)
-            )
-            q = device_queue_push(q, t, ty, arg)
-        return q
+        # Built host-side, one device_put (None args become zero vectors).
+        return device_queue_from_host(events, self.capacity)
 
-    # -- extraction (paper Fig 2, in lax) ------------------------------------
+    # -- extraction (paper Fig 2) --------------------------------------------
     def _extract(self, queue: DeviceQueue):
-        max_len = self.max_batch_len
-        la = self._lookaheads
-
-        ts0 = jnp.zeros((max_len,), jnp.float32)
-        tys0 = jnp.zeros((max_len,), jnp.int32)
-        args0 = jnp.zeros((max_len, ARG_WIDTH), jnp.float32)
-
-        def body(i, carry):
-            queue, ts, tys, args, length, t_max, done = carry
-            t, ty, _slot = device_queue_peek(queue)
-            can_take = (~done) & (ty >= 0) & (t <= t_max)
-
-            def take(_):
-                q2, t2, ty2, arg2 = device_queue_pop(queue)
-                ts2 = ts.at[i].set(t2)
-                tys2 = tys.at[i].set(ty2)
-                args2 = args.at[i].set(arg2)
-                t_max2 = jnp.minimum(t_max, t2 + la[ty2])
-                return q2, ts2, tys2, args2, length + 1, t_max2, done
-
-            def skip(_):
-                return queue, ts, tys, args, length, t_max, jnp.bool_(True)
-
-            return jax.lax.cond(can_take, take, skip, None)
-
-        init = (queue, ts0, tys0, args0, jnp.int32(0), _inf_f32(), jnp.bool_(False))
-        queue, ts, tys, args, length, _t_max, _done = jax.lax.fori_loop(
-            0, max_len, body, init
+        if self.use_vectorized_queue:
+            return device_queue_extract(
+                queue, self.max_batch_len, self._lookaheads
+            )
+        return device_queue_extract_ref(
+            queue, self.max_batch_len, self._lookaheads
         )
-        return queue, ts, tys, args, length
+
+    # -- dispatch -------------------------------------------------------------
+    def _dispatch_window(self, state, ts, tys, args, length):
+        """Dispatch one extracted window; returns (state, emits)."""
+        def switch_path(state):
+            code = self.codec.encode_jnp(tys, length)
+            return self.dispatch(code, state, ts, tys, args)
+
+        if not self._run_branches:
+            return switch_path(state)
+
+        lane = jnp.arange(self.max_batch_len)
+        in_window = lane < length
+        branch = self._run_branch_of_type[
+            jnp.clip(tys[0], 0, len(self.registry) - 1)
+        ]
+        is_run = (
+            (length > 0)
+            & (branch >= 0)
+            & jnp.all(jnp.where(in_window, tys == tys[0], True))
+        )
+
+        def run_path(state):
+            entity_ids = args[:, 0].astype(jnp.int32)
+            state = jax.lax.switch(
+                jnp.maximum(branch, 0), self._run_branches,
+                state, ts, args, entity_ids, in_window,
+            )
+            return state, self.dispatch.empty_emits()
+
+        return jax.lax.cond(is_run, run_path, switch_path, state)
 
     # -- main loop ------------------------------------------------------------
     def _run(self, state, queue: DeviceQueue, *, max_batches: int):
+        insert = (device_queue_fill_rows if self.use_vectorized_queue
+                  else device_queue_push_rows)
+
+        # Loop while events are actually pending.  `queue.size` alone is
+        # wrong here: it counts overflow-dropped ghosts, which would spin
+        # the loop forever on an empty queue after an overflow.  Under
+        # the canonical sorted layout the head slot answers in O(1); the
+        # reference layout needs the full occupancy mask.
+        if self.use_vectorized_queue:
+            has_pending = lambda queue: queue.types[0] >= 0
+        else:
+            has_pending = lambda queue: jnp.any(queue.types >= 0)
+
         def cond(carry):
             state, queue, stats = carry
             del state
-            return (queue.size > 0) & (stats["batches"] < max_batches) & (
+            return has_pending(queue) & (stats["batches"] < max_batches) & (
                 stats["time"] <= self.t_end
             )
 
         def body(carry):
             state, queue, stats = carry
             queue, ts, tys, args, length = self._extract(queue)
-            code = self.codec.encode_jnp(tys, length)
-            state, emits = self.dispatch(code, state, ts, tys, args)
-            queue = device_queue_push_rows(queue, emits)
+            state, emits = self._dispatch_window(state, ts, tys, args, length)
+            queue = insert(queue, emits)
             last_t = ts[jnp.maximum(length - 1, 0)]
             stats = {
                 "batches": stats["batches"] + 1,
@@ -200,6 +264,8 @@ class DeviceEngine:
 
     def run(self, state, queue: DeviceQueue, *, max_batches: int = 1 << 30):
         state, queue, stats = self._run_jit(state, queue, max_batches=max_batches)
+        stats = dict(stats)
+        stats["dropped"] = queue.dropped
         return state, queue, stats
 
     def lower_run(self, state_spec, queue_spec, *, max_batches: int = 1 << 30):
@@ -207,7 +273,3 @@ class DeviceEngine:
         return jax.jit(self._run, static_argnames=("max_batches",)).lower(
             state_spec, queue_spec, max_batches=max_batches
         )
-
-
-def _inf_f32():
-    return jnp.float32(jnp.inf)

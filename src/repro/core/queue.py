@@ -9,11 +9,50 @@ non-decreasing timestamp order (§III-B).  Two implementations:
 
 * :class:`DeviceEventQueue` — a fixed-capacity struct-of-arrays queue
   whose operations are pure jnp (usable inside ``lax.while_loop``), used
-  by the fully on-device scheduler.  Pop is a masked argmin (O(capacity)
-  on the VPU — for the queue sizes of interest this is cheaper on TPU
-  than maintaining heap order with data-dependent scatters, and it has
-  no host round-trips).  Ties on the timestamp are broken by insertion
-  sequence number for deterministic, schedule-order execution.
+  by the fully on-device scheduler.
+
+Device queue layout
+-------------------
+``types == -1`` marks a free slot, and free slots always hold the
+sentinel key ``(time=+inf, seq=i32_max)`` so they order after every real
+event.  ``seq`` is the global insertion counter used for deterministic
+``(time, seq)`` lexicographic pop order.  ``size`` counts *logical*
+pushes (it keeps incrementing past ``capacity`` on overflow so callers
+can detect it); ``dropped`` counts events lost to overflow.
+
+Two families of operations are provided:
+
+* **Reference ops** (seed semantics, layout-independent, O(capacity)
+  work *per event* with a serial dependence chain):
+  :func:`device_queue_peek`, :func:`device_queue_pop`,
+  :func:`device_queue_push`, :func:`device_queue_push_rows`,
+  :func:`device_queue_extract_ref`.  Pop is a masked argmin; push is a
+  first-free-slot scatter.  Kept as the executable specification for
+  differential tests.
+
+* **Vectorized single-pass ops**, which require and preserve the
+  *canonical layout*: occupied slots form a prefix of the arrays,
+  ordered by ``(time, seq)`` (:func:`device_queue_from_host` builds it;
+  an empty queue has it trivially).  With the pending set kept sorted,
+  every per-batch interaction is a constant number of fused
+  data-parallel passes — no sorts, no reductions, no serial chains:
+
+  - :func:`device_queue_extract` reads the lookahead window directly
+    from the first ``max_batch_len`` slots, evaluates the §III-B
+    dynamic-lookahead take rule as a shifted ``cummin`` + prefix mask
+    (:func:`window_prefix_mask` — the rule is monotone on time-sorted
+    candidates, so no serial scan is needed), and pops all taken slots
+    by shifting each column left with one ``dynamic_slice``.
+
+  - :func:`device_queue_fill_rows` merges a whole emit block at once:
+    merge positions come from all-pairs key comparisons
+    (rows × capacity fused bools, a counting merge), and each column is
+    rebuilt with a single gather/select pass.
+
+  Both reproduce the reference ops' ``(time, seq)`` pop order and
+  overflow behaviour bit-exactly; the two families must not be
+  interleaved on one queue (the reference pushes do not maintain the
+  canonical layout).
 """
 
 from __future__ import annotations
@@ -24,6 +63,7 @@ from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.events import ARG_WIDTH, Event
 
@@ -71,7 +111,8 @@ class DeviceQueue(NamedTuple):
     """Struct-of-arrays pending-event set (a JAX pytree).
 
     ``types == -1`` marks a free slot.  ``seq`` is the global insertion
-    counter used for deterministic tie-breaking.
+    counter used for deterministic tie-breaking.  ``dropped`` counts
+    events lost to capacity overflow (surfaced in the engine run stats).
     """
 
     times: jnp.ndarray   # f32[capacity]
@@ -80,6 +121,7 @@ class DeviceQueue(NamedTuple):
     seqs: jnp.ndarray    # i32[capacity]
     size: jnp.ndarray    # i32 scalar
     next_seq: jnp.ndarray  # i32 scalar
+    dropped: jnp.ndarray   # i32 scalar, overflow-dropped event count
 
     @property
     def capacity(self) -> int:
@@ -94,15 +136,64 @@ def device_queue_init(capacity: int, arg_width: int = ARG_WIDTH) -> DeviceQueue:
         seqs=jnp.full((capacity,), 2**31 - 1, jnp.int32),
         size=jnp.int32(0),
         next_seq=jnp.int32(0),
+        dropped=jnp.int32(0),
     )
 
+
+def device_queue_from_host(
+    events, capacity: int, arg_width: int = ARG_WIDTH
+) -> DeviceQueue:
+    """Build a seed queue host-side and move it in ONE device_put.
+
+    ``events`` is a sequence of ``(time, type_id, arg)`` with ``arg``
+    either ``None`` or an ``f32[arg_width]`` vector.  Semantically
+    identical to ``device_queue_push`` applied in order — slot ``i``
+    holds event ``i``, ``seq`` runs 0..N-1, events past ``capacity``
+    are dropped with ``size``/``next_seq`` still advancing — but costs
+    one transfer instead of N jitted dispatches.
+    """
+    events = list(events)
+    n = len(events)
+    m = min(n, capacity)
+    times = np.full((capacity,), np.inf, np.float32)
+    types = np.full((capacity,), -1, np.int32)
+    args = np.zeros((capacity, arg_width), np.float32)
+    seqs = np.full((capacity,), 2**31 - 1, np.int32)
+    for i, (t, ty, arg) in enumerate(events[:m]):
+        times[i] = t
+        types[i] = ty
+        if arg is not None:
+            args[i] = np.asarray(arg, np.float32)
+        seqs[i] = i
+    # Canonical layout (see module docstring): occupied slots form a
+    # prefix sorted by (time, seq).  The reference ops are
+    # layout-independent; the vectorized ops require and preserve it.
+    order = np.lexsort((seqs[:m], times[:m]))
+    times[:m] = times[order]
+    types[:m] = types[order]
+    args[:m] = args[order]
+    seqs[:m] = seqs[order]
+    return jax.device_put(DeviceQueue(
+        times=times,
+        types=types,
+        args=args,
+        seqs=seqs,
+        size=np.int32(n),
+        next_seq=np.int32(n),
+        dropped=np.int32(n - m),
+    ))
+
+
+# ---------------------------------------------------------------------------
+# Reference per-event ops (seed semantics; executable specification)
+# ---------------------------------------------------------------------------
 
 def device_queue_push(q: DeviceQueue, time, type_id, arg) -> DeviceQueue:
     """Insert one event into the first free slot (pure jnp).
 
-    If the queue is full the event is dropped and ``size`` still
-    increments past capacity so callers can detect overflow; the engine
-    asserts on it in debug runs.
+    If the queue is full the event is dropped, the ``dropped`` counter
+    increments, and ``size``/``next_seq`` still advance so callers can
+    detect overflow (the engine surfaces ``dropped`` in its run stats).
     """
     occupied = q.types >= 0
     # argmin over the boolean mask finds the first False (free) slot.
@@ -113,7 +204,7 @@ def device_queue_push(q: DeviceQueue, time, type_id, arg) -> DeviceQueue:
     arg = jnp.asarray(arg, jnp.float32)
 
     def do_push(q):
-        return DeviceQueue(
+        return q._replace(
             times=q.times.at[slot].set(time),
             types=q.types.at[slot].set(type_id),
             args=q.args.at[slot].set(arg),
@@ -123,17 +214,19 @@ def device_queue_push(q: DeviceQueue, time, type_id, arg) -> DeviceQueue:
         )
 
     def overflow(q):
-        return q._replace(size=q.size + 1, next_seq=q.next_seq + 1)
+        return q._replace(
+            size=q.size + 1, next_seq=q.next_seq + 1, dropped=q.dropped + 1
+        )
 
     return jax.lax.cond(have_room, do_push, overflow, q)
 
 
 def device_queue_push_rows(q: DeviceQueue, rows) -> DeviceQueue:
-    """Insert a fixed-size block of emit rows ``f32[R, 2+W]``.
+    """Reference bulk insert: one serial ``device_queue_push`` per row.
 
     Row layout is ``(time, type, arg...)``; ``type < 0`` rows are
-    skipped.  Used by the on-device engine to apply a batch's deferred
-    emissions (paper §IV.D) in one pass.
+    skipped.  O(rows × capacity) with a serial dependence chain — kept
+    as the executable specification for :func:`device_queue_fill_rows`.
     """
     def body(i, q):
         row = rows[i]
@@ -179,14 +272,246 @@ def device_queue_pop(q: DeviceQueue):
     nonempty = ty >= 0
 
     def do_pop(q):
-        return DeviceQueue(
+        return q._replace(
             times=q.times.at[slot].set(jnp.inf),
             types=q.types.at[slot].set(-1),
-            args=q.args,
             seqs=q.seqs.at[slot].set(2**31 - 1),
             size=q.size - 1,
-            next_seq=q.next_seq,
         )
 
     q = jax.lax.cond(nonempty, do_pop, lambda q: q, q)
     return q, t, ty, arg
+
+
+def device_queue_extract_ref(q: DeviceQueue, max_len: int, lookaheads):
+    """Reference window extraction: ``max_len`` serial peek/pop rounds.
+
+    The seed engine's loop (paper Fig 2 evaluated one event at a time):
+    each round is an O(capacity) masked argmin inside ``lax.cond``, with
+    a serial dependence between rounds.  Returns
+    ``(q', ts, tys, args, length)`` with zero-padding past ``length``.
+    Kept as the executable specification for
+    :func:`device_queue_extract`.
+    """
+    ts0 = jnp.zeros((max_len,), jnp.float32)
+    tys0 = jnp.zeros((max_len,), jnp.int32)
+    args0 = jnp.zeros((max_len, q.args.shape[1]), jnp.float32)
+
+    def body(i, carry):
+        queue, ts, tys, args, length, t_max, done = carry
+        t, ty, _slot = device_queue_peek(queue)
+        can_take = (~done) & (ty >= 0) & (t <= t_max)
+
+        def take(_):
+            q2, t2, ty2, arg2 = device_queue_pop(queue)
+            ts2 = ts.at[i].set(t2)
+            tys2 = tys.at[i].set(ty2)
+            args2 = args.at[i].set(arg2)
+            t_max2 = jnp.minimum(t_max, t2 + lookaheads[ty2])
+            return q2, ts2, tys2, args2, length + 1, t_max2, done
+
+        def skip(_):
+            return queue, ts, tys, args, length, t_max, jnp.bool_(True)
+
+        return jax.lax.cond(can_take, take, skip, None)
+
+    init = (q, ts0, tys0, args0, jnp.int32(0), _INF, jnp.bool_(False))
+    q, ts, tys, args, length, _t_max, _done = jax.lax.fori_loop(
+        0, max_len, body, init
+    )
+    return q, ts, tys, args, length
+
+
+# ---------------------------------------------------------------------------
+# Vectorized single-pass ops
+# ---------------------------------------------------------------------------
+
+def _small_lex_perm(ts, sq):
+    """Permutation sorting a TINY vector by (ts, sq, index) ascending.
+
+    XLA:CPU sorts are custom calls with large fixed overhead, so for the
+    k-element candidate vectors (k = max_batch_len class) the rank of
+    each element is computed from all-pairs comparisons (m² tiny bools,
+    fully fused) and inverted with an m-element scatter.
+    """
+    m = ts.shape[0]
+    i = jnp.arange(m, dtype=jnp.int32)
+    t_lt = ts[:, None] > ts[None, :]
+    t_eq = ts[:, None] == ts[None, :]
+    s_lt = sq[:, None] > sq[None, :]
+    s_eq = sq[:, None] == sq[None, :]
+    before = t_lt | (t_eq & s_lt) | (t_eq & s_eq & (i[:, None] > i[None, :]))
+    rank = jnp.sum(before, axis=1).astype(jnp.int32)  # unique in [0, m)
+    return jnp.zeros((m,), jnp.int32).at[rank].set(i)
+
+
+def window_prefix_mask(ts, wins, valid):
+    """Vectorized §III-B dynamic-lookahead take rule.
+
+    Given candidates already sorted by ``(time, seq)``, the serial rule
+    — take event ``i`` iff every earlier candidate was taken and
+    ``t_i <= t_max`` where ``t_max = min over taken j<i of (t_j + l_j)``
+    — is *monotone*: once a candidate is rejected no later one can be
+    taken.  It therefore reduces to two scans: a shifted (exclusive)
+    ``cummin`` over the window bounds ``wins = t + l``, and a prefix-AND
+    (via cumsum of rejections) that implements the stop condition.
+
+    Shared with :func:`repro.core.scheduler.extract_window`, which is
+    the host/serial form of the same rule; the differential tests assert
+    their equivalence.
+    """
+    ts = jnp.asarray(ts, jnp.float32)
+    wins = jnp.asarray(wins, jnp.float32)
+    # Exclusive cummin of the window bounds: t_max before candidate i.
+    t_max = jnp.concatenate(
+        [jnp.full((1,), jnp.inf, jnp.float32), jax.lax.cummin(wins)[:-1]]
+    )
+    ok = valid & (ts <= t_max)
+    # Prefix-AND: no rejection at any earlier position.
+    return jnp.cumsum(~ok) == 0
+
+
+def device_queue_extract(q: DeviceQueue, max_len: int, lookaheads):
+    """Single-pass window extraction (paper Fig 2, fully vectorized).
+
+    Requires the canonical sorted layout (occupied slots form a prefix
+    ordered by ``(time, seq)`` — see the module docstring), which makes
+    the ``max_len`` earliest events simply the first ``max_len`` slots:
+    no reductions, no sort, no serial dependence.  The dynamic lookahead
+    rule is applied with :func:`window_prefix_mask`, and all taken slots
+    are popped at once by shifting every column left by ``length`` (one
+    fused ``dynamic_slice`` per column) — preserving the invariant.
+
+    Bit-identical batch output to :func:`device_queue_extract_ref`
+    (lexicographic pop order, tie-breaks, zero-padding) at a constant
+    number of data-parallel passes per *batch* instead of
+    O(max_len × capacity) serially dependent work.
+
+    Returns ``(q', ts, tys, args, length)``.
+    """
+    if max_len > q.capacity:
+        raise ValueError(
+            f"max_len {max_len} exceeds queue capacity {q.capacity}"
+        )
+    k = max_len
+    cap = q.capacity
+    num_types = lookaheads.shape[0]
+    ts_c = q.times[:k]
+    tys_c = q.types[:k]
+
+    valid = tys_c >= 0
+    la = lookaheads[jnp.clip(tys_c, 0, num_types - 1)]
+    wins = jnp.where(valid, ts_c + la, jnp.inf)
+    take = window_prefix_mask(ts_c, wins, valid)
+    length = jnp.sum(take).astype(jnp.int32)
+
+    ts = jnp.where(take, ts_c, 0.0)
+    tys = jnp.where(take, tys_c, 0)
+    args = jnp.where(take[:, None], q.args[:k], 0.0)
+
+    # Pop the taken prefix: shift every column left by `length`,
+    # refilling the tail with the free-slot sentinels.
+    def shift(col, fill):
+        pad = jnp.full((k,) + col.shape[1:], fill, col.dtype)
+        return jax.lax.dynamic_slice_in_dim(
+            jnp.concatenate([col, pad]), length, cap
+        )
+
+    q = q._replace(
+        times=shift(q.times, jnp.inf),
+        types=shift(q.types, -1),
+        args=shift(q.args, 0.0),
+        seqs=shift(q.seqs, 2**31 - 1),
+        size=q.size - length,
+    )
+    return q, ts, tys, args, length
+
+
+def device_queue_fill_rows(q: DeviceQueue, rows) -> DeviceQueue:
+    """Bulk emit insert: merge a whole ``f32[R, 2+W]`` block at once.
+
+    Row layout is ``(time, type, arg...)``; ``type < 0`` rows are
+    skipped.  Requires and preserves the canonical sorted layout: valid
+    row ``j`` (the ``r``-th valid row) receives ``seq = next_seq + r``
+    — exactly the seq assignment of :func:`device_queue_push_rows` —
+    and the surviving rows are merged into the sorted queue in one
+    vectorized counting-merge: every merge position is computed from
+    all-pairs key comparisons (R·capacity fused bools, no sort, no
+    scan), and each queue column is rebuilt with a single gather/select
+    pass.  Rows past capacity are dropped with ``size``/``next_seq``
+    still advancing and ``dropped`` counted, matching the reference
+    overflow semantics.
+    """
+    rows = jnp.asarray(rows, jnp.float32)
+    R = rows.shape[0]
+    C = q.capacity
+    t_r = rows[:, 0]
+    ty_r = rows[:, 1].astype(jnp.int32)
+    arg_r = rows[:, 2:]
+
+    valid = ty_r >= 0
+    # Rank of each row among the valid rows, via all-pairs counting (R
+    # is tiny; avoids a scan thunk per engine-loop iteration).
+    r_idx = jnp.arange(R, dtype=jnp.int32)
+    vrank = jnp.sum(
+        (r_idx[None, :] <= r_idx[:, None]) & valid[None, :], axis=1
+    ).astype(jnp.int32) - 1
+    num_valid = jnp.sum(valid).astype(jnp.int32)
+    # Serial-push overflow rule: row r inserts iff size + r < capacity
+    # (size counts logical pushes, so it may already exceed occupancy).
+    insert = valid & (q.size + vrank < C)
+    num_insert = jnp.sum(insert).astype(jnp.int32)
+    seq_r = q.next_seq + vrank
+
+    # Order the surviving rows by (time, arrival): arrival order equals
+    # seq order, and dropped rows are pushed past everything real.
+    perm = _small_lex_perm(
+        jnp.where(insert, t_r, jnp.inf),
+        jnp.where(insert, r_idx, _I32_MAX),
+    )
+    rt = jnp.where(insert, t_r, jnp.inf)[perm]
+    rty = ty_r[perm]
+    rarg = arg_r[perm]
+    rseq = seq_r[perm]
+    rins = insert[perm]
+
+    # Merge positions.  Keys are strictly totally ordered: row seqs are
+    # all >= next_seq while queued seqs are all < next_seq, so EVERY
+    # equal-time queued event precedes the new row — the count of queued
+    # events before row r is therefore a plain searchsorted(side=right)
+    # over the sorted times, capped at the occupancy so the (+inf,
+    # i32_max) free-slot sentinels are never counted.
+    # pos[r] = (#queued events before row r) + r, the second term
+    # counting the earlier (sorted, inserting) rows.
+    occupancy = jnp.sum(q.types >= 0).astype(jnp.int32)
+    older = jnp.minimum(
+        jnp.searchsorted(q.times, rt, side="right").astype(jnp.int32),
+        occupancy,
+    )
+    pos = jnp.where(rins, older + r_idx, C)
+
+    # Rebuild each column with one gather pass: output slot i holds
+    # sorted row `ins_before[i]` if some row lands at i, else the queued
+    # entry shifted right by the rows inserted before it.
+    i_idx = jnp.arange(C, dtype=jnp.int32)
+    ins_before = jnp.sum(pos[None, :] < i_idx[:, None], axis=1).astype(
+        jnp.int32
+    )
+    is_ins = jnp.sum(pos[None, :] == i_idx[:, None], axis=1) > 0
+    src = jnp.where(
+        is_ins, C + jnp.clip(ins_before, 0, R - 1),
+        jnp.clip(i_idx - ins_before, 0, C - 1),
+    )
+
+    def merge(col, rcol):
+        return jnp.take(jnp.concatenate([col, rcol]), src, axis=0)
+
+    return q._replace(
+        times=merge(q.times, rt),
+        types=merge(q.types, rty),
+        args=merge(q.args, rarg),
+        seqs=merge(q.seqs, rseq),
+        size=q.size + num_valid,
+        next_seq=q.next_seq + num_valid,
+        dropped=q.dropped + (num_valid - num_insert),
+    )

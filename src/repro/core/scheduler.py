@@ -18,6 +18,11 @@ Schedulers:
 * :class:`SpeculativeScheduler` — the paper's §IV.D future-work variant:
   extract optimistically past the lookahead window, snapshot the state,
   and roll back if an emitted event lands inside the executed window.
+
+Emission anchoring: handlers emit ``(delay, type, arg)`` and the new
+event is scheduled at ``t_emitter + delay`` (the composer tags each
+emission with its in-batch source index), identically across the
+batched, unbatched, and speculative paths.
 """
 
 from __future__ import annotations
@@ -28,9 +33,11 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+import numpy as np
+
 from repro.core.composer import _ComposerBase
 from repro.core.events import Event, EventRegistry
-from repro.core.queue import HostEventQueue
+from repro.core.queue import HostEventQueue, window_prefix_mask
 
 
 @dataclasses.dataclass
@@ -58,7 +65,13 @@ def extract_window(
     registry: EventRegistry,
     max_len: int,
 ) -> list[Event]:
-    """Pop the maximal runnable prefix under the dynamic lookahead window."""
+    """Pop the maximal runnable prefix under the dynamic lookahead window.
+
+    This is the serial form of the take rule; the vectorized form shared
+    with the device queue is :func:`repro.core.queue.window_prefix_mask`
+    (and :func:`extract_window_presorted` below), and the differential
+    tests assert their equivalence.
+    """
     batch: list[Event] = []
     t_max = float("inf")
     while queue and len(batch) < max_len:
@@ -69,6 +82,30 @@ def extract_window(
         la = registry[head.type_id].lookahead
         t_max = min(t_max, head.time + la)
     return batch
+
+
+def extract_window_presorted(
+    events: list[Event],
+    registry: EventRegistry,
+    max_len: int,
+) -> int:
+    """Length of the runnable prefix of an already-(time, seq)-sorted list.
+
+    Host-side entry point to the same vectorized take rule the device
+    queue uses (:func:`repro.core.queue.window_prefix_mask`): the §III-B
+    extraction condition is monotone on sorted candidates, so it reduces
+    to a shifted cummin + prefix mask — no serial scan needed.
+    """
+    if not events:
+        return 0
+    cand = events[:max_len]
+    ts = np.asarray([ev.time for ev in cand], np.float32)
+    wins = np.asarray(
+        [ev.time + registry[ev.type_id].lookahead for ev in cand], np.float32
+    )
+    valid = jnp.ones((len(cand),), bool)
+    take = window_prefix_mask(ts, wins, valid)
+    return int(jnp.sum(take))
 
 
 class ConservativeScheduler:
@@ -95,10 +132,12 @@ class ConservativeScheduler:
             args = [ev.arg for ev in batch]
             state, emitted = self.composer.execute(code, state, ts, args)
             # Deferred scheduling (§IV.D): emissions buffered during the
-            # batch are inserted only now.
+            # batch are inserted only now, anchored at the EMITTING
+            # event's timestamp (same as unbatched execution, so results
+            # do not depend on how events were grouped into batches).
             last_t = batch[-1].time
-            for (delay, type_id, arg) in emitted:
-                t_new = float(batch[-1].time) + float(delay)
+            for (src, delay, type_id, arg) in emitted:
+                t_new = float(batch[src].time) + float(delay)
                 if self.check_causality and t_new < last_t:
                     raise RuntimeError(
                         f"causality violation: event type {type_id} emitted "
@@ -195,12 +234,20 @@ class SpeculativeScheduler:
             snapshot = state  # immutable pytree: snapshot is a reference
             state_new, emitted = self.composer.execute(code, state, ts, args)
             last_t = batch[-1].time
+            # Causality check, per emission: the new event lands at
+            # t_new = t_emitter + delay; if any event with a LATER
+            # timestamp already executed in this batch, that event ran
+            # without seeing the emission and the batch must roll back.
+            # Ties are safe — the emission gets a later seq, so ordering
+            # matches sequential execution.  (The seed expression's
+            # or/and precedence collapsed to "batch_end + delay <
+            # batch_end", which can never fire for delay >= 0 and fires
+            # spuriously for negative delays anchored at the wrong
+            # event.)
+            del t_max
             violated = any(
-                float(batch[-1].time) + float(delay) < last_t
-                or float(batch[-1].time) + float(delay) < t_max
-                and any(ev.time > float(batch[-1].time) + float(delay)
-                        for ev in batch)
-                for (delay, _ty, _a) in emitted
+                float(batch[src].time) + float(delay) < last_t
+                for (src, delay, _ty, _a) in emitted
             )
             if violated:
                 # Rollback: restore snapshot, requeue, replay one by one.
@@ -222,8 +269,8 @@ class SpeculativeScheduler:
                     stats.final_time = ev.time
                 continue
             state = state_new
-            for (delay, type_id, arg) in emitted:
-                queue.push(float(batch[-1].time) + float(delay), type_id, arg)
+            for (src, delay, type_id, arg) in emitted:
+                queue.push(float(batch[src].time) + float(delay), type_id, arg)
             stats.record_batch(len(batch))
             stats.final_time = last_t
         return state, stats

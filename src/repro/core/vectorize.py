@@ -16,7 +16,10 @@ expressed as a function over an entity slice of the state,
 with no cross-entity interaction.  ``make_run_handler`` lifts it to a
 whole-run handler ``(state, ts, args, entity_ids) -> state`` using
 ``vmap`` + scatter, which the serving engine dispatches when the
-extracted window is a single-type run.
+extracted window is a single-type run.  ``make_masked_run_handler`` is
+the fixed-shape variant used by the on-device engine
+(``DeviceEngine(entity_handlers=...)``), where windows are padded to
+``max_batch_len`` and a lane mask marks the real events.
 """
 
 from __future__ import annotations
@@ -55,6 +58,41 @@ def make_run_handler(local_handler: Callable, *, state_axis: int = 0):
                     state_axis,
                 )
             )
+
+        return jax.tree.map(put, state, sub)
+
+    return run_handler
+
+
+def make_masked_run_handler(local_handler: Callable, *, state_axis: int = 0):
+    """Like :func:`make_run_handler`, for fixed-shape padded windows.
+
+    The on-device engine extracts windows padded to ``max_batch_len``;
+    ``mask: bool[k]`` marks the lanes that hold real events.  Masked-out
+    lanes gather entity 0 (result discarded) and scatter nowhere (their
+    scatter index is pushed out of range and dropped), so padding can
+    never perturb the state.  Duplicate entity ids among *real* lanes
+    remain the caller's responsibility, as in :func:`make_run_handler`.
+    """
+
+    vh = jax.vmap(local_handler, in_axes=(state_axis, 0, 0), out_axes=state_axis)
+    _DROP = jnp.int32(2**31 - 1)
+
+    def run_handler(state, ts, args, entity_ids, mask):
+        gather_ids = jnp.where(mask, entity_ids, 0)
+        take = lambda leaf: jnp.take(leaf, gather_ids, axis=state_axis)
+        sub = jax.tree.map(take, state)
+        sub = vh(sub, ts, args)
+        scatter_ids = jnp.where(mask, entity_ids, _DROP)
+
+        def put(leaf, new):
+            if state_axis == 0:
+                return leaf.at[scatter_ids].set(new, mode="drop")
+            moved = jnp.moveaxis(leaf, state_axis, 0)
+            updated = moved.at[scatter_ids].set(
+                jnp.moveaxis(new, state_axis, 0), mode="drop"
+            )
+            return jnp.moveaxis(updated, 0, state_axis)
 
         return jax.tree.map(put, state, sub)
 

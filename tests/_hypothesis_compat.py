@@ -1,0 +1,52 @@
+"""Import guard for ``hypothesis`` (see requirements-dev.txt).
+
+On a bare environment (no dev extras installed) the property-based
+tests must still *collect* — module-level ``from hypothesis import ...``
+used to abort collection of four whole test modules, hiding every
+plain test they contain.  Importing ``given``/``settings``/``st`` from
+here instead yields the real hypothesis API when available, and a
+minimal stand-in otherwise: ``@given(...)`` tests collect normally and
+individually skip at run time, while all non-property tests in the same
+module keep running.
+"""
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _StubStrategy:
+        """Placeholder accepted anywhere a strategy object is used."""
+
+        def __call__(self, *args, **kwargs):
+            return _StubStrategy()
+
+        def __getattr__(self, name):
+            return _StubStrategy()
+
+    st = _StubStrategy()
+
+    def given(*_args, **_kwargs):
+        def decorate(fn):
+            # Zero-argument wrapper: pytest must not mistake the
+            # strategy parameters for fixtures.
+            def skipper():
+                pytest.skip("hypothesis not installed "
+                            "(pip install -r requirements-dev.txt)")
+
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+
+        return decorate
+
+    def settings(*_args, **_kwargs):
+        def decorate(fn):
+            return fn
+
+        return decorate

@@ -146,6 +146,79 @@ def test_speculative_rollback_matches_sequential():
     assert int(s_spec) == int(s_seq)
 
 
+def test_speculative_violation_predicate_regression():
+    """Regression for the or/and-precedence bug in the violation check:
+    an emission landing strictly inside the executed window (anchored at
+    the EMITTING event, not the batch end) must trigger a rollback, and
+    the result must match sequential execution even when handlers do not
+    commute."""
+    from repro.core.scheduler import SpeculativeScheduler, run_unbatched
+
+    reg = EventRegistry()
+
+    @emits_events
+    def emitter(state, t, arg):
+        # lands at t+0.5, i.e. before the later events in the batch
+        return state * 2 + 1, [(0.5, 1, None)]
+
+    def absorber(state, t, arg):
+        return state * 3 + 1  # deliberately does NOT commute with emitter
+
+    reg.register("E", emitter, lookahead=0.5)
+    reg.register("Ab", absorber, lookahead=10.0)
+
+    def build_queue():
+        q = HostEventQueue()
+        q.push(0.0, 0)
+        q.push(1.0, 1)
+        q.push(2.0, 1)
+        return q
+
+    sim = Simulator(reg, max_batch_len=3)
+    spec = SpeculativeScheduler(sim.registry, sim.composer)
+    s_spec, stats = spec.run(jnp.int32(0), build_queue(), max_events=16)
+    s_seq, _ = run_unbatched(sim.registry, jnp.int32(0), build_queue(),
+                             max_events=16)
+    assert int(s_spec) == int(s_seq)
+    # the old predicate (batch_end + delay < batch_end) could never fire
+    assert stats.rollbacks == 1
+
+
+def test_conservative_emissions_anchor_at_emitting_event():
+    """Batched and unbatched execution must schedule emissions at the
+    same absolute time (emitter's timestamp + delay), regardless of how
+    events were grouped into batches."""
+    from repro.core.scheduler import run_unbatched
+
+    reg = EventRegistry()
+
+    @emits_events
+    def emitter(state, t, arg):
+        return state * 2 + 1, [(3.0, 1, None)]
+
+    def absorber(state, t, arg):
+        return state * 3 + 1
+
+    reg.register("E", emitter, lookahead=3.0)
+    reg.register("Ab", absorber, lookahead=10.0)
+
+    def fill(q):
+        q.push(0.0, 0)
+        q.push(2.0, 1)
+        return q
+
+    sim = Simulator(reg, max_batch_len=2)
+    fill(sim.queue)
+    s_cons, stats = sim.run(jnp.int32(0), mode="conservative", max_events=8)
+    s_seq, _ = run_unbatched(reg, jnp.int32(0), fill(HostEventQueue()),
+                             max_events=8)
+    # batch [E@0, Ab@2] emits at 0+3=3 (not batch_end 2+3=5); the
+    # emitted Ab@3 runs after Ab@2 either way, but only event-anchored
+    # times make final_time match sequential execution.
+    assert int(s_cons) == int(s_seq)
+    assert stats.final_time == 3.0
+
+
 def test_eager_composer_precompiles_all():
     reg = poc.build_registry(iters=ITERS)
     sim = Simulator(

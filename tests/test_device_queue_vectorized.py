@@ -1,0 +1,340 @@
+"""Differential tests: vectorized single-pass device-queue ops vs the
+seed per-event reference ops.
+
+The vectorized ops (`device_queue_extract`, `device_queue_fill_rows`,
+`device_queue_from_host`) must reproduce the reference ops'
+``(time, seq)`` pop order BIT-EXACTLY — including timestamp ties,
+exactly-full queues, overflow, and all-empty emit blocks — over random
+event streams.  Plain numpy randomness (no hypothesis) so these run on
+a bare environment.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DeviceEngine, EventRegistry, emits_events
+from repro.core.events import ARG_WIDTH
+from repro.core.queue import (
+    device_queue_extract,
+    device_queue_extract_ref,
+    device_queue_fill_rows,
+    device_queue_from_host,
+    device_queue_init,
+    device_queue_pop,
+    device_queue_push,
+    device_queue_push_rows,
+)
+
+EMIT_W = 2 + ARG_WIDTH
+
+
+def canonical(q):
+    """Layout-independent view: occupied slots sorted by (time, seq).
+
+    The vectorized ops keep the queue in canonical (sorted-prefix)
+    layout while the reference ops scatter into arbitrary free slots;
+    both must agree on the CONTENT of the pending set and on all logical
+    counters.
+    """
+    times = np.asarray(q.times)
+    types = np.asarray(q.types)
+    args = np.asarray(q.args)
+    seqs = np.asarray(q.seqs)
+    occ = types >= 0
+    order = np.lexsort((seqs[occ], times[occ]))
+    return {
+        "times": times[occ][order],
+        "types": types[occ][order],
+        "args": args[occ][order],
+        "seqs": seqs[occ][order],
+        "size": int(q.size),
+        "next_seq": int(q.next_seq),
+        "dropped": int(q.dropped),
+    }
+
+
+def assert_queue_equal(qa, qb, msg=""):
+    ca, cb = canonical(qa), canonical(qb)
+    for field, va in ca.items():
+        np.testing.assert_array_equal(
+            va, cb[field], err_msg=f"{msg}: field {field!r} diverged",
+        )
+
+
+def random_rows(rng, n_rows, *, p_valid=0.7, num_types=3, tie_times=True):
+    """Random emit block; ``type < 0`` rows are holes."""
+    rows = np.zeros((n_rows, EMIT_W), np.float32)
+    rows[:, 1] = -1.0
+    for i in range(n_rows):
+        if rng.random() < p_valid:
+            # small integer times force heavy timestamp ties
+            rows[i, 0] = float(rng.integers(0, 5) if tie_times
+                               else rng.random() * 10)
+            rows[i, 1] = float(rng.integers(0, num_types))
+            rows[i, 2:] = rng.random(ARG_WIDTH).astype(np.float32)
+    return jnp.asarray(rows)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_interleaved_stream_differential(seed):
+    """Random interleaving of bulk inserts and window extractions:
+    vectorized and reference paths must agree on every intermediate
+    queue state and every extracted window."""
+    rng = np.random.default_rng(seed)
+    capacity, max_len = 24, 4
+    lookaheads = jnp.asarray(
+        rng.choice([0.0, 0.5, 1.0, np.inf], size=3), jnp.float32
+    )
+    qa = qb = device_queue_init(capacity)
+    for step in range(30):
+        if rng.random() < 0.5:
+            rows = random_rows(rng, int(rng.integers(1, 8)))
+            qa = device_queue_fill_rows(qa, rows)
+            qb = device_queue_push_rows(qb, rows)
+        else:
+            qa, tsa, tya, aa, la = device_queue_extract(qa, max_len, lookaheads)
+            qb, tsb, tyb, ab, lb = device_queue_extract_ref(
+                qb, max_len, lookaheads
+            )
+            np.testing.assert_array_equal(np.asarray(tsa), np.asarray(tsb))
+            np.testing.assert_array_equal(np.asarray(tya), np.asarray(tyb))
+            np.testing.assert_array_equal(np.asarray(aa), np.asarray(ab))
+            assert int(la) == int(lb)
+        assert_queue_equal(qa, qb, msg=f"seed {seed} step {step}")
+
+
+def test_pop_order_bit_exact_under_ties():
+    """max_len=1 extraction must reproduce device_queue_pop's
+    lexicographic (time, seq) order exactly, including ties."""
+    rng = np.random.default_rng(7)
+    lookaheads = jnp.asarray([0.0, 0.0], jnp.float32)
+    # only three distinct times -> ties resolved by insertion seq
+    events = [(float(rng.integers(0, 3)), int(rng.integers(0, 2)),
+               np.full((ARG_WIDTH,), float(i), np.float32))
+              for i in range(12)]
+    qa = device_queue_from_host(events, 16)  # canonical layout
+    qb = device_queue_init(16)               # arbitrary (push) layout
+    for (t, ty, arg) in events:
+        qb = device_queue_push(qb, t, ty, jnp.asarray(arg))
+    for _ in range(12):
+        qa, ts, tys, args, length = device_queue_extract(qa, 1, lookaheads)
+        qb, t, ty, arg = device_queue_pop(qb)
+        assert int(length) == 1
+        assert float(ts[0]) == float(t)
+        assert int(tys[0]) == int(ty)
+        np.testing.assert_array_equal(np.asarray(args[0]), np.asarray(arg))
+    assert int(qa.size) == 0 and int(qb.size) == 0
+
+
+def test_exactly_full_queue_and_overflow():
+    """Filling to exactly capacity works; the overflowing row is dropped
+    with identical size/next_seq/dropped bookkeeping on both paths."""
+    capacity = 8
+    qa = qb = device_queue_init(capacity)
+    rows = np.zeros((capacity, EMIT_W), np.float32)
+    rows[:, 0] = np.arange(capacity)
+    rows[:, 1] = 0.0
+    qa = device_queue_fill_rows(qa, jnp.asarray(rows))
+    qb = device_queue_push_rows(qb, jnp.asarray(rows))
+    assert_queue_equal(qa, qb, "exactly full")
+    assert int(qa.size) == capacity and int(qa.dropped) == 0
+
+    over = np.zeros((3, EMIT_W), np.float32)
+    over[:, 0] = [100.0, 101.0, 102.0]
+    over[:, 1] = [1.0, -1.0, 1.0]  # two real rows onto a full queue
+    qa = device_queue_fill_rows(qa, jnp.asarray(over))
+    qb = device_queue_push_rows(qb, jnp.asarray(over))
+    assert_queue_equal(qa, qb, "overflow")
+    assert int(qa.dropped) == 2
+    assert int(qa.size) == capacity + 2       # logical pushes keep counting
+    assert int(qa.next_seq) == capacity + 2
+
+
+def test_all_empty_emit_block_is_noop():
+    q0 = device_queue_from_host(
+        [(1.0, 0, np.zeros(ARG_WIDTH, np.float32))], 8
+    )
+    rows = jnp.asarray(np.full((4, EMIT_W), -1.0, np.float32))
+    qa = device_queue_fill_rows(q0, rows)
+    qb = device_queue_push_rows(q0, rows)
+    assert_queue_equal(qa, qb, "empty block")
+    assert_queue_equal(qa, q0, "empty block must not change the queue")
+
+
+def test_from_host_matches_serial_pushes():
+    """Host-side seed-queue build == N serial pushes, incl. overflow."""
+    rng = np.random.default_rng(3)
+    capacity = 6
+    events = []
+    for i in range(9):  # 3 past capacity
+        arg = rng.random(ARG_WIDTH).astype(np.float32)
+        events.append((float(rng.integers(0, 4)), int(rng.integers(0, 3)), arg))
+    qa = device_queue_from_host(events, capacity)
+    qb = device_queue_init(capacity)
+    for (t, ty, arg) in events:
+        qb = device_queue_push(qb, t, ty, jnp.asarray(arg))
+    assert_queue_equal(qa, qb, "from_host")
+    assert int(qa.dropped) == 3
+
+
+def test_extract_on_empty_queue():
+    lookaheads = jnp.asarray([1.0], jnp.float32)
+    q = device_queue_init(8)
+    qa, ts, tys, args, length = device_queue_extract(q, 4, lookaheads)
+    qb, tsb, tysb, argsb, lengthb = device_queue_extract_ref(q, 4, lookaheads)
+    assert int(length) == int(lengthb) == 0
+    np.testing.assert_array_equal(np.asarray(tys), np.asarray(tysb))
+    assert_queue_equal(qa, qb, "empty extract")
+
+
+# ---------------------------------------------------------------------------
+# Shared extraction semantics: device rule == host rule
+# ---------------------------------------------------------------------------
+
+def test_window_rule_matches_host_extract_window():
+    from repro.core import HostEventQueue, extract_window
+    from repro.core import extract_window_presorted
+
+    rng = np.random.default_rng(11)
+    reg = EventRegistry()
+    reg.register("A", lambda s, t, a: s, lookahead=1.0)
+    reg.register("B", lambda s, t, a: s, lookahead=0.25)
+    reg.register("C", lambda s, t, a: s, lookahead=np.inf)
+    reg.freeze()
+    for _ in range(20):
+        n = int(rng.integers(1, 10))
+        evs = [(float(rng.integers(0, 5)), int(rng.integers(0, 3)))
+               for _ in range(n)]
+        hq = HostEventQueue()
+        for t, ty in evs:
+            hq.push(t, ty)
+        sorted_events = sorted(
+            (hq.pop() for _ in range(n)), key=lambda e: e.key()
+        )
+        hq2 = HostEventQueue()
+        for t, ty in evs:
+            hq2.push(t, ty)
+        batch = extract_window(hq2, reg, max_len=4)
+        k = extract_window_presorted(sorted_events, reg, max_len=4)
+        assert k == len(batch)
+        assert [e.key() for e in sorted_events[:k]] == \
+               [e.key() for e in batch]
+
+
+# ---------------------------------------------------------------------------
+# Engine level
+# ---------------------------------------------------------------------------
+
+def _order_sensitive_registry():
+    """Handlers whose effect encodes execution order in the state, with
+    conditional emissions that stress the insert path."""
+    reg = EventRegistry()
+
+    @emits_events
+    def ping(state, t, arg):
+        emit = jnp.full((1, EMIT_W), -1.0, jnp.float32)
+        # emit a pong at t+1 only while t < 6 (bounded cascade)
+        emit = jnp.where(
+            t < 6.0,
+            emit.at[0, 0].set(t + 1.0).at[0, 1].set(1.0),
+            emit,
+        )
+        return state * 7 + (t.astype(jnp.int32) * 2 + 1), emit
+
+    def pong(state, t, arg):
+        return state * 7 + (t.astype(jnp.int32) * 2 + 2)
+
+    reg.register("Ping", ping, lookahead=1.0)
+    reg.register("Pong", pong, lookahead=1.0)
+    return reg.freeze()
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_engine_vectorized_matches_reference_path(seed):
+    """Full DeviceEngine runs: vectorized queue vs seed reference queue
+    give identical states, stats, and final queue contents."""
+    rng = np.random.default_rng(seed)
+    events = [(float(t), int(rng.integers(0, 2)), None)
+              for t in range(int(rng.integers(4, 10)))]
+    results = []
+    for vec in (True, False):
+        reg = _order_sensitive_registry()
+        eng = DeviceEngine(reg, max_batch_len=3, capacity=32, max_emit=1,
+                           use_vectorized_queue=vec)
+        q = eng.initial_queue(events)
+        s, q, stats = eng.run(jnp.int32(1), q, max_batches=64)
+        results.append((s, q, stats))
+    (sa, qa, sta), (sb, qb, stb) = results
+    assert int(sa) == int(sb)
+    assert_queue_equal(qa, qb, "engine final queue")
+    for k in ("batches", "events", "dropped"):
+        assert int(sta[k]) == int(stb[k]), k
+    assert float(sta["time"]) == float(stb["time"])
+
+
+def test_engine_surfaces_dropped_in_stats():
+    """Overflowing emissions are counted, not silently lost."""
+    reg = EventRegistry()
+
+    @emits_events
+    def spawner(state, t, arg):
+        emit = jnp.zeros((2, EMIT_W), jnp.float32)
+        emit = emit.at[:, 0].set(t + 1.0).at[:, 1].set(0.0)
+        return state + 1, emit
+
+    reg.register("S", spawner, lookahead=1.0)
+    # capacity 4: the 2^k spawning cascade must overflow quickly
+    eng = DeviceEngine(reg, max_batch_len=2, capacity=4, max_emit=2)
+    q = eng.initial_queue([(0.0, 0, None)])
+    s, q, stats = eng.run(jnp.int32(0), q, max_batches=8)
+    assert int(stats["dropped"]) > 0
+    assert int(stats["dropped"]) == int(q.dropped)
+
+
+def test_entity_run_path_matches_sequential_dispatch():
+    """Single-type-run windows dispatched via vmap == switch dispatch."""
+    reg = EventRegistry()
+
+    def bump_seq(state, t, arg):
+        i = arg[0].astype(jnp.int32)
+        return state.at[i].add(t + 1.0)
+
+    reg.register("Bump", bump_seq, lookahead=10.0)
+    reg.register("Other", lambda s, t, a: s * 0.5 + 1.0, lookahead=10.0)
+    reg.freeze()
+
+    def bump_local(entity_state, t, arg):
+        return entity_state + t + 1.0
+
+    rng = np.random.default_rng(5)
+    events = []
+    perm = rng.permutation(6)
+    for k in range(12):
+        ty = int(rng.integers(0, 2))
+        arg = np.zeros((ARG_WIDTH,), np.float32)
+        arg[0] = float(perm[k % 6])  # distinct entities within any window
+        events.append((float(k), ty, arg))
+
+    state0 = jnp.zeros((6,), jnp.float32)
+    eng_run = DeviceEngine(reg, max_batch_len=4, capacity=32,
+                           entity_handlers={0: bump_local})
+    eng_seq = DeviceEngine(reg, max_batch_len=4, capacity=32)
+    s_run, _, st_run = eng_run.run(state0, eng_run.initial_queue(events))
+    s_seq, _, st_seq = eng_seq.run(state0, eng_seq.initial_queue(events))
+    np.testing.assert_allclose(np.asarray(s_run), np.asarray(s_seq),
+                               rtol=1e-6)
+    assert int(st_run["events"]) == int(st_seq["events"]) == len(events)
+
+
+def test_entity_handler_rejects_emitting_types():
+    reg = EventRegistry()
+
+    @emits_events
+    def e(state, t, arg):
+        return state, jnp.full((1, EMIT_W), -1.0, jnp.float32)
+
+    reg.register("E", e, lookahead=1.0)
+    with pytest.raises(ValueError, match="must not emit"):
+        DeviceEngine(reg, entity_handlers={0: lambda s, t, a: s})
