@@ -8,12 +8,23 @@ Two measurements:
 
 * ``scheduling_overhead`` — the cost of the queue machinery itself, on
   a trivial-handler workload (each event bumps a counter and emits one
-  far-future event, so per-batch time is almost pure scheduling): the
-  vectorized single-pass queue ops (sorted-prefix extract + counting
-  merge insert) against the seed per-event reference ops
-  (serial peek/pop argmin chains + one-at-a-time pushes), whole-run
-  per-batch and per-op.  Results land in ``BENCH_device_engine.json``
-  at the repo root so future PRs have a perf trajectory to track.
+  far-future event, so per-batch time is almost pure scheduling).
+  Two measurements:
+
+  - **anchor** (capacity 4096, max_batch_len 16, the PR-1 reference
+    point): whole-run per-batch and per-op split for all three queue
+    modes (tiered / flat / reference).
+
+  - **capacity sweep** (1k/4k/16k/64k × {tiered, flat}) at a FIXED
+    pending-set size, so what scales is only the allocated capacity:
+    whole-run per-batch cost plus a chained insert-op loop.  The
+    recorded ``insert_op_ratio_16k_over_1k`` is the capacity-
+    independence claim as a number: per-batch insert cost at 16384
+    must stay within 2x of its capacity-1024 cost under
+    ``queue_mode="tiered"``.
+
+  Results land in ``BENCH_device_engine.json`` at the repo root so
+  future PRs have a perf trajectory to track.
 """
 
 from __future__ import annotations
@@ -34,6 +45,8 @@ from repro.core.queue import (
     device_queue_extract_ref,
     device_queue_fill_rows,
     device_queue_push_rows,
+    tiered_queue_extract,
+    tiered_queue_fill_rows,
 )
 
 JSON_PATH = Path(__file__).resolve().parents[1] / "BENCH_device_engine.json"
@@ -102,66 +115,107 @@ def _trivial_registry():
 def _bench_op_loop(step, init, iters):
     """µs per application of ``step``, chained in one jitted fori_loop
     (matches how the ops run inside the engine — per-call dispatch
-    overhead would otherwise dominate and invert the comparison)."""
+    overhead would otherwise dominate and invert the comparison).
+
+    Short chains (small ``iters``) are re-launched enough times per
+    timing sample to keep each sample above ~1k steps; min over 5
+    samples filters scheduler noise.
+    """
     looped = jax.jit(
         lambda init: jax.lax.fori_loop(0, iters, lambda i, c: step(c), init)
     )
     jax.block_until_ready(looped(init))
+    launches = max(1, -(-1024 // iters))
     best = float("inf")
-    for _ in range(3):
+    for _ in range(5):
         t0 = time.perf_counter()
-        out = looped(init)
+        for _ in range(launches):
+            out = looped(init)
         jax.block_until_ready(out)
-        best = min(best, (time.perf_counter() - t0) / iters)
+        best = min(best, (time.perf_counter() - t0) / (iters * launches))
     return best * 1e6
 
 
+def _time_engine_run(eng, events, max_batches):
+    q = eng.initial_queue(events)
+    eng.run(jnp.int32(0), q, max_batches=max_batches)  # warm
+    best = float("inf")
+    for _ in range(3):
+        q = eng.initial_queue(events)
+        t0 = time.perf_counter()
+        s, _q, stats = eng.run(jnp.int32(0), q, max_batches=max_batches)
+        jax.block_until_ready(s)
+        best = min(best, time.perf_counter() - t0)
+    return best / int(stats["batches"]) * 1e6
+
+
+def _advancing_rows(max_len):
+    """One full emit block per iteration, timestamps marching forward
+    (the common DES shape — keeps the tiered staging on its append
+    path, as a real emitting workload would)."""
+    rows = np.full((max_len, 2 + ARG_WIDTH), -1.0, np.float32)
+    rows[:, 0] = np.arange(max_len, dtype=np.float32)
+    rows[:, 1] = 0.0
+    return jnp.asarray(rows)
+
+
+def _insert_op_us(eng, mode, events, max_len, base_t, in_iters):
+    """µs per chained emit-block insert starting from ``events`` pending.
+
+    ``in_iters`` must keep ``len(events) + in_iters * max_len`` within
+    capacity; callers pass the SAME count across a capacity sweep so
+    fixed loop overhead cancels out of the comparison.
+    """
+    q0 = eng.initial_queue(events)
+    rows = _advancing_rows(max_len)
+    fill = {"tiered": tiered_queue_fill_rows,
+            "flat": device_queue_fill_rows,
+            "reference": device_queue_push_rows}[mode]
+
+    def step(carry):
+        i, q = carry
+        block = rows.at[:, 0].add(base_t + i * max_len)
+        return i + 1, fill(q, block)
+
+    return _bench_op_loop(step, (jnp.int32(0), q0), in_iters)
+
+
 def scheduling_overhead(quick: bool = False):
-    capacity = 1024 if quick else 4096
     max_len = 16
     max_batches = 128 if quick else 512
+
+    # -- anchor: the PR-1 reference point, all three queue modes -------
+    capacity = 1024 if quick else 4096
     num_events = capacity - 2 * max_len
     events = [(float(t), 0, None) for t in range(num_events)]
 
     per_batch = {}
     engines = {}
-    for name, vec in (("vectorized", True), ("reference", False)):
-        reg = _trivial_registry()
-        eng = DeviceEngine(reg, max_batch_len=max_len, capacity=capacity,
-                           max_emit=1, use_vectorized_queue=vec)
-        engines[name] = eng
-        q = eng.initial_queue(events)
-        eng.run(jnp.int32(0), q, max_batches=max_batches)  # warm
-        best = float("inf")
-        for _ in range(3):
-            q = eng.initial_queue(events)
-            t0 = time.perf_counter()
-            s, _q, stats = eng.run(jnp.int32(0), q, max_batches=max_batches)
-            jax.block_until_ready(s)
-            best = min(best, time.perf_counter() - t0)
-        per_batch[name] = best / int(stats["batches"]) * 1e6
+    for mode in ("tiered", "flat", "reference"):
+        eng = DeviceEngine(_trivial_registry(), max_batch_len=max_len,
+                           capacity=capacity, max_emit=1, queue_mode=mode)
+        engines[mode] = eng
+        per_batch[mode] = _time_engine_run(eng, events, max_batches)
 
     # Per-op split: each op chained in its own fused loop, from a
     # representative steady state.
-    eng = engines["vectorized"]
+    eng = engines["flat"]
     la = eng._lookaheads
     q_full = eng.initial_queue(events)
-    q_half = eng.initial_queue(events[: num_events // 2])
-    rows = np.full((max_len, 2 + ARG_WIDTH), -1.0, np.float32)
-    rows[:, 0] = np.arange(max_len) + float(num_events)
-    rows[:, 1] = 0.0
-    rows = jnp.asarray(rows)
+    tq_full = engines["tiered"].initial_queue(events)
     _, ts, tys, args, length = device_queue_extract(q_full, max_len, la)
     code = eng.codec.encode_jnp(tys, length)
-    state0 = jnp.int32(0)
+    half = events[: num_events // 2]
 
-    # Iteration counts keep the extract loop from draining the queue and
-    # the insert loop from overflowing it.
+    # Iteration counts keep the extract loops from draining the queues
+    # and the insert loops from overflowing them.
     ex_iters = max(1, (num_events - max_len) // max_len)
-    in_iters = max(1, (capacity - num_events // 2 - max_len) // max_len)
     phase = {
         "extract": {
-            "vectorized": _bench_op_loop(
+            "tiered": _bench_op_loop(
+                lambda q: tiered_queue_extract(q, max_len, la)[0],
+                tq_full, ex_iters),
+            "flat": _bench_op_loop(
                 lambda q: device_queue_extract(q, max_len, la)[0],
                 q_full, ex_iters),
             "reference": _bench_op_loop(
@@ -169,33 +223,77 @@ def scheduling_overhead(quick: bool = False):
                 q_full, ex_iters),
         },
         "insert": {
-            "vectorized": _bench_op_loop(
-                lambda q: device_queue_fill_rows(q, rows), q_half, in_iters),
-            "reference": _bench_op_loop(
-                lambda q: device_queue_push_rows(q, rows), q_half, in_iters),
+            mode: _insert_op_us(
+                engines[mode], mode, half, max_len, float(num_events),
+                max(1, (capacity - num_events // 2 - max_len) // max_len))
+            for mode in ("tiered", "flat", "reference")
         },
         "dispatch": {
             "shared": _bench_op_loop(
                 lambda s: eng.dispatch(code, s, ts, tys, args)[0],
-                state0, 256),
+                jnp.int32(0), 256),
         },
     }
+
+    anchor = {
+        "capacity": capacity,
+        "max_batch_len": max_len,
+        "num_seed_events": num_events,
+        "batches_timed": max_batches,
+        "per_batch_us": {
+            **per_batch,
+            "speedup_tiered_vs_reference":
+                per_batch["reference"] / per_batch["tiered"],
+            "speedup_tiered_vs_flat":
+                per_batch["flat"] / per_batch["tiered"],
+        },
+        "per_op_us": phase,
+    }
+
+    # -- capacity sweep: fixed pending-set size, growing capacity ------
+    sweep_caps = [1024, 4096] if quick else [1024, 4096, 16384, 65536]
+    sweep_events = [(float(t), 0, None) for t in range(1000)]
+    insert_base = sweep_events[:256]
+    # Identical iteration count at every capacity (sized so the
+    # SMALLEST capacity cannot overflow): fixed loop overhead cancels.
+    sweep_iters = (min(sweep_caps) - len(insert_base) - max_len) // max_len
+    sweep = {}
+    for cap in sweep_caps:
+        row = {}
+        for mode in ("tiered", "flat"):
+            eng = DeviceEngine(_trivial_registry(), max_batch_len=max_len,
+                               capacity=cap, max_emit=1, queue_mode=mode)
+            row[mode] = {
+                "per_batch_us": _time_engine_run(
+                    eng, sweep_events, max_batches),
+                "insert_op_us": _insert_op_us(
+                    eng, mode, insert_base, max_len, 1000.0, sweep_iters),
+            }
+        sweep[str(cap)] = row
+
+    def ratio(hi, lo):
+        if str(hi) in sweep and str(lo) in sweep:
+            return (sweep[str(hi)]["tiered"]["insert_op_us"]
+                    / sweep[str(lo)]["tiered"]["insert_op_us"])
+        return None
 
     result = {
         "workload": {
             "description": "trivial emitting handler (counter + 1 far-future"
                            " emit); per-batch time ~= scheduling overhead",
-            "capacity": capacity,
             "max_batch_len": max_len,
             "max_emit": 1,
-            "num_seed_events": num_events,
             "batches_timed": max_batches,
         },
-        "per_batch_us": {
-            **per_batch,
-            "speedup": per_batch["reference"] / per_batch["vectorized"],
+        "anchor": anchor,
+        "capacity_sweep": {
+            "fixed_pending_events": 1000,
+            "insert_loop": {"base_pending": len(insert_base),
+                            "iters": sweep_iters},
+            "capacities": sweep,
+            "insert_op_ratio_16k_over_1k": ratio(16384, 1024),
+            "insert_op_ratio_64k_over_1k": ratio(65536, 1024),
         },
-        "per_op_us": phase,
     }
     return result
 
@@ -213,15 +311,25 @@ def main(quick: bool = False):
     print("events,host_us_per_event,device_us_per_event,device_speedup")
     print(f"{r['events']},{r['host_us_per_event']:.1f},"
           f"{r['device_us_per_event']:.1f},{r['device_speedup']:.2f}")
-    pb = sched["per_batch_us"]
-    print(f"scheduling us/batch: vectorized={pb['vectorized']:.1f} "
-          f"reference={pb['reference']:.1f} speedup={pb['speedup']:.2f}x "
-          f"(capacity={sched['workload']['capacity']}, "
-          f"k={sched['workload']['max_batch_len']})")
+    pb = sched["anchor"]["per_batch_us"]
+    print(f"scheduling us/batch @ cap={sched['anchor']['capacity']} "
+          f"k={sched['anchor']['max_batch_len']}: "
+          f"tiered={pb['tiered']:.1f} flat={pb['flat']:.1f} "
+          f"reference={pb['reference']:.1f} "
+          f"(tiered vs ref {pb['speedup_tiered_vs_reference']:.2f}x)")
+    for cap, row in sched["capacity_sweep"]["capacities"].items():
+        print(f"  cap={cap:>6}: tiered per_batch="
+              f"{row['tiered']['per_batch_us']:.1f}us insert="
+              f"{row['tiered']['insert_op_us']:.1f}us | flat per_batch="
+              f"{row['flat']['per_batch_us']:.1f}us insert="
+              f"{row['flat']['insert_op_us']:.1f}us")
+    ratio = sched["capacity_sweep"]["insert_op_ratio_16k_over_1k"]
+    if ratio is not None:
+        print(f"capacity-independence: tiered insert 16k/1k = {ratio:.2f}x")
     if not quick:
         print(f"wrote {JSON_PATH}")
     r = dict(r)
-    r["sched_speedup"] = pb["speedup"]
+    r["sched_speedup"] = pb["speedup_tiered_vs_reference"]
     return r
 
 

@@ -27,6 +27,7 @@ from repro.core.events import ARG_WIDTH, Event, EventRegistry, EventType, emits_
 from repro.core.queue import (
     DeviceQueue,
     HostEventQueue,
+    TieredDeviceQueue,
     device_queue_extract,
     device_queue_extract_ref,
     device_queue_fill_rows,
@@ -36,6 +37,13 @@ from repro.core.queue import (
     device_queue_pop,
     device_queue_push,
     device_queue_push_rows,
+    tiered_queue_extract,
+    tiered_queue_fill_rows,
+    tiered_queue_from_host,
+    tiered_queue_has_pending,
+    tiered_queue_init,
+    tiered_queue_occupancy,
+    tiered_queue_to_flat,
     window_prefix_mask,
 )
 from repro.core.scheduler import (
@@ -68,6 +76,7 @@ __all__ = [
     "RunStats",
     "Simulator",
     "SpeculativeScheduler",
+    "TieredDeviceQueue",
     "build_switch_dispatcher",
     "compose_word_fn",
     "dense_batch_count",
@@ -83,6 +92,13 @@ __all__ = [
     "emits_events",
     "extract_window",
     "extract_window_presorted",
+    "tiered_queue_extract",
+    "tiered_queue_fill_rows",
+    "tiered_queue_from_host",
+    "tiered_queue_has_pending",
+    "tiered_queue_init",
+    "tiered_queue_occupancy",
+    "tiered_queue_to_flat",
     "is_single_type_run",
     "make_codec",
     "make_masked_run_handler",

@@ -15,11 +15,21 @@ Two runtimes (DESIGN.md §2):
   optimization exactly as clang does in the paper, and there are zero
   host round-trips during the run.
 
-Per-batch scheduling is a constant number of vectorized passes
-(:func:`repro.core.queue.device_queue_extract` +
-:func:`repro.core.queue.device_queue_fill_rows`); pass
-``use_vectorized_queue=False`` to run the seed per-event reference ops
-instead (kept for differential testing and the overhead benchmark).
+Per-batch scheduling cost is selected by ``queue_mode`` (DESIGN.md §4):
+
+* ``"tiered"`` (default) — two-tier queue; per-batch work touches only
+  the small front/staging tiers, so scheduling overhead is independent
+  of queue capacity.
+* ``"flat"`` — the PR-1 single-array vectorized ops: a constant number
+  of data-parallel passes, but the emit merge is O(capacity) per batch.
+* ``"reference"`` — the seed per-event ops (serial argmin/scatter
+  chains); kept as the executable specification for differential
+  testing and the overhead benchmark.
+
+The queue argument to :meth:`DeviceEngine.run` is DONATED to the jitted
+program (its buffers are reused for the output queue), so a queue value
+must not be reused after being passed to ``run`` — rebuild it with
+:meth:`DeviceEngine.initial_queue` or use the returned queue.
 
 Single-type-run windows can additionally bypass the sequential switch
 branch: event types listed in ``entity_handlers`` are dispatched through
@@ -35,6 +45,7 @@ On-device emit convention: handlers marked with ``@emits_events`` return
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable, Mapping
 
 import jax
@@ -50,11 +61,16 @@ from repro.core.events import EventRegistry
 from repro.core.queue import (
     DeviceQueue,
     HostEventQueue,
+    TieredDeviceQueue,
     device_queue_extract,
     device_queue_extract_ref,
     device_queue_fill_rows,
     device_queue_from_host,
     device_queue_push_rows,
+    tiered_queue_extract,
+    tiered_queue_fill_rows,
+    tiered_queue_from_host,
+    tiered_queue_has_pending,
 )
 from repro.core.scheduler import (
     ConservativeScheduler,
@@ -119,8 +135,19 @@ class DeviceEngine:
                                                   max_batches=10_000)
 
     ``eng.run`` is jitted once; repeat calls with same-shaped inputs are
-    pure device execution.  Run stats include ``dropped``, the number of
-    emitted events lost to queue-capacity overflow.
+    pure device execution.  The queue argument is donated (consumed) —
+    build a fresh one per run or chain the returned queue.  Run stats
+    include ``dropped``, the number of emitted events lost to
+    queue-capacity overflow.
+
+    ``queue_mode`` selects the pending-set implementation:
+    ``"tiered"`` (default, capacity-independent per-batch cost),
+    ``"flat"`` (PR-1 single-array vectorized ops), or ``"reference"``
+    (seed per-event ops, the executable specification).  The deprecated
+    ``use_vectorized_queue`` flag maps True -> "flat", False ->
+    "reference".  ``front_cap``/``stage_cap`` size the tiered queue's
+    front tier and staging ring; the defaults scale with
+    ``max_batch_len`` and ``max_emit`` and are clamped to valid ranges.
 
     ``entity_handlers`` maps a type_id to an entity-local handler
     ``(entity_state, t, arg) -> entity_state`` over slices of the state
@@ -138,11 +165,48 @@ class DeviceEngine:
     capacity: int = 1024
     max_emit: int = 2
     t_end: float = float("inf")
-    use_vectorized_queue: bool = True
+    queue_mode: str = "tiered"
+    use_vectorized_queue: bool | None = None  # deprecated: see queue_mode
+    front_cap: int | None = None
+    stage_cap: int | None = None
     entity_handlers: Mapping[int, Callable] | None = None
 
     def __post_init__(self):
         self.registry.freeze()
+        if self.use_vectorized_queue is not None:
+            if self.queue_mode != "tiered":
+                raise ValueError(
+                    "pass either queue_mode or the deprecated "
+                    "use_vectorized_queue, not both "
+                    f"(got queue_mode={self.queue_mode!r}, "
+                    f"use_vectorized_queue={self.use_vectorized_queue})"
+                )
+            warnings.warn(
+                "use_vectorized_queue is deprecated; pass "
+                "queue_mode='flat' or 'reference' instead",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+            self.queue_mode = (
+                "flat" if self.use_vectorized_queue else "reference"
+            )
+        if self.queue_mode not in ("tiered", "flat", "reference"):
+            raise ValueError(
+                f"unknown queue_mode {self.queue_mode!r}; expected "
+                "'tiered', 'flat', or 'reference'"
+            )
+        # Tier sizing: the rare O(capacity) paths (front refill, staging
+        # flush) amortize over ~front_cap/max_batch_len resp.
+        # ~stage_cap/emit_rows batches, so both tiers default to many
+        # multiples of the per-batch quanta.
+        emit_rows = self.max_batch_len * self.max_emit
+        if self.front_cap is None:
+            self.front_cap = max(256, 8 * self.max_batch_len)
+        self.front_cap = min(max(self.front_cap, self.max_batch_len),
+                             self.capacity)
+        if self.stage_cap is None:
+            self.stage_cap = max(256, 8 * emit_rows)
+        self.stage_cap = max(self.stage_cap, emit_rows)
         self.codec = DenseCodec(len(self.registry), self.max_batch_len)
         self.dispatch = build_switch_dispatcher(
             self.registry, self.codec, max_emit=self.max_emit
@@ -172,16 +236,32 @@ class DeviceEngine:
         else:
             self._run_branch_of_type = None
             self._run_branches = []
-        self._run_jit = jax.jit(self._run, static_argnames=("max_batches",))
+        # The queue (arg 1) is donated: repeat runs reuse its
+        # capacity-sized buffers in place instead of copying them.  The
+        # state is NOT donated — callers routinely feed one initial
+        # state to several engines (and donation of a shared buffer
+        # would poison the caller's copy).
+        self._run_jit = jax.jit(
+            self._run, static_argnames=("max_batches",), donate_argnums=(1,)
+        )
 
     # -- queue construction -------------------------------------------------
-    def initial_queue(self, events) -> DeviceQueue:
+    def initial_queue(self, events) -> DeviceQueue | TieredDeviceQueue:
         # Built host-side, one device_put (None args become zero vectors).
+        if self.queue_mode == "tiered":
+            return tiered_queue_from_host(
+                events, self.capacity, front_cap=self.front_cap,
+                stage_cap=self.stage_cap,
+            )
         return device_queue_from_host(events, self.capacity)
 
     # -- extraction (paper Fig 2) --------------------------------------------
-    def _extract(self, queue: DeviceQueue):
-        if self.use_vectorized_queue:
+    def _extract(self, queue):
+        if self.queue_mode == "tiered":
+            return tiered_queue_extract(
+                queue, self.max_batch_len, self._lookaheads
+            )
+        if self.queue_mode == "flat":
             return device_queue_extract(
                 queue, self.max_batch_len, self._lookaheads
             )
@@ -221,16 +301,24 @@ class DeviceEngine:
         return jax.lax.cond(is_run, run_path, switch_path, state)
 
     # -- main loop ------------------------------------------------------------
-    def _run(self, state, queue: DeviceQueue, *, max_batches: int):
-        insert = (device_queue_fill_rows if self.use_vectorized_queue
-                  else device_queue_push_rows)
+    def _run(self, state, queue, *, max_batches: int):
+        inserts = {
+            "tiered": tiered_queue_fill_rows,
+            "flat": device_queue_fill_rows,
+            "reference": device_queue_push_rows,
+        }
+        insert = inserts[self.queue_mode]
 
         # Loop while events are actually pending.  `queue.size` alone is
         # wrong here: it counts overflow-dropped ghosts, which would spin
-        # the loop forever on an empty queue after an overflow.  Under
-        # the canonical sorted layout the head slot answers in O(1); the
-        # reference layout needs the full occupancy mask.
-        if self.use_vectorized_queue:
+        # the loop forever on an empty queue after an overflow.  The
+        # tiered check is refill-aware (the front may be empty while
+        # staging/main still hold events); under the canonical sorted
+        # layout the head slot answers in O(1); the reference layout
+        # needs the full occupancy mask.
+        if self.queue_mode == "tiered":
+            has_pending = tiered_queue_has_pending
+        elif self.queue_mode == "flat":
             has_pending = lambda queue: queue.types[0] >= 0
         else:
             has_pending = lambda queue: jnp.any(queue.types >= 0)
@@ -262,14 +350,19 @@ class DeviceEngine:
         }
         return jax.lax.while_loop(cond, body, (state, queue, stats0))
 
-    def run(self, state, queue: DeviceQueue, *, max_batches: int = 1 << 30):
+    def run(self, state, queue: DeviceQueue | TieredDeviceQueue, *,
+            max_batches: int = 1 << 30):
         state, queue, stats = self._run_jit(state, queue, max_batches=max_batches)
         stats = dict(stats)
         stats["dropped"] = queue.dropped
         return state, queue, stats
 
     def lower_run(self, state_spec, queue_spec, *, max_batches: int = 1 << 30):
-        """AOT lowering hook (used by tests and the dry-run)."""
-        return jax.jit(self._run, static_argnames=("max_batches",)).lower(
+        """AOT lowering hook (used by tests and the dry-run).
+
+        Lowers the same jitted function as :meth:`run`, so the AOT
+        executable keeps the documented queue-donation semantics.
+        """
+        return self._run_jit.lower(
             state_spec, queue_spec, max_batches=max_batches
         )

@@ -53,6 +53,29 @@ Two families of operations are provided:
   overflow behaviour bit-exactly; the two families must not be
   interleaved on one queue (the reference pushes do not maintain the
   canonical layout).
+
+* **Tiered ops** (DESIGN.md §4) over :class:`TieredDeviceQueue`, which
+  splits the pending set into a small sorted *front* tier (the globally
+  earliest events), an unsorted *staging* ring, and the capacity-sized
+  sorted *main* array, with the invariant ``max(front) <= min(staging
+  ∪ main)`` under the ``(time, seq)`` key.  Per-batch work touches only
+  the front and staging tiers — O(front_cap) regardless of capacity:
+
+  - :func:`tiered_queue_extract` reads the window from the front tier
+    (same shifted-cummin take rule); when the front has drained below
+    ``max_len`` it first refills from the main array (a rare
+    ``lax.cond`` path, amortized to ~zero per batch).
+
+  - :func:`tiered_queue_fill_rows` counting-merges emit rows whose
+    timestamp precedes the tier boundary into the front (evicting the
+    front tail to staging when full) and appends the rest to staging;
+    staging is bulk-merged into the main array only when it could
+    overflow on the next batch or the front drains.
+
+  The tiered ops reproduce the flat/reference ``(time, seq)`` pop order
+  and the ``size``/``next_seq``/``dropped`` accounting bit-exactly;
+  the logical capacity of the whole tiered queue equals the main
+  array's capacity (front and staging are structure, not extra room).
 """
 
 from __future__ import annotations
@@ -140,6 +163,33 @@ def device_queue_init(capacity: int, arg_width: int = ARG_WIDTH) -> DeviceQueue:
     )
 
 
+def _host_sorted_seed(events, capacity: int, arg_width: int):
+    """Shared host-side seed build: the surviving events as columns
+    sorted by ``(time, seq)``, plus the logical counters.
+
+    Semantically identical to serial reference pushes — ``seq`` runs
+    0..N-1 and events past ``capacity`` are dropped with
+    ``size``/``next_seq`` still advancing.  Both ``*_from_host``
+    builders split these columns into their own layouts, so the
+    reference overflow/seq semantics live in exactly one place.
+    """
+    events = list(events)
+    n = len(events)
+    m = min(n, capacity)
+    times = np.full((m,), np.inf, np.float32)
+    types = np.full((m,), -1, np.int32)
+    args = np.zeros((m, arg_width), np.float32)
+    seqs = np.zeros((m,), np.int32)
+    for i, (t, ty, arg) in enumerate(events[:m]):
+        times[i] = t
+        types[i] = ty
+        if arg is not None:
+            args[i] = np.asarray(arg, np.float32)
+        seqs[i] = i
+    order = np.lexsort((seqs, times))
+    return (times[order], types[order], args[order], seqs[order], n, m)
+
+
 def device_queue_from_host(
     events, capacity: int, arg_width: int = ARG_WIDTH
 ) -> DeviceQueue:
@@ -151,28 +201,17 @@ def device_queue_from_host(
     holds event ``i``, ``seq`` runs 0..N-1, events past ``capacity``
     are dropped with ``size``/``next_seq`` still advancing — but costs
     one transfer instead of N jitted dispatches.
+
+    Canonical layout (see module docstring): occupied slots form a
+    prefix sorted by (time, seq).  The reference ops are
+    layout-independent; the vectorized ops require and preserve it.
     """
-    events = list(events)
-    n = len(events)
-    m = min(n, capacity)
+    st, sy, sa, ss, n, m = _host_sorted_seed(events, capacity, arg_width)
     times = np.full((capacity,), np.inf, np.float32)
     types = np.full((capacity,), -1, np.int32)
     args = np.zeros((capacity, arg_width), np.float32)
     seqs = np.full((capacity,), 2**31 - 1, np.int32)
-    for i, (t, ty, arg) in enumerate(events[:m]):
-        times[i] = t
-        types[i] = ty
-        if arg is not None:
-            args[i] = np.asarray(arg, np.float32)
-        seqs[i] = i
-    # Canonical layout (see module docstring): occupied slots form a
-    # prefix sorted by (time, seq).  The reference ops are
-    # layout-independent; the vectorized ops require and preserve it.
-    order = np.lexsort((seqs[:m], times[:m]))
-    times[:m] = times[order]
-    types[:m] = types[order]
-    args[:m] = args[order]
-    seqs[:m] = seqs[order]
+    times[:m], types[:m], args[:m], seqs[:m] = st, sy, sa, ss
     return jax.device_put(DeviceQueue(
         times=times,
         types=types,
@@ -345,6 +384,17 @@ def _small_lex_perm(ts, sq):
     return jnp.zeros((m,), jnp.int32).at[rank].set(i)
 
 
+def _prefix_rank(mask):
+    """Rank of each position among the True positions of a TINY mask
+    (-1 where False counts itself out), via all-pairs counting — the
+    same avoid-a-scan-thunk reasoning as :func:`_small_lex_perm`."""
+    n = mask.shape[0]
+    i = jnp.arange(n, dtype=jnp.int32)
+    return jnp.sum(
+        (i[None, :] <= i[:, None]) & mask[None, :], axis=1
+    ).astype(jnp.int32) - 1
+
+
 def window_prefix_mask(ts, wins, valid):
     """Vectorized §III-B dynamic-lookahead take rule.
 
@@ -450,12 +500,9 @@ def device_queue_fill_rows(q: DeviceQueue, rows) -> DeviceQueue:
     arg_r = rows[:, 2:]
 
     valid = ty_r >= 0
-    # Rank of each row among the valid rows, via all-pairs counting (R
-    # is tiny; avoids a scan thunk per engine-loop iteration).
+    # Rank of each row among the valid rows (R is tiny).
     r_idx = jnp.arange(R, dtype=jnp.int32)
-    vrank = jnp.sum(
-        (r_idx[None, :] <= r_idx[:, None]) & valid[None, :], axis=1
-    ).astype(jnp.int32) - 1
+    vrank = _prefix_rank(valid)
     num_valid = jnp.sum(valid).astype(jnp.int32)
     # Serial-push overflow rule: row r inserts iff size + r < capacity
     # (size counts logical pushes, so it may already exceed occupancy).
@@ -514,4 +561,537 @@ def device_queue_fill_rows(q: DeviceQueue, rows) -> DeviceQueue:
         size=q.size + num_valid,
         next_seq=q.next_seq + num_valid,
         dropped=q.dropped + (num_valid - num_insert),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Two-tier queue: front / staging / main (DESIGN.md §4)
+# ---------------------------------------------------------------------------
+
+class TieredDeviceQueue(NamedTuple):
+    """Pending-event set split into three tiers (a JAX pytree).
+
+    * ``f_*`` — the **front** tier: ``front_cap`` slots in canonical
+      layout (occupied prefix sorted by ``(time, seq)``), holding the
+      globally earliest pending events.  Every per-batch operation
+      touches only this tier (plus the staging ring), so per-batch cost
+      is O(front_cap), independent of ``capacity``.
+    * ``s_*`` — the **staging** ring: ``stage_cap`` slots of events that
+      sort after the front boundary, in arrival order.  Bulk-merged into
+      the main array only when it could overflow or the front drains.
+    * ``m_*`` — the **main** array: ``capacity`` slots holding the far
+      future as a head-offset ring: the logical (sorted) main tier is
+      the ``main_n`` slots starting at ``m_head``.  Refills consume
+      from the head without shifting, staging flushes append sorted
+      blocks at the tail, and the slots before ``m_head`` are dead
+      (stale, NOT sentinel-cleared) until a merge flush compacts the
+      ring back to ``m_head = 0``.
+
+    Tier invariant: ``max(front) <= min(staging ∪ main)`` under the
+    lexicographic ``(time, seq)`` key.  ``size``/``next_seq``/``dropped``
+    follow the reference semantics exactly (``size`` counts logical
+    pushes including overflow ghosts); the *logical* capacity is
+    ``capacity`` — the front and staging arrays add structure, not room.
+    """
+
+    f_times: jnp.ndarray   # f32[front_cap]
+    f_types: jnp.ndarray   # i32[front_cap], -1 = empty
+    f_args: jnp.ndarray    # f32[front_cap, ARG_WIDTH]
+    f_seqs: jnp.ndarray    # i32[front_cap]
+    m_times: jnp.ndarray   # f32[capacity]
+    m_types: jnp.ndarray   # i32[capacity]
+    m_args: jnp.ndarray    # f32[capacity, ARG_WIDTH]
+    m_seqs: jnp.ndarray    # i32[capacity]
+    s_times: jnp.ndarray   # f32[stage_cap]
+    s_types: jnp.ndarray   # i32[stage_cap]
+    s_args: jnp.ndarray    # f32[stage_cap, ARG_WIDTH]
+    s_seqs: jnp.ndarray    # i32[stage_cap]
+    s_evict: jnp.ndarray   # bool[stage_cap], True = evicted from front
+    front_n: jnp.ndarray   # i32 scalar, occupied front slots
+    main_n: jnp.ndarray    # i32 scalar, occupied main slots
+    m_head: jnp.ndarray    # i32 scalar, first logical main slot (ring)
+    stage_n: jnp.ndarray   # i32 scalar, occupied staging slots
+    size: jnp.ndarray      # i32 scalar, logical pushes (incl. ghosts)
+    next_seq: jnp.ndarray  # i32 scalar
+    dropped: jnp.ndarray   # i32 scalar
+
+    @property
+    def capacity(self) -> int:
+        return self.m_times.shape[0]
+
+    @property
+    def front_cap(self) -> int:
+        return self.f_times.shape[0]
+
+    @property
+    def stage_cap(self) -> int:
+        return self.s_times.shape[0]
+
+
+def _sentinel_cols(n: int, arg_width: int):
+    return (
+        jnp.full((n,), jnp.inf, jnp.float32),
+        jnp.full((n,), -1, jnp.int32),
+        jnp.zeros((n, arg_width), jnp.float32),
+        jnp.full((n,), 2**31 - 1, jnp.int32),
+    )
+
+
+def tiered_queue_init(capacity: int, *, front_cap: int = 256,
+                      stage_cap: int = 256,
+                      arg_width: int = ARG_WIDTH) -> TieredDeviceQueue:
+    front_cap = min(front_cap, capacity)
+    ft, fy, fa, fs = _sentinel_cols(front_cap, arg_width)
+    mt, my, ma, ms = _sentinel_cols(capacity, arg_width)
+    st, sy, sa, ss = _sentinel_cols(stage_cap, arg_width)
+    z = jnp.int32(0)
+    return TieredDeviceQueue(
+        f_times=ft, f_types=fy, f_args=fa, f_seqs=fs,
+        m_times=mt, m_types=my, m_args=ma, m_seqs=ms,
+        s_times=st, s_types=sy, s_args=sa, s_seqs=ss,
+        s_evict=jnp.zeros((stage_cap,), bool),
+        front_n=z, main_n=z, m_head=z, stage_n=z, size=z, next_seq=z,
+        dropped=z,
+    )
+
+
+def tiered_queue_from_host(events, capacity: int, *, front_cap: int = 256,
+                           stage_cap: int = 256,
+                           arg_width: int = ARG_WIDTH) -> TieredDeviceQueue:
+    """Host-built seed queue, one device_put (cf. device_queue_from_host).
+
+    Events are sorted by ``(time, seq)``; the earliest ``front_cap`` go
+    to the front tier, the rest to the main array.  Same logical
+    semantics as N serial pushes: ``seq`` runs 0..N-1 and events past
+    ``capacity`` are dropped with ``size``/``next_seq`` still advancing.
+    """
+    front_cap = min(front_cap, capacity)
+    times, types, args, seqs, n, m = _host_sorted_seed(
+        events, capacity, arg_width
+    )
+    nf = min(m, front_cap)
+    ft = np.full((front_cap,), np.inf, np.float32)
+    fy = np.full((front_cap,), -1, np.int32)
+    fa = np.zeros((front_cap, arg_width), np.float32)
+    fs = np.full((front_cap,), 2**31 - 1, np.int32)
+    ft[:nf], fy[:nf], fa[:nf], fs[:nf] = (
+        times[:nf], types[:nf], args[:nf], seqs[:nf]
+    )
+    mt = np.full((capacity,), np.inf, np.float32)
+    my = np.full((capacity,), -1, np.int32)
+    ma = np.zeros((capacity, arg_width), np.float32)
+    ms = np.full((capacity,), 2**31 - 1, np.int32)
+    nm = m - nf
+    mt[:nm], my[:nm], ma[:nm], ms[:nm] = (
+        times[nf:], types[nf:], args[nf:], seqs[nf:]
+    )
+    st, sy, sa, ss = (np.full((stage_cap,), np.inf, np.float32),
+                      np.full((stage_cap,), -1, np.int32),
+                      np.zeros((stage_cap, arg_width), np.float32),
+                      np.full((stage_cap,), 2**31 - 1, np.int32))
+    return jax.device_put(TieredDeviceQueue(
+        f_times=ft, f_types=fy, f_args=fa, f_seqs=fs,
+        m_times=mt, m_types=my, m_args=ma, m_seqs=ms,
+        s_times=st, s_types=sy, s_args=sa, s_seqs=ss,
+        s_evict=np.zeros((stage_cap,), bool),
+        front_n=np.int32(nf), main_n=np.int32(nm), m_head=np.int32(0),
+        stage_n=np.int32(0),
+        size=np.int32(n), next_seq=np.int32(n), dropped=np.int32(n - m),
+    ))
+
+
+def tiered_queue_has_pending(q: TieredDeviceQueue):
+    """True while any tier holds a real event.
+
+    ``size`` alone is wrong (it counts overflow ghosts), and the front
+    head alone is wrong too — the front may be empty while staging/main
+    still hold events awaiting a refill.  O(1) from the tier counters.
+    """
+    return (q.front_n > 0) | (q.stage_n > 0) | (q.main_n > 0)
+
+
+def tiered_queue_occupancy(q: TieredDeviceQueue):
+    """Number of real pending events across all tiers (O(1))."""
+    return q.front_n + q.stage_n + q.main_n
+
+
+def _flush_stage(q: TieredDeviceQueue) -> TieredDeviceQueue:
+    """Bulk-merge the staging ring into the main array (rare path).
+
+    Unlike the emit-row merge, staged keys need lexicographic positions
+    AGAINST BOTH TIE DIRECTIONS: a fresh emit's seq exceeds every main
+    seq (equal-time main events precede it -> ``searchsorted`` with
+    ``side="right"``), while a front-evicted event predates every
+    equal-time main event — the ``main >= front`` invariant held while
+    it sat in the front, so any equal-time event that reached main has a
+    LARGER seq (-> ``side="left"``).  The ``s_evict`` tag records which
+    rule applies; no all-pairs seq comparison is needed.  Merge
+    positions are unique, so the column rebuild reduces to a scatter
+    histogram + exclusive cumsum plus one gather — a linear pass over
+    the output, only on the (rarer still) merge fallback; the common
+    far-future case is an O(stage_cap) tail append.  Never drops: the
+    logical-capacity rule guarantees ``main_n + stage_n <= capacity``.
+    """
+    S = q.stage_cap
+    C = q.capacity
+    perm = _small_lex_perm(q.s_times, q.s_seqs)
+    st = q.s_times[perm]
+    sty = q.s_types[perm]
+    sarg = q.s_args[perm]
+    sseq = q.s_seqs[perm]
+    sev = q.s_evict[perm]
+    sval = sty >= 0
+
+    # Fast path: every staged timestamp strictly exceeds the main tail
+    # (the overwhelmingly common DES shape — emissions land in the
+    # future) and the sorted block fits before the physical end of the
+    # ring: one O(stage_cap) dynamic_update_slice at the tail.
+    head = jnp.where(q.main_n > 0, q.m_head, 0)
+    tail = head + q.main_n
+    m_last = jnp.take(q.m_times, jnp.clip(tail - 1, 0, C - 1))
+    can_append = (q.main_n == 0) | (st[0] > m_last)
+    can_append = can_append & (tail + S <= C)
+
+    def append(q):
+        def put(col, scol):
+            return jax.lax.dynamic_update_slice_in_dim(col, scol, tail, 0)
+
+        return q._replace(
+            m_times=put(q.m_times, st),
+            m_types=put(q.m_types, sty),
+            m_args=put(q.m_args, sarg),
+            m_seqs=put(q.m_seqs, sseq),
+            m_head=head,
+        )
+
+    def merge_all(q):
+        # Rotate the ring back to physical 0 (masking the dead slots
+        # before the head and the stale tail), then counting-merge.
+        i_idx = jnp.arange(C, dtype=jnp.int32)
+        logical = (i_idx + q.m_head) % C
+        live = i_idx < q.main_n
+
+        def unroll(col, fill):
+            rolled = jnp.take(col, logical, axis=0)
+            mask = live if col.ndim == 1 else live[:, None]
+            return jnp.where(mask, rolled, fill)
+
+        mt = unroll(q.m_times, jnp.inf)
+        my = unroll(q.m_types, -1)
+        ma = unroll(q.m_args, 0.0)
+        ms = unroll(q.m_seqs, 2**31 - 1)
+
+        older = jnp.where(
+            sev,
+            jnp.searchsorted(mt, st, side="left").astype(jnp.int32),
+            jnp.searchsorted(mt, st, side="right").astype(jnp.int32),
+        )
+        older = jnp.minimum(older, q.main_n)
+        j_idx = jnp.arange(S, dtype=jnp.int32)
+        pos = jnp.where(sval, older + j_idx, C)
+
+        # Positions are unique, so the per-slot insert counts reduce to
+        # a scatter-histogram + exclusive cumsum — one linear pass over
+        # the output instead of a per-slot binary search.
+        counts = jnp.zeros((C,), jnp.int32).at[pos].add(1, mode="drop")
+        csum = jnp.cumsum(counts)
+        ins_before = (csum - counts).astype(jnp.int32)
+        is_ins = counts > 0
+        src = jnp.where(
+            is_ins, C + jnp.clip(ins_before, 0, S - 1),
+            jnp.clip(i_idx - ins_before, 0, C - 1),
+        )
+
+        def merge(col, scol):
+            return jnp.take(jnp.concatenate([col, scol]), src, axis=0)
+
+        return q._replace(
+            m_times=merge(mt, st),
+            m_types=merge(my, sty),
+            m_args=merge(ma, sarg),
+            m_seqs=merge(ms, sseq),
+            m_head=jnp.int32(0),
+        )
+
+    # When the ring is smaller than the staging block the append path
+    # can never fire (and would not even trace) — elide it statically.
+    if S <= C:
+        q = jax.lax.cond(can_append, append, merge_all, q)
+    else:
+        q = merge_all(q)
+    empty_t, empty_y, empty_a, empty_s = _sentinel_cols(S, q.s_args.shape[1])
+    return q._replace(
+        s_times=empty_t, s_types=empty_y, s_args=empty_a, s_seqs=empty_s,
+        s_evict=jnp.zeros((S,), bool),
+        main_n=q.main_n + q.stage_n,
+        stage_n=jnp.int32(0),
+    )
+
+
+def _refill_front(q: TieredDeviceQueue) -> TieredDeviceQueue:
+    """Refill the front tier from the main array (rare-ish path).
+
+    Staging is flushed first (staged keys may precede the main head),
+    after which every main element sorts after every front element, so
+    the refill is a plain concatenation: front occupied prefix followed
+    by the main head.  The main ring just advances ``m_head`` — an
+    O(front_cap) gather, no O(capacity) shift.
+    """
+    q = jax.lax.cond(q.stage_n > 0, _flush_stage, lambda q: q, q)
+    F = q.front_cap
+    C = q.capacity
+    take = jnp.minimum(F - q.front_n, q.main_n)
+    i_idx = jnp.arange(F, dtype=jnp.int32)
+    src = jnp.where(
+        i_idx < q.front_n, i_idx,
+        F + jnp.clip(q.m_head + i_idx - q.front_n, 0, C - 1),
+    )
+    fill_ok = i_idx < q.front_n + take
+
+    def refill(fcol, mcol, fill):
+        out = jnp.take(jnp.concatenate([fcol, mcol]), src, axis=0)
+        mask = fill_ok if out.ndim == 1 else fill_ok[:, None]
+        return jnp.where(mask, out, fill)
+
+    main_n = q.main_n - take
+    return q._replace(
+        f_times=refill(q.f_times, q.m_times, jnp.inf),
+        f_types=refill(q.f_types, q.m_types, -1),
+        f_args=refill(q.f_args, q.m_args, 0.0),
+        f_seqs=refill(q.f_seqs, q.m_seqs, 2**31 - 1),
+        front_n=q.front_n + take,
+        main_n=main_n,
+        m_head=jnp.where(main_n > 0, q.m_head + take, 0),
+    )
+
+
+def tiered_queue_extract(q: TieredDeviceQueue, max_len: int, lookaheads):
+    """Window extraction from the front tier (paper Fig 2).
+
+    Identical take rule and output as :func:`device_queue_extract`, but
+    the candidate read, prefix mask, and shift-left pop all touch only
+    the ``front_cap``-sized front tier — O(front_cap) per batch
+    regardless of capacity.  When the front has drained below
+    ``max_len`` while later tiers still hold events, a ``lax.cond``
+    refills it from the main array first (amortized over
+    ``(front_cap - max_len) / max_len`` batches).
+
+    Returns ``(q', ts, tys, args, length)``.
+    """
+    if max_len > q.front_cap:
+        raise ValueError(
+            f"max_len {max_len} exceeds front tier capacity {q.front_cap}"
+        )
+    k = max_len
+    F = q.front_cap
+    num_types = lookaheads.shape[0]
+
+    need_refill = (q.front_n < k) & ((q.stage_n > 0) | (q.main_n > 0))
+    q = jax.lax.cond(need_refill, _refill_front, lambda q: q, q)
+
+    ts_c = q.f_times[:k]
+    tys_c = q.f_types[:k]
+    valid = tys_c >= 0
+    la = lookaheads[jnp.clip(tys_c, 0, num_types - 1)]
+    wins = jnp.where(valid, ts_c + la, jnp.inf)
+    take = window_prefix_mask(ts_c, wins, valid)
+    length = jnp.sum(take).astype(jnp.int32)
+
+    ts = jnp.where(take, ts_c, 0.0)
+    tys = jnp.where(take, tys_c, 0)
+    args = jnp.where(take[:, None], q.f_args[:k], 0.0)
+
+    def shift(col, fill):
+        pad = jnp.full((k,) + col.shape[1:], fill, col.dtype)
+        return jax.lax.dynamic_slice_in_dim(
+            jnp.concatenate([col, pad]), length, F
+        )
+
+    q = q._replace(
+        f_times=shift(q.f_times, jnp.inf),
+        f_types=shift(q.f_types, -1),
+        f_args=shift(q.f_args, 0.0),
+        f_seqs=shift(q.f_seqs, 2**31 - 1),
+        front_n=q.front_n - length,
+        size=q.size - length,
+    )
+    return q, ts, tys, args, length
+
+
+def tiered_queue_fill_rows(q: TieredDeviceQueue, rows) -> TieredDeviceQueue:
+    """Per-batch emit insert touching only the front and staging tiers.
+
+    Row layout is ``(time, type, arg...)``; ``type < 0`` rows are
+    skipped.  Valid row ``r`` receives ``seq = next_seq + r`` and is
+    dropped iff ``size + r >= capacity`` — bit-exact reference overflow
+    accounting (``size`` counts ghosts).  Surviving rows whose timestamp
+    precedes the tier boundary (the earliest key in staging ∪ main) are
+    counting-merged into the sorted front at O(front_cap · R) fused
+    bools + O(front_cap) gathers; rows at or past the boundary append to
+    the staging ring.  A full front evicts its tail to staging (the
+    merge output is ``front_cap + R`` wide, so nothing is lost), and a
+    staging ring that could overflow on this batch is first bulk-merged
+    into the main array via the rare :func:`_flush_stage` path.
+
+    No O(capacity) work on the common path — this is what makes
+    per-batch scheduling cost independent of queue capacity.
+    """
+    rows = jnp.asarray(rows, jnp.float32)
+    R = rows.shape[0]
+    F = q.front_cap
+    C = q.capacity
+    if R > q.stage_cap:
+        raise ValueError(
+            f"emit block of {R} rows exceeds stage_cap {q.stage_cap}"
+        )
+
+    # Staging must absorb up to R appends this batch (direct + evicted).
+    q = jax.lax.cond(
+        q.stage_n + R > q.stage_cap, _flush_stage, lambda q: q, q
+    )
+
+    t_r = rows[:, 0]
+    ty_r = rows[:, 1].astype(jnp.int32)
+    arg_r = rows[:, 2:]
+    valid = ty_r >= 0
+    r_idx = jnp.arange(R, dtype=jnp.int32)
+    vrank = _prefix_rank(valid)
+    num_valid = jnp.sum(valid).astype(jnp.int32)
+    insert = valid & (q.size + vrank < C)
+    num_insert = jnp.sum(insert).astype(jnp.int32)
+    seq_r = q.next_seq + vrank
+
+    # Tier boundary: earliest key outside the front.  Emit seqs all
+    # exceed every queued seq, so a timestamp TIE with the boundary
+    # already sorts the row after it — the partition is on time alone.
+    # The main head is read at the ring offset (slots before m_head are
+    # dead and must not leak into the boundary).
+    m_min = jnp.where(
+        q.main_n > 0,
+        jnp.take(q.m_times, jnp.clip(q.m_head, 0, C - 1)),
+        jnp.inf,
+    )
+    b_time = jnp.minimum(m_min, jnp.min(q.s_times))
+    to_front = insert & (t_r < b_time)
+    to_stage = insert & ~to_front
+
+    # --- front merge (output F + R wide: overflow becomes eviction) ---
+    FE = F + R
+    perm = _small_lex_perm(
+        jnp.where(to_front, t_r, jnp.inf),
+        jnp.where(to_front, r_idx, _I32_MAX),
+    )
+    rt = jnp.where(to_front, t_r, jnp.inf)[perm]
+    rty = ty_r[perm]
+    rarg = arg_r[perm]
+    rseq = seq_r[perm]
+    rins = to_front[perm]
+
+    # Same strict-total-order shortcut as device_queue_fill_rows: row
+    # seqs all exceed queued seqs, so position = searchsorted on time.
+    older = jnp.minimum(
+        jnp.searchsorted(q.f_times, rt, side="right").astype(jnp.int32),
+        q.front_n,
+    )
+    pos = jnp.where(rins, older + r_idx, FE + R)
+
+    # `pos` ascends over the lex-sorted rows: searchsorted rebuild.
+    i_idx = jnp.arange(FE, dtype=jnp.int32)
+    ins_before = jnp.searchsorted(pos, i_idx, side="left").astype(jnp.int32)
+    is_ins = (
+        jnp.searchsorted(pos, i_idx, side="right").astype(jnp.int32)
+        > ins_before
+    )
+    src = jnp.where(
+        is_ins, FE + jnp.clip(ins_before, 0, R - 1),
+        jnp.clip(i_idx - ins_before, 0, FE - 1),
+    )
+
+    def fmerge(col, rcol, fill):
+        ext = jnp.concatenate(
+            [col, jnp.full((R,) + col.shape[1:], fill, col.dtype), rcol]
+        )
+        return jnp.take(ext, src, axis=0)
+
+    merged_t = fmerge(q.f_times, rt, jnp.inf)
+    merged_y = fmerge(q.f_types, rty, -1)
+    merged_a = fmerge(q.f_args, rarg, 0.0)
+    merged_s = fmerge(q.f_seqs, rseq, 2**31 - 1)
+
+    n_front = jnp.sum(to_front).astype(jnp.int32)
+    occ_after = q.front_n + n_front
+    evict_cnt = jnp.maximum(occ_after - F, 0)
+    front_n_new = jnp.minimum(occ_after, F)
+
+    # --- staging appends: evicted front tail, then direct rows --------
+    SC = q.stage_cap
+    e_valid = merged_y[F:] >= 0
+    dest_e = jnp.where(e_valid, q.stage_n + r_idx, SC)
+    srank = _prefix_rank(to_stage)
+    dest_s = jnp.where(to_stage, q.stage_n + evict_cnt + srank, SC)
+    n_stage = jnp.sum(to_stage).astype(jnp.int32)
+
+    def stage_put(col, evals, svals):
+        col = col.at[dest_e].set(evals, mode="drop")
+        return col.at[dest_s].set(svals, mode="drop")
+
+    s_evict = q.s_evict.at[dest_e].set(True, mode="drop")
+    s_evict = s_evict.at[dest_s].set(False, mode="drop")
+
+    return q._replace(
+        f_times=merged_t[:F], f_types=merged_y[:F],
+        f_args=merged_a[:F], f_seqs=merged_s[:F],
+        s_times=stage_put(q.s_times, merged_t[F:], t_r),
+        s_types=stage_put(q.s_types, merged_y[F:], ty_r),
+        s_args=stage_put(q.s_args, merged_a[F:], arg_r),
+        s_seqs=stage_put(q.s_seqs, merged_s[F:], seq_r),
+        s_evict=s_evict,
+        front_n=front_n_new,
+        stage_n=q.stage_n + evict_cnt + n_stage,
+        size=q.size + num_valid,
+        next_seq=q.next_seq + num_valid,
+        dropped=q.dropped + (num_valid - num_insert),
+    )
+
+
+def tiered_queue_to_flat(q: TieredDeviceQueue) -> DeviceQueue:
+    """Canonical flat view of a tiered queue (host-side, for tests).
+
+    Gathers the occupied slots of all three tiers, sorts by
+    ``(time, seq)``, and lays them out as a canonical
+    :class:`DeviceQueue` with identical logical counters — the flat and
+    reference ops' view of the same pending set.
+    """
+    head, main_n = int(q.m_head), int(q.main_n)
+    cols = []
+    for pre in ("f", "m", "s"):
+        cols.append(tuple(
+            np.asarray(getattr(q, f"{pre}_{name}"))
+            for name in ("times", "types", "args", "seqs")
+        ))
+    # Only the live window of the main ring — slots outside
+    # [m_head, m_head + main_n) are dead (stale values, not sentinels).
+    cols[1] = tuple(c[head:head + main_n] for c in cols[1])
+    times = np.concatenate([c[0] for c in cols])
+    types = np.concatenate([c[1] for c in cols])
+    args = np.concatenate([c[2] for c in cols])
+    seqs = np.concatenate([c[3] for c in cols])
+    occ = types >= 0
+    order = np.lexsort((seqs[occ], times[occ]))
+    n = int(occ.sum())
+    C = q.capacity
+    assert n <= C, "tier occupancy exceeded logical capacity"
+    out_t = np.full((C,), np.inf, np.float32)
+    out_y = np.full((C,), -1, np.int32)
+    out_a = np.zeros((C, q.f_args.shape[1]), np.float32)
+    out_s = np.full((C,), 2**31 - 1, np.int32)
+    out_t[:n] = times[occ][order]
+    out_y[:n] = types[occ][order]
+    out_a[:n] = args[occ][order]
+    out_s[:n] = seqs[occ][order]
+    return DeviceQueue(
+        times=jnp.asarray(out_t), types=jnp.asarray(out_y),
+        args=jnp.asarray(out_a), seqs=jnp.asarray(out_s),
+        size=jnp.asarray(q.size), next_seq=jnp.asarray(q.next_seq),
+        dropped=jnp.asarray(q.dropped),
     )

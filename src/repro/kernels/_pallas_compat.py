@@ -1,0 +1,12 @@
+"""Version compatibility for ``jax.experimental.pallas.tpu`` API drift.
+
+``TPUCompilerParams`` was renamed ``CompilerParams`` across jax
+releases; resolve whichever name this jax provides once, here, so the
+kernels stay import-clean on both sides of the rename.
+"""
+
+from jax.experimental.pallas import tpu as _pltpu
+
+CompilerParams = getattr(_pltpu, "CompilerParams", None) or getattr(
+    _pltpu, "TPUCompilerParams"
+)

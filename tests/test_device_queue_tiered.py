@@ -1,0 +1,371 @@
+"""Differential tests: tiered (front/staging/main) device-queue ops vs
+the seed per-event reference ops and the PR-1 flat vectorized ops.
+
+The tiered ops must reproduce the reference ``(time, seq)`` pop order
+BIT-EXACTLY — including timestamp ties, exactly-full tiers, staging-ring
+spill (front eviction), the append fast path, ring compaction, and
+overflow across all three tiers — over random interleaved event
+streams.  ``tiered_queue_to_flat`` provides the layout-independent view
+used for queue-content comparison.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import DeviceEngine, EventRegistry, emits_events
+from repro.core.events import ARG_WIDTH
+from repro.core.queue import (
+    device_queue_extract_ref,
+    device_queue_from_host,
+    device_queue_init,
+    device_queue_pop,
+    device_queue_push_rows,
+    tiered_queue_extract,
+    tiered_queue_fill_rows,
+    tiered_queue_from_host,
+    tiered_queue_has_pending,
+    tiered_queue_init,
+    tiered_queue_occupancy,
+    tiered_queue_to_flat,
+)
+
+EMIT_W = 2 + ARG_WIDTH
+
+# jit the per-step ops once per shape config: the differential loops
+# below apply them hundreds of times.
+_fill_tiered = jax.jit(tiered_queue_fill_rows)
+_fill_ref = jax.jit(device_queue_push_rows)
+_extract_tiered = jax.jit(tiered_queue_extract, static_argnums=1)
+_extract_ref = jax.jit(device_queue_extract_ref, static_argnums=1)
+
+
+def canonical(q):
+    """Layout-independent view: occupied slots sorted by (time, seq)."""
+    times = np.asarray(q.times)
+    types = np.asarray(q.types)
+    args = np.asarray(q.args)
+    seqs = np.asarray(q.seqs)
+    occ = types >= 0
+    order = np.lexsort((seqs[occ], times[occ]))
+    return {
+        "times": times[occ][order],
+        "types": types[occ][order],
+        "args": args[occ][order],
+        "seqs": seqs[occ][order],
+        "size": int(q.size),
+        "next_seq": int(q.next_seq),
+        "dropped": int(q.dropped),
+    }
+
+
+def assert_tiered_equals_flat(qt, qf, msg=""):
+    ca, cb = canonical(tiered_queue_to_flat(qt)), canonical(qf)
+    for field, va in ca.items():
+        np.testing.assert_array_equal(
+            va, cb[field], err_msg=f"{msg}: field {field!r} diverged",
+        )
+
+
+def random_rows(rng, n_rows, *, p_valid=0.7, num_types=3, t_lo=0, t_hi=5):
+    rows = np.zeros((n_rows, EMIT_W), np.float32)
+    rows[:, 1] = -1.0
+    for i in range(n_rows):
+        if rng.random() < p_valid:
+            # small integer times force heavy timestamp ties
+            rows[i, 0] = float(rng.integers(t_lo, t_hi))
+            rows[i, 1] = float(rng.integers(0, num_types))
+            rows[i, 2:] = rng.random(ARG_WIDTH).astype(np.float32)
+    return jnp.asarray(rows)
+
+
+def run_differential(seed, capacity, max_len, front_cap, stage_cap,
+                     steps=50, n_rows=4):
+    """Random interleaving of bulk inserts and window extractions; the
+    tiered and reference paths must agree on every intermediate queue
+    state and every extracted window."""
+    rng = np.random.default_rng(seed)
+    lookaheads = jnp.asarray(
+        rng.choice([0.0, 0.5, 1.0, np.inf], size=3), jnp.float32
+    )
+    qa = tiered_queue_init(capacity, front_cap=front_cap,
+                           stage_cap=stage_cap)
+    qb = device_queue_init(capacity)
+    for step in range(steps):
+        if rng.random() < 0.5:
+            rows = random_rows(rng, n_rows)
+            qa = _fill_tiered(qa, rows)
+            qb = _fill_ref(qb, rows)
+        else:
+            qa, tsa, tya, aa, la = _extract_tiered(qa, max_len, lookaheads)
+            qb, tsb, tyb, ab, lb = _extract_ref(qb, max_len, lookaheads)
+            msg = f"seed {seed} step {step}"
+            np.testing.assert_array_equal(
+                np.asarray(tsa), np.asarray(tsb), err_msg=msg)
+            np.testing.assert_array_equal(
+                np.asarray(tya), np.asarray(tyb), err_msg=msg)
+            np.testing.assert_array_equal(
+                np.asarray(aa), np.asarray(ab), err_msg=msg)
+            assert int(la) == int(lb), msg
+        assert_tiered_equals_flat(qa, qb, msg=f"seed {seed} step {step}")
+        occ = int(tiered_queue_occupancy(qa))
+        assert occ <= capacity, "tier occupancy exceeded logical capacity"
+        assert bool(tiered_queue_has_pending(qa)) == (occ > 0)
+
+
+# Tiny tiers force every rare path: front eviction, staging spill,
+# flush merge, refill.  front_cap == capacity exercises the degenerate
+# everything-in-front config; stage_cap > capacity the static
+# append-elision path.
+@pytest.mark.parametrize("front_cap,stage_cap", [
+    (6, 4), (4, 5), (5, 7), (24, 24), (8, 40),
+])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_interleaved_stream_differential(seed, front_cap, stage_cap):
+    run_differential(seed, capacity=24, max_len=4,
+                     front_cap=front_cap, stage_cap=stage_cap)
+
+
+def test_pop_order_bit_exact_under_ties():
+    """max_len=1 extraction must reproduce device_queue_pop's
+    lexicographic (time, seq) order exactly, including ties."""
+    rng = np.random.default_rng(7)
+    lookaheads = jnp.asarray([0.0, 0.0], jnp.float32)
+    events = [(float(rng.integers(0, 3)), int(rng.integers(0, 2)),
+               np.full((ARG_WIDTH,), float(i), np.float32))
+              for i in range(12)]
+    qa = tiered_queue_from_host(events, 16, front_cap=4, stage_cap=4)
+    qb = device_queue_init(16)
+    from repro.core.queue import device_queue_push
+    for (t, ty, arg) in events:
+        qb = device_queue_push(qb, t, ty, jnp.asarray(arg))
+    for _ in range(12):
+        qa, ts, tys, args, length = _extract_tiered(qa, 1, lookaheads)
+        qb, t, ty, arg = device_queue_pop(qb)
+        assert int(length) == 1
+        assert float(ts[0]) == float(t)
+        assert int(tys[0]) == int(ty)
+        np.testing.assert_array_equal(np.asarray(args[0]), np.asarray(arg))
+    assert int(qa.size) == 0 and int(qb.size) == 0
+    assert not bool(tiered_queue_has_pending(qa))
+
+
+def test_from_host_matches_flat_from_host():
+    """Tiered and flat host-side seed builds agree, incl. overflow."""
+    rng = np.random.default_rng(3)
+    capacity = 6
+    events = []
+    for i in range(9):  # 3 past capacity
+        arg = rng.random(ARG_WIDTH).astype(np.float32)
+        events.append((float(rng.integers(0, 4)),
+                       int(rng.integers(0, 3)), arg))
+    qa = tiered_queue_from_host(events, capacity, front_cap=2, stage_cap=4)
+    qb = device_queue_from_host(events, capacity)
+    assert_tiered_equals_flat(qa, qb, "from_host")
+    assert int(qa.dropped) == 3
+    assert int(tiered_queue_occupancy(qa)) == capacity
+
+
+def test_overflow_across_tiers_bit_exact():
+    """Emits dropped when front+staging+main are full must match the
+    reference dropped/size/next_seq accounting bit-exactly, including
+    continued ghost growth after saturation."""
+    capacity = 8
+    qa = tiered_queue_init(capacity, front_cap=4, stage_cap=3)
+    qb = device_queue_init(capacity)
+    # fill to exactly capacity across all three tiers
+    for lo in (0, 3, 6):
+        rows = np.zeros((3, EMIT_W), np.float32)
+        rows[:, 0] = np.arange(lo, lo + 3)
+        rows[:, 1] = 0.0
+        if lo == 6:
+            rows[2, 1] = -1.0  # hole: 8 real events total
+        qa = _fill_tiered(qa, jnp.asarray(rows))
+        qb = _fill_ref(qb, jnp.asarray(rows))
+    assert_tiered_equals_flat(qa, qb, "exactly full")
+    assert int(tiered_queue_occupancy(qa)) == capacity
+    assert int(qa.dropped) == 0
+
+    # overflowing block: every real row past capacity is a ghost
+    over = np.zeros((3, EMIT_W), np.float32)
+    over[:, 0] = [100.0, 0.5, 102.0]   # 0.5 would land in the FRONT
+    over[:, 1] = [1.0, 1.0, -1.0]
+    qa = _fill_tiered(qa, jnp.asarray(over))
+    qb = _fill_ref(qb, jnp.asarray(over))
+    assert_tiered_equals_flat(qa, qb, "overflow")
+    assert int(qa.dropped) == 2
+    assert int(qa.size) == capacity + 2   # logical pushes keep counting
+    assert int(qa.next_seq) == capacity + 2
+    assert int(tiered_queue_occupancy(qa)) == capacity
+
+    # ghosts must not spin has_pending after the queue drains
+    lookaheads = jnp.asarray([np.inf, np.inf], jnp.float32)
+    for _ in range(4):
+        qa, _, _, _, la = _extract_tiered(qa, 4, lookaheads)
+        qb, _, _, _, lb = _extract_ref(qb, 4, lookaheads)
+        assert int(la) == int(lb)
+        assert_tiered_equals_flat(qa, qb, "drain")
+    assert not bool(tiered_queue_has_pending(qa))
+    assert int(qa.size) == 2  # the ghosts remain in size, as reference
+
+
+def test_staging_spill_and_append_fast_path():
+    """Far-future emits take the staging append path; emits landing
+    before the front boundary force evictions; both must stay
+    bit-exact against the reference over a long alternating run."""
+    rng = np.random.default_rng(42)
+    qa = tiered_queue_init(64, front_cap=8, stage_cap=6)
+    qb = device_queue_init(64)
+    lookaheads = jnp.asarray([1.0, 1.0, 1.0], jnp.float32)
+    t_clock = 0.0
+    for step in range(40):
+        rows = np.zeros((3, EMIT_W), np.float32)
+        rows[:, 1] = -1.0
+        for i in range(3):
+            r = rng.random()
+            if r < 0.6:   # far future: append fast path
+                rows[i, 0] = t_clock + 10 + float(rng.integers(0, 5))
+                rows[i, 1] = float(rng.integers(0, 3))
+            elif r < 0.8:  # near future: front merge / eviction
+                rows[i, 0] = t_clock + float(rng.integers(0, 3))
+                rows[i, 1] = float(rng.integers(0, 3))
+        rows = jnp.asarray(rows)
+        qa = _fill_tiered(qa, rows)
+        qb = _fill_ref(qb, rows)
+        qa, tsa, _, _, la = _extract_tiered(qa, 4, lookaheads)
+        qb, tsb, _, _, lb = _extract_ref(qb, 4, lookaheads)
+        np.testing.assert_array_equal(np.asarray(tsa), np.asarray(tsb))
+        assert int(la) == int(lb)
+        if int(la):
+            t_clock = float(np.asarray(tsa)[int(la) - 1])
+        assert_tiered_equals_flat(qa, qb, f"spill step {step}")
+
+
+@given(
+    seed=st.integers(0, 2**16),
+    front_cap=st.integers(4, 12),
+    stage_cap=st.integers(4, 12),
+    capacity=st.sampled_from([8, 16, 24]),
+)
+@settings(max_examples=20, deadline=None)
+def test_property_random_streams(seed, front_cap, stage_cap, capacity):
+    """Hypothesis property: for ANY tier geometry and random event
+    stream, the tiered queue reproduces the reference pop order and
+    counters bit-exactly."""
+    run_differential(seed, capacity=capacity, max_len=4,
+                     front_cap=front_cap, stage_cap=stage_cap, steps=24)
+
+
+# ---------------------------------------------------------------------------
+# Engine level
+# ---------------------------------------------------------------------------
+
+def _order_sensitive_registry():
+    reg = EventRegistry()
+
+    @emits_events
+    def ping(state, t, arg):
+        emit = jnp.full((1, EMIT_W), -1.0, jnp.float32)
+        emit = jnp.where(
+            t < 6.0,
+            emit.at[0, 0].set(t + 1.0).at[0, 1].set(1.0),
+            emit,
+        )
+        return state * 7 + (t.astype(jnp.int32) * 2 + 1), emit
+
+    def pong(state, t, arg):
+        return state * 7 + (t.astype(jnp.int32) * 2 + 2)
+
+    reg.register("Ping", ping, lookahead=1.0)
+    reg.register("Pong", pong, lookahead=1.0)
+    return reg.freeze()
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_engine_three_queue_modes_agree(seed):
+    """Full DeviceEngine runs under tiered / flat / reference queues
+    give identical states, stats, and final queue contents."""
+    rng = np.random.default_rng(seed)
+    events = [(float(t), int(rng.integers(0, 2)), None)
+              for t in range(int(rng.integers(4, 10)))]
+    results = {}
+    for mode in ("tiered", "flat", "reference"):
+        kw = {"front_cap": 4, "stage_cap": 3} if mode == "tiered" else {}
+        reg = _order_sensitive_registry()
+        eng = DeviceEngine(reg, max_batch_len=3, capacity=32, max_emit=1,
+                           queue_mode=mode, **kw)
+        q = eng.initial_queue(events)
+        s, q, stats = eng.run(jnp.int32(1), q, max_batches=64)
+        results[mode] = (s, q, stats)
+    s_t, q_t, st_t = results["tiered"]
+    for mode in ("flat", "reference"):
+        s_o, q_o, st_o = results[mode]
+        assert int(s_t) == int(s_o), mode
+        assert_tiered_equals_flat(q_t, q_o, f"final queue vs {mode}")
+        for k in ("batches", "events", "dropped"):
+            assert int(st_t[k]) == int(st_o[k]), (mode, k)
+        assert float(st_t["time"]) == float(st_o["time"]), mode
+
+
+def test_engine_overflow_cascade_across_tiers():
+    """A 2^k spawning cascade over a tiny tiered queue must overflow
+    with the same dropped/size/next_seq as the flat and reference
+    engines, and the run must terminate (size counts ghosts)."""
+    def make_reg():
+        reg = EventRegistry()
+
+        @emits_events
+        def spawner(state, t, arg):
+            emit = jnp.zeros((2, EMIT_W), jnp.float32)
+            emit = emit.at[:, 0].set(t + 1.0).at[:, 1].set(0.0)
+            return state + 1, emit
+
+        reg.register("S", spawner, lookahead=1.0)
+        return reg.freeze()
+
+    outcomes = {}
+    for mode in ("tiered", "flat", "reference"):
+        kw = {"front_cap": 2, "stage_cap": 5} if mode == "tiered" else {}
+        eng = DeviceEngine(make_reg(), max_batch_len=2, capacity=4,
+                           max_emit=2, queue_mode=mode, **kw)
+        q = eng.initial_queue([(0.0, 0, None)])
+        s, q, stats = eng.run(jnp.int32(0), q, max_batches=8)
+        outcomes[mode] = (int(s), int(stats["dropped"]), int(q.size),
+                          int(q.next_seq))
+    assert outcomes["tiered"] == outcomes["flat"] == outcomes["reference"]
+    assert outcomes["tiered"][1] > 0  # it really overflowed
+
+
+def test_engine_refill_aware_loop_termination():
+    """With a front tier far smaller than the pending set, the engine
+    must keep refilling (not stop when the front drains) and execute
+    every event."""
+    reg = EventRegistry()
+    reg.register("N", lambda s, t, a: s + 1, lookahead=np.inf)
+    eng = DeviceEngine(reg, max_batch_len=4, capacity=64, front_cap=4,
+                       stage_cap=4, queue_mode="tiered")
+    events = [(float(t), 0, None) for t in range(50)]
+    s, q, stats = eng.run(jnp.int32(0), eng.initial_queue(events))
+    assert int(s) == 50
+    assert int(stats["events"]) == 50
+    assert int(q.size) == 0
+
+
+def test_run_consumes_queue_buffers():
+    """DeviceEngine.run donates the queue: its capacity-sized buffers
+    are reused for the output, so passing the same queue value twice
+    must fail rather than silently recompute from stale data."""
+    reg = EventRegistry()
+    reg.register("N", lambda s, t, a: s + 1, lookahead=np.inf)
+    eng = DeviceEngine(reg, max_batch_len=2, capacity=16)
+    events = [(float(t), 0, None) for t in range(4)]
+    q = eng.initial_queue(events)
+    s, q_out, _ = eng.run(jnp.int32(0), q)
+    assert int(s) == 4
+    with pytest.raises((RuntimeError, ValueError)):
+        eng.run(jnp.int32(0), q)
+    # the returned queue is fresh and usable
+    s2, _, stats2 = eng.run(jnp.int32(0), q_out)
+    assert int(stats2["events"]) == 0  # q_out was drained
