@@ -23,6 +23,15 @@ Two measurements:
     must stay within 2x of its capacity-1024 cost under
     ``queue_mode="tiered"``.
 
+* ``near_full`` — the ROADMAP follow-up baseline: the tiered queue held
+  at >=90% occupancy with emissions alternating between near-head
+  landings (front merges + tail evictions into staging) and far-future
+  landings (staging appends with no ring headroom), so the rare
+  O(capacity) flush/merge/compaction paths fire continuously.  This is
+  the workload a third (log-structured) tier or in-ring compaction with
+  slack reserve must beat; ``--near-full-only`` refreshes just this
+  section of the JSON.
+
   Results land in ``BENCH_device_engine.json`` at the repo root so
   future PRs have a perf trajectory to track.
 """
@@ -298,10 +307,104 @@ def scheduling_overhead(quick: bool = False):
     return result
 
 
-def main(quick: bool = False):
+def _churn_registry(near_delay: float):
+    """Emitting type for the near-full stress: each event re-emits with
+    a timestamp alternating (by 16-event stripe) between *just past the
+    current window* — lands in the front tier, forcing merges and tail
+    evictions — and *far future* — lands in staging/main with no ring
+    headroom left.  Both legs push the tiered queue onto its rare
+    O(capacity) flush/merge paths every few batches."""
+    reg = EventRegistry()
+
+    @emits_events
+    def churn(state, t, arg):
+        far = jnp.floor(t / 16.0) % 2.0 == 0.0
+        delay = jnp.where(far, jnp.float32(1e6), jnp.float32(near_delay))
+        emit = jnp.zeros((1, 2 + ARG_WIDTH), jnp.float32)
+        emit = emit.at[0, 0].set(t + delay).at[0, 1].set(0.0)
+        return state + 1, emit
+
+    reg.register("Churn", churn, lookahead=1e6)
+    return reg.freeze()
+
+
+def near_full(quick: bool = False):
+    """Tiered queue at >=90% occupancy under sustained flush pressure.
+
+    Occupancy is stationary (each batch pops ``max_len`` events and
+    inserts ``max_len`` emissions), so the whole timed run sits at the
+    seeded fraction.  Recorded against the same-capacity anchor so the
+    planned third tier has a ratio to beat, plus a low-occupancy control
+    run of the identical workload (the penalty is the pressure, not the
+    handler).
+    """
+    max_len = 16
+    capacity = 1024 if quick else 4096
+    max_batches = 128 if quick else 512
+    occupancy = 0.92
+    seed_n = int(capacity * occupancy)
+    seed_lo = int(capacity * 0.25)
+    events_hi = [(float(t), 0, None) for t in range(seed_n)]
+    events_lo = [(float(t), 0, None) for t in range(seed_lo)]
+
+    per_batch = {}
+    engines = {}
+    for mode in ("tiered", "flat"):
+        engines[mode] = DeviceEngine(_churn_registry(near_delay=17.0),
+                                     max_batch_len=max_len,
+                                     capacity=capacity, max_emit=1,
+                                     queue_mode=mode)
+        per_batch[mode] = _time_engine_run(engines[mode], events_hi,
+                                           max_batches)
+    # Low-occupancy control on the SAME compiled engine (engines are
+    # re-runnable; only the seeded queue differs).
+    low = _time_engine_run(engines["tiered"], events_lo, max_batches)
+
+    return {
+        "description": "alternating near-head/far-future re-emits at "
+                       "stationary >=90% occupancy; sustains the tiered "
+                       "queue's O(capacity) flush/merge/compaction paths",
+        "capacity": capacity,
+        "max_batch_len": max_len,
+        "max_emit": 1,
+        "batches_timed": max_batches,
+        "occupancy_fraction": seed_n / capacity,
+        "per_batch_us": per_batch,
+        "tiered_low_occupancy_us": low,
+        "low_occupancy_fraction": seed_lo / capacity,
+        "tiered_pressure_ratio_vs_low_occupancy":
+            per_batch["tiered"] / low,
+    }
+
+
+def _merge_near_full_into_json(nf):
+    """Refresh only the near_full section, keeping the recorded
+    anchor/sweep baselines intact."""
+    payload = json.loads(JSON_PATH.read_text()) if JSON_PATH.exists() \
+        else {}
+    payload.setdefault("scheduling_overhead", {})["near_full"] = nf
+    JSON_PATH.write_text(json.dumps(payload, indent=2) + "\n")
+
+
+def _print_near_full(nf):
+    pb = nf["per_batch_us"]
+    print(f"near-full (occupancy {nf['occupancy_fraction']:.0%}, "
+          f"cap={nf['capacity']}): tiered={pb['tiered']:.1f}us/batch "
+          f"flat={pb['flat']:.1f}us/batch | tiered at "
+          f"{nf['low_occupancy_fraction']:.0%} occupancy: "
+          f"{nf['tiered_low_occupancy_us']:.1f}us "
+          f"(pressure ratio "
+          f"{nf['tiered_pressure_ratio_vs_low_occupancy']:.2f}x)")
+
+
+def main(quick: bool = False, out: str | None = None):
     sched = scheduling_overhead(quick=quick)
+    sched["near_full"] = near_full(quick=quick)
     r = run(quick=quick)
     payload = {"host_vs_device": r, "scheduling_overhead": sched}
+    if out:
+        Path(out).write_text(json.dumps(payload, indent=2) + "\n")
+        print("wrote", out)
     if quick:
         # Quick mode uses a smaller workload — don't clobber the
         # recorded full-run perf baseline future PRs track.
@@ -326,6 +429,7 @@ def main(quick: bool = False):
     ratio = sched["capacity_sweep"]["insert_op_ratio_16k_over_1k"]
     if ratio is not None:
         print(f"capacity-independence: tiered insert 16k/1k = {ratio:.2f}x")
+    _print_near_full(sched["near_full"])
     if not quick:
         print(f"wrote {JSON_PATH}")
     r = dict(r)
@@ -334,5 +438,26 @@ def main(quick: bool = False):
 
 
 if __name__ == "__main__":
-    import sys
-    main(quick="--quick" in sys.argv)
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--near-full-only", action="store_true",
+                    help="run just the near-full stress and merge it "
+                         "into the recorded JSON baseline")
+    ap.add_argument("--out", default=None,
+                    help="also write results to this path (CI artifact)")
+    args = ap.parse_args()
+    if args.near_full_only:
+        nf = near_full(quick=args.quick)
+        _print_near_full(nf)
+        if args.quick:
+            print("quick mode: not merging into", JSON_PATH.name)
+        else:
+            _merge_near_full_into_json(nf)
+            print("merged near_full into", JSON_PATH.name)
+        if args.out:
+            Path(args.out).write_text(json.dumps({"near_full": nf},
+                                                 indent=2) + "\n")
+    else:
+        main(quick=args.quick, out=args.out)

@@ -7,14 +7,18 @@ ready to receive, the computations involved in the creation of the
 message could be avoided entirely."
 
 Events:
-* Sleep(i)     — receiver i enters power saving (awake[i] = 0)
-* Wake(i)      — receiver i wakes (awake[i] = 1)
+* SleepAll     — every receiver enters power saving (awake = 0)
+* WakeAll      — every receiver wakes (awake = 1)
 * Broadcast    — sender builds an expensive message (a long mixing
                  loop) and delivers it to awake receivers.
 
-In the batch [Sleep(all), Broadcast], the delivery mask is all-zero —
-XLA's cross-event DCE removes the message-construction loop, exactly
-the paper's motivating scenario.  Verified on the optimized HLO below.
+In the batch [SleepAll, Broadcast], the delivery mask is all-zero — XLA's
+cross-event DCE removes the message-construction loop, exactly the
+paper's motivating scenario.  Verified on the optimized HLO below.
+
+The model is defined ONCE on a :class:`repro.api.SimProgram` and then
+compiled to the host scheduler and to the on-device engine in both
+queue modes — same definition, every runtime, identical inboxes.
 
     PYTHONPATH=src python examples/wireless_des.py
 """
@@ -23,21 +27,29 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ARG_WIDTH, EventRegistry, Simulator, compose_word_fn
+from repro.api import Config, SimProgram
+from repro.core import compose_word_fn
 
 N_RECEIVERS = 4
 MSG_WORK = 100_000
+SLEEP, WAKE, BCAST = 0, 1, 2  # registration-order type ids
 
 
-def build_registry():
-    reg = EventRegistry()
+def build_program() -> SimProgram:
+    prog = SimProgram(
+        "wireless",
+        config=Config(max_batch_len=2, capacity=64),
+    )
 
+    @prog.handler("SleepAll")
     def sleep_all(state, t, arg):
         return {**state, "awake": jnp.zeros_like(state["awake"])}
 
+    @prog.handler("WakeAll")
     def wake_all(state, t, arg):
         return {**state, "awake": jnp.ones_like(state["awake"])}
 
+    @prog.handler("Broadcast")
     def broadcast(state, t, arg):
         # expensive message construction (mixing loop)
         msg = jax.lax.fori_loop(
@@ -48,10 +60,15 @@ def build_registry():
         delivered = state["inbox"] + state["awake"] * msg
         return {**state, "inbox": delivered.astype(jnp.uint32)}
 
-    reg.register("SleepAll", sleep_all, lookahead=np.inf)
-    reg.register("WakeAll", wake_all, lookahead=np.inf)
-    reg.register("Broadcast", broadcast, lookahead=np.inf)
-    return reg.freeze()
+    # day/night duty cycle with periodic broadcasts
+    for day in range(8):
+        base = day * 10.0
+        prog.schedule(base + 0.0, "SleepAll")
+        prog.schedule(base + 1.0, "Broadcast")
+        prog.schedule(base + 2.0, "Broadcast")
+        prog.schedule(base + 5.0, "WakeAll")
+        prog.schedule(base + 6.0, "Broadcast")
+    return prog
 
 
 def initial_state():
@@ -62,15 +79,16 @@ def initial_state():
 
 
 def main():
-    reg = build_registry()
-    SLEEP, WAKE, BCAST = 0, 1, 2
+    prog = build_program()
 
     # cross-event DCE check: [SleepAll, Broadcast, WakeAll] -> no one can
-    # receive, so the message-construction loop must disappear.
+    # receive, so the message-construction loop must disappear.  The
+    # composed word programs come from the program's host registry.
     state_spec = jax.tree.map(
         lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), initial_state())
     t_spec = [jax.ShapeDtypeStruct((), jnp.float32)] * 3
 
+    reg = prog.host_registry()
     dead = compose_word_fn(reg, [SLEEP, BCAST, WAKE])
     live = compose_word_fn(reg, [WAKE, BCAST, SLEEP])
     hlo_dead = jax.jit(dead).lower(state_spec, t_spec,
@@ -82,47 +100,30 @@ def main():
     print("message loop present when receivers awake:   ",
           " while(" in hlo_live)
 
-    # run a simulation: day/night duty cycle with periodic broadcasts
-    sim = Simulator(reg, max_batch_len=4)
-    for day in range(8):
-        base = day * 10.0
-        sim.schedule(base + 0.0, "SleepAll")
-        sim.schedule(base + 1.0, "Broadcast")
-        sim.schedule(base + 2.0, "Broadcast")
-        sim.schedule(base + 5.0, "WakeAll")
-        sim.schedule(base + 6.0, "Broadcast")
-    state, stats = sim.run(initial_state(), mode="conservative")
-    print(f"batches executed: {stats.batches_executed} "
-          f"(mean len {stats.mean_batch_length:.1f}); "
-          f"final inbox: {np.asarray(state['inbox'])}")
+    # host runtime
+    host = prog.build(backend="host", scheduler="conservative")
+    res = host.run(initial_state())
+    print(f"host run: batches executed: {res.batches} "
+          f"(mean len {res.mean_batch_length:.1f}); "
+          f"final inbox: {np.asarray(res.state['inbox'])}")
 
-    # same model compiled to ONE on-device program: queue, window
+    # SAME definition compiled to ONE on-device program: queue, window
     # selection, and dispatch all run inside a single lax.while_loop —
     # zero host round-trips during the run.  The default pending-event
-    # set is the two-tier queue (DESIGN.md §4): per-batch scheduling
-    # touches only the small front/staging tiers, so the engine can be
-    # provisioned with deep capacity headroom for emission bursts at no
-    # per-batch cost.  A run consumes its input queue (the buffers are
-    # donated); build a fresh one per run via eng.initial_queue.
-    from repro.core import DeviceEngine
-
-    events = []
-    for day in range(8):
-        base = day * 10.0
-        events += [(base + 0.0, 0, None), (base + 1.0, 2, None),
-                   (base + 2.0, 2, None), (base + 5.0, 1, None),
-                   (base + 6.0, 2, None)]
+    # set is the two-tier queue (DESIGN.md §4), so the engine can be
+    # provisioned with deep capacity headroom at no per-batch cost.
+    # CompiledSim.run rebuilds the donated device queue each call, so
+    # the handle is freely re-runnable.
     for queue_mode, capacity in (("tiered", 4096), ("flat", 64)):
-        eng = DeviceEngine(reg, max_batch_len=2, capacity=capacity,
-                           queue_mode=queue_mode)
-        dstate, _q, dstats = eng.run(initial_state(),
-                                     eng.initial_queue(events))
-        same = bool((np.asarray(dstate["inbox"])
-                     == np.asarray(state["inbox"])).all())
+        dev = prog.build(backend="device", queue_mode=queue_mode,
+                         capacity=capacity)
+        dres = dev.run(initial_state())
+        same = bool((np.asarray(dres.state["inbox"])
+                     == np.asarray(res.state["inbox"])).all())
         print(f"on-device engine [{queue_mode:6s} queue, "
-              f"capacity {capacity:4d}]: batches={int(dstats['batches'])} "
-              f"events={int(dstats['events'])} "
-              f"dropped={int(dstats['dropped'])}; matches host run: {same}")
+              f"capacity {capacity:4d}]: batches={dres.batches} "
+              f"events={dres.events} "
+              f"dropped={dres.dropped}; matches host run: {same}")
 
 
 if __name__ == "__main__":

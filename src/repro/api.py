@@ -1,0 +1,46 @@
+"""`repro.api` — the supported way to define and run simulations.
+
+Define a model once on a :class:`SimProgram`, then compile it to any
+runtime with :meth:`SimProgram.build`:
+
+    from repro.api import ARG_WIDTH, Config, SimProgram
+
+    prog = SimProgram("demo", config=Config(max_batch_len=4))
+
+    @prog.handler("TICK", lookahead=1.0)
+    def tick(state, t, arg):
+        return state + 1
+
+    prog.schedule(0.0, "TICK")
+
+    result = prog.build(backend="device").run(jnp.int32(0))
+    result = prog.build(backend="host", scheduler="speculative").run(...)
+
+Every backend — host (conservative / speculative / unbatched × lazy /
+eager composition) and device (tiered / flat / reference queues) — runs
+the same definition with bit-identical final state and normalized
+:class:`RunResult` stats.  The classes in :mod:`repro.core` remain the
+backend layer underneath; reach for them only when benchmarking a
+specific runtime mechanism.
+"""
+
+from repro.core.events import ARG_WIDTH, emits_events
+from repro.core.program import (
+    EMIT_WIDTH,
+    CompiledSim,
+    Config,
+    RunResult,
+    SimProgram,
+    normalize_arg,
+)
+
+__all__ = [
+    "ARG_WIDTH",
+    "EMIT_WIDTH",
+    "CompiledSim",
+    "Config",
+    "RunResult",
+    "SimProgram",
+    "emits_events",
+    "normalize_arg",
+]

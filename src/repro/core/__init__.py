@@ -1,6 +1,10 @@
 """Core DES engine: compile-time event batching (the paper's contribution).
 
-Public API:
+Model-definition API (preferred — one definition, every runtime):
+
+    from repro.api import SimProgram, Config
+
+Backend layer (schedulers, composers, queues, engines):
 
     from repro.core import (
         EventRegistry, emits_events, Simulator, DeviceEngine,
@@ -24,6 +28,14 @@ from repro.core.composer import (
 )
 from repro.core.engine import DeviceEngine, Simulator
 from repro.core.events import ARG_WIDTH, Event, EventRegistry, EventType, emits_events
+from repro.core.program import (
+    EMIT_WIDTH,
+    CompiledSim,
+    Config,
+    RunResult,
+    SimProgram,
+    normalize_arg,
+)
 from repro.core.queue import (
     DeviceQueue,
     HostEventQueue,
@@ -33,6 +45,8 @@ from repro.core.queue import (
     device_queue_fill_rows,
     device_queue_from_host,
     device_queue_init,
+    device_queue_next_time,
+    device_queue_next_time_ref,
     device_queue_peek,
     device_queue_pop,
     device_queue_push,
@@ -42,6 +56,7 @@ from repro.core.queue import (
     tiered_queue_from_host,
     tiered_queue_has_pending,
     tiered_queue_init,
+    tiered_queue_next_time,
     tiered_queue_occupancy,
     tiered_queue_to_flat,
     window_prefix_mask,
@@ -62,6 +77,9 @@ from repro.core.vectorize import (
 
 __all__ = [
     "ARG_WIDTH",
+    "EMIT_WIDTH",
+    "CompiledSim",
+    "Config",
     "ConservativeScheduler",
     "DenseCodec",
     "DeviceEngine",
@@ -73,7 +91,9 @@ __all__ = [
     "HostEventQueue",
     "LazyComposer",
     "PaperCodec",
+    "RunResult",
     "RunStats",
+    "SimProgram",
     "Simulator",
     "SpeculativeScheduler",
     "TieredDeviceQueue",
@@ -85,6 +105,8 @@ __all__ = [
     "device_queue_fill_rows",
     "device_queue_from_host",
     "device_queue_init",
+    "device_queue_next_time",
+    "device_queue_next_time_ref",
     "device_queue_peek",
     "device_queue_pop",
     "device_queue_push",
@@ -97,10 +119,12 @@ __all__ = [
     "tiered_queue_from_host",
     "tiered_queue_has_pending",
     "tiered_queue_init",
+    "tiered_queue_next_time",
     "tiered_queue_occupancy",
     "tiered_queue_to_flat",
     "is_single_type_run",
     "make_codec",
+    "normalize_arg",
     "make_masked_run_handler",
     "make_run_handler",
     "window_prefix_mask",

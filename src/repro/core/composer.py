@@ -41,7 +41,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.events import ARG_WIDTH, EventRegistry, normalize_handler_result
-from repro.core.codec import DenseCodec, PaperCodec
+from repro.core.codec import DenseCodec, PaperCodec, make_codec
 
 
 # ---------------------------------------------------------------------------
@@ -118,6 +118,15 @@ class _ComposerBase:
     @property
     def num_composed(self) -> int:
         return len(self._programs)
+
+    @classmethod
+    def from_program(cls, program, **kwargs):
+        """Construct from a frozen SimProgram: the host-adapted registry
+        plus a codec sized by the program's Config."""
+        registry = program.host_registry()
+        cfg = program.config
+        codec = make_codec(cfg.codec, len(registry), cfg.max_batch_len)
+        return cls(registry, codec, **kwargs)
 
 
 class EagerComposer(_ComposerBase):

@@ -1,4 +1,11 @@
-"""Simulator facade and the fully on-device DES engine.
+"""Host-runtime facade and the fully on-device DES engine.
+
+This is the BACKEND layer: models should be defined once with
+:class:`repro.api.SimProgram` and compiled here via
+``prog.build(backend=..., ...)`` (DESIGN.md §1.1) — both classes below
+expose ``from_program`` constructors for that path.  Direct
+construction remains supported for benchmarks and tests that probe one
+runtime mechanism.
 
 Two runtimes (DESIGN.md §2):
 
@@ -45,7 +52,6 @@ On-device emit convention: handlers marked with ``@emits_events`` return
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Any, Callable, Mapping
 
 import jax
@@ -66,11 +72,14 @@ from repro.core.queue import (
     device_queue_extract_ref,
     device_queue_fill_rows,
     device_queue_from_host,
+    device_queue_next_time,
+    device_queue_next_time_ref,
     device_queue_push_rows,
     tiered_queue_extract,
     tiered_queue_fill_rows,
     tiered_queue_from_host,
     tiered_queue_has_pending,
+    tiered_queue_next_time,
 )
 from repro.core.scheduler import (
     ConservativeScheduler,
@@ -82,7 +91,31 @@ from repro.core.vectorize import make_masked_run_handler
 
 
 class Simulator:
-    """User-facing facade over registry + queue + scheduler."""
+    """Host-runtime facade over registry + queue + scheduler.
+
+    Backend layer: prefer defining models once with
+    :class:`repro.api.SimProgram` and compiling via
+    ``prog.build(backend="host", ...)`` — the same definition then also
+    runs on the device engine.
+    """
+
+    @classmethod
+    def from_program(cls, program, *, composer: str = "lazy",
+                     state_spec=None, arg_spec=None) -> "Simulator":
+        """Construct the host backend from a frozen SimProgram, with the
+        program's scheduled initial events already queued."""
+        cfg = program.config
+        sim = cls(
+            program.host_registry(),
+            max_batch_len=cfg.max_batch_len,
+            codec=cfg.codec,
+            composer=composer,
+            state_spec=state_spec,
+            arg_spec=arg_spec,
+        )
+        for (t, type_id, arg) in program.scheduled_events():
+            sim.queue.push(t, type_id, arg)
+        return sim
 
     def __init__(self, registry: EventRegistry, *, max_batch_len: int = 4,
                  codec: str = "dense", composer: str = "lazy",
@@ -127,7 +160,10 @@ class Simulator:
 class DeviceEngine:
     """Builder for the single-program on-device simulation.
 
-    Usage::
+    Preferred entry point: ``repro.api.SimProgram.build(
+    backend="device", ...)``, which constructs this class via
+    :meth:`from_program` and wraps the run/queue lifecycle in a
+    re-runnable ``CompiledSim``.  Direct usage::
 
         eng = DeviceEngine(registry, max_batch_len=4, capacity=1024)
         queue = eng.initial_queue([(t, type_id, arg_vec), ...])
@@ -143,11 +179,10 @@ class DeviceEngine:
     ``queue_mode`` selects the pending-set implementation:
     ``"tiered"`` (default, capacity-independent per-batch cost),
     ``"flat"`` (PR-1 single-array vectorized ops), or ``"reference"``
-    (seed per-event ops, the executable specification).  The deprecated
-    ``use_vectorized_queue`` flag maps True -> "flat", False ->
-    "reference".  ``front_cap``/``stage_cap`` size the tiered queue's
-    front tier and staging ring; the defaults scale with
-    ``max_batch_len`` and ``max_emit`` and are clamped to valid ranges.
+    (seed per-event ops, the executable specification).
+    ``front_cap``/``stage_cap`` size the tiered queue's front tier and
+    staging ring; the defaults scale with ``max_batch_len`` and
+    ``max_emit`` and are clamped to valid ranges.
 
     ``entity_handlers`` maps a type_id to an entity-local handler
     ``(entity_state, t, arg) -> entity_state`` over slices of the state
@@ -166,30 +201,23 @@ class DeviceEngine:
     max_emit: int = 2
     t_end: float = float("inf")
     queue_mode: str = "tiered"
-    use_vectorized_queue: bool | None = None  # deprecated: see queue_mode
     front_cap: int | None = None
     stage_cap: int | None = None
     entity_handlers: Mapping[int, Callable] | None = None
+    # Removed 2024-era flag; kept as an InitVar so old call sites get a
+    # pointer at queue_mode instead of a generic unexpected-kwarg error.
+    use_vectorized_queue: dataclasses.InitVar[Any] = None
 
-    def __post_init__(self):
+    def __post_init__(self, use_vectorized_queue):
+        if use_vectorized_queue is not None:
+            raise TypeError(
+                "DeviceEngine(use_vectorized_queue=...) was removed; "
+                "pass queue_mode='flat' (True) or queue_mode="
+                "'reference' (False) instead — or build through "
+                "repro.api.SimProgram.build(backend='device', "
+                "queue_mode=...)."
+            )
         self.registry.freeze()
-        if self.use_vectorized_queue is not None:
-            if self.queue_mode != "tiered":
-                raise ValueError(
-                    "pass either queue_mode or the deprecated "
-                    "use_vectorized_queue, not both "
-                    f"(got queue_mode={self.queue_mode!r}, "
-                    f"use_vectorized_queue={self.use_vectorized_queue})"
-                )
-            warnings.warn(
-                "use_vectorized_queue is deprecated; pass "
-                "queue_mode='flat' or 'reference' instead",
-                DeprecationWarning,
-                stacklevel=2,
-            )
-            self.queue_mode = (
-                "flat" if self.use_vectorized_queue else "reference"
-            )
         if self.queue_mode not in ("tiered", "flat", "reference"):
             raise ValueError(
                 f"unknown queue_mode {self.queue_mode!r}; expected "
@@ -245,6 +273,35 @@ class DeviceEngine:
             self._run, static_argnames=("max_batches",), donate_argnums=(1,)
         )
 
+    @classmethod
+    def from_program(cls, program, *, queue_mode: str = "tiered",
+                     capacity: int | None = None,
+                     front_cap: int | None = None,
+                     stage_cap: int | None = None,
+                     t_end: float = float("inf")) -> "DeviceEngine":
+        """Construct the device backend from a frozen SimProgram.
+
+        The program supplies the adapted registry (delay-relative emits
+        rewritten to the absolute-time on-device convention), the
+        entity-parallel dispatch table, and the shared Config knobs;
+        per-backend kwargs stay here.  ``max_emit`` intentionally has
+        no override: the program's handler adapters bake the emit-row
+        shape from ``Config.max_emit``, so a differing engine width
+        could never run.
+        """
+        cfg = program.config
+        return cls(
+            program.device_registry(),
+            max_batch_len=cfg.max_batch_len,
+            capacity=cfg.capacity if capacity is None else capacity,
+            max_emit=cfg.max_emit,
+            t_end=t_end,
+            queue_mode=queue_mode,
+            front_cap=front_cap,
+            stage_cap=stage_cap,
+            entity_handlers=program.device_entity_handlers() or None,
+        )
+
     # -- queue construction -------------------------------------------------
     def initial_queue(self, events) -> DeviceQueue | TieredDeviceQueue:
         # Built host-side, one device_put (None args become zero vectors).
@@ -256,17 +313,17 @@ class DeviceEngine:
         return device_queue_from_host(events, self.capacity)
 
     # -- extraction (paper Fig 2) --------------------------------------------
-    def _extract(self, queue):
+    def _extract(self, queue, t_cap=None):
         if self.queue_mode == "tiered":
             return tiered_queue_extract(
-                queue, self.max_batch_len, self._lookaheads
+                queue, self.max_batch_len, self._lookaheads, t_cap
             )
         if self.queue_mode == "flat":
             return device_queue_extract(
-                queue, self.max_batch_len, self._lookaheads
+                queue, self.max_batch_len, self._lookaheads, t_cap
             )
         return device_queue_extract_ref(
-            queue, self.max_batch_len, self._lookaheads
+            queue, self.max_batch_len, self._lookaheads, t_cap
         )
 
     # -- dispatch -------------------------------------------------------------
@@ -301,7 +358,7 @@ class DeviceEngine:
         return jax.lax.cond(is_run, run_path, switch_path, state)
 
     # -- main loop ------------------------------------------------------------
-    def _run(self, state, queue, *, max_batches: int):
+    def _run(self, state, queue, t_end, *, max_batches: int):
         inserts = {
             "tiered": tiered_queue_fill_rows,
             "flat": device_queue_fill_rows,
@@ -318,21 +375,31 @@ class DeviceEngine:
         # needs the full occupancy mask.
         if self.queue_mode == "tiered":
             has_pending = tiered_queue_has_pending
+            next_time = tiered_queue_next_time
         elif self.queue_mode == "flat":
             has_pending = lambda queue: queue.types[0] >= 0
+            next_time = device_queue_next_time
         else:
             has_pending = lambda queue: jnp.any(queue.types >= 0)
+            next_time = device_queue_next_time_ref
 
+        # `t_end` is a traced value, so one compiled program serves every
+        # horizon.  The contract (shared with the host schedulers): the
+        # dynamic extraction window is capped at t_end, so exactly the
+        # events with timestamp <= t_end execute — later ones stay
+        # queued — identically on every backend.
         def cond(carry):
             state, queue, stats = carry
             del state
-            return has_pending(queue) & (stats["batches"] < max_batches) & (
-                stats["time"] <= self.t_end
+            return (
+                has_pending(queue)
+                & (stats["batches"] < max_batches)
+                & (next_time(queue) <= t_end)
             )
 
         def body(carry):
             state, queue, stats = carry
-            queue, ts, tys, args, length = self._extract(queue)
+            queue, ts, tys, args, length = self._extract(queue, t_end)
             state, emits = self._dispatch_window(state, ts, tys, args, length)
             queue = insert(queue, emits)
             last_t = ts[jnp.maximum(length - 1, 0)]
@@ -351,8 +418,18 @@ class DeviceEngine:
         return jax.lax.while_loop(cond, body, (state, queue, stats0))
 
     def run(self, state, queue: DeviceQueue | TieredDeviceQueue, *,
-            max_batches: int = 1 << 30):
-        state, queue, stats = self._run_jit(state, queue, max_batches=max_batches)
+            max_batches: int = 1 << 30, t_end: float | None = None):
+        """Run to completion (or ``max_batches`` / horizon ``t_end``).
+
+        ``t_end`` overrides the engine default per call without
+        recompiling (it is a traced argument): the extraction window is
+        capped at it, so exactly the events with timestamp <= t_end
+        execute and later ones stay queued.
+        """
+        t_end = self.t_end if t_end is None else t_end
+        state, queue, stats = self._run_jit(
+            state, queue, jnp.float32(t_end), max_batches=max_batches
+        )
         stats = dict(stats)
         stats["dropped"] = queue.dropped
         return state, queue, stats
@@ -363,6 +440,7 @@ class DeviceEngine:
         Lowers the same jitted function as :meth:`run`, so the AOT
         executable keeps the documented queue-donation semantics.
         """
+        t_spec = jax.ShapeDtypeStruct((), jnp.float32)
         return self._run_jit.lower(
-            state_spec, queue_spec, max_batches=max_batches
+            state_spec, queue_spec, t_spec, max_batches=max_batches
         )

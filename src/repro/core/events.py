@@ -25,6 +25,7 @@ live in the state PyTree.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import inspect
 from typing import Any, Callable, Sequence
 
@@ -79,9 +80,21 @@ def _handler_returns_events(handler: Callable) -> bool:
 
 
 def emits_events(handler: Callable) -> Callable:
-    """Decorator marking a handler as returning ``(state, new_events)``."""
-    handler.returns_events = True
-    return handler
+    """Decorator marking a handler as returning ``(state, new_events)``.
+
+    Returns a wrapper carrying ``returns_events = True`` instead of
+    mutating ``handler`` in place: ``functools.partial`` objects, bound
+    methods, and builtins reject attribute assignment, and mutating a
+    shared callable would silently mark every other registration of it.
+    The wrapped callable stays reachable via ``__wrapped__``.
+    """
+
+    @functools.wraps(handler)
+    def wrapper(*args, **kwargs):
+        return handler(*args, **kwargs)
+
+    wrapper.returns_events = True
+    return wrapper
 
 
 class EventRegistry:

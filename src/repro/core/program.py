@@ -1,0 +1,594 @@
+"""`SimProgram`: one declarative model definition, every runtime.
+
+The paper's premise is that the modeler writes small event handlers once
+and the *system* decides how to compose and execute them.  This module
+is the API that delivers that split (DESIGN.md §1.1): a model is defined
+exactly once on a :class:`SimProgram` —
+
+    prog = SimProgram("mm1", config=Config(max_batch_len=4))
+
+    @prog.handler("ARRIVE", lookahead=1.0, emits=True)
+    def arrive(state, t, arg):
+        ...
+        return state, emits          # fixed-record delay rows, see below
+
+    @prog.entity_handler("TALLY")    # vmap-able entity-parallel type
+    def tally(entity_state, t, arg):
+        ...
+        return entity_state
+
+    prog.schedule(0.0, "ARRIVE")
+
+— and then compiled against any backend without touching the model:
+
+    sim = prog.build(backend="device", queue_mode="tiered")
+    sim = prog.build(backend="host", scheduler="speculative")
+    result = sim.run(state0)         # -> RunResult, re-runnable
+
+Portable emission convention
+----------------------------
+A handler registered with ``emits=True`` returns ``(state, emits)``
+where ``emits`` is ``f32[config.max_emit, 2 + ARG_WIDTH]`` rows of
+``(delay, type_id, arg...)``; rows with ``type_id < 0`` are ν-rows
+(unused slots).  Delays are *relative to the handler's own timestamp*,
+which is the one convention that can be compiled to both runtimes:
+
+* device: a wrapper rewrites column 0 to the absolute time ``t + delay``
+  (the on-device insert convention) inside the traced program;
+* host: a wrapper returns the rows as ``(delay, type, arg)`` tuples and
+  the host schedulers anchor them at the emitter's timestamp, skipping
+  ν-rows after the batch returns concrete values.
+
+Because both adapters wrap the SAME handler and both runtimes execute
+events in the same ``(time, seq)`` order, a model built this way
+produces bit-identical final states across every backend (the
+executable contract lives in ``tests/test_simprogram_parity.py``).
+
+Entity-parallel types (``entity_handler``) are written against an entity
+slice of the state pytree (leading axis = entity, ``arg[0]`` = entity
+index) and must not emit.  The sequential form every backend needs for
+mixed windows is derived automatically; the device engine additionally
+dispatches single-type runs of such events as one ``vmap`` over the
+touched entities.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Iterable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.events import ARG_WIDTH, EventRegistry
+from repro.core.queue import HostEventQueue
+
+EMIT_WIDTH = 2 + ARG_WIDTH
+
+_HOST_SCHEDULERS = ("conservative", "speculative", "unbatched")
+_QUEUE_MODES = ("tiered", "flat", "reference")
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    """Shared capacity/batch knobs — the part of the execution setup
+    that must agree across backends for results to be comparable.
+
+    ``capacity``/``max_emit`` only bound device-side buffers (the host
+    heap is unbounded and host emission lists are sized by the same
+    ``max_emit`` via the fixed-record convention).  ``codec`` selects
+    the host batch-id codec; the device engine always uses the dense
+    codec.
+    """
+
+    max_batch_len: int = 4
+    capacity: int = 1024
+    max_emit: int = 2
+    codec: str = "dense"
+
+    def __post_init__(self):
+        if self.max_batch_len < 1:
+            raise ValueError("max_batch_len must be >= 1")
+        if self.capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        if self.max_emit < 1:
+            raise ValueError("max_emit must be >= 1")
+        if self.codec not in ("dense", "paper"):
+            raise ValueError(f"unknown codec {self.codec!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class _HandlerSpec:
+    type_id: int
+    name: str
+    fn: Callable
+    lookahead: float
+    emits: bool
+    entity: bool
+
+
+def normalize_arg(arg, arg_width: int = ARG_WIDTH) -> np.ndarray:
+    """Canonicalize an event argument to the fixed ``f32[ARG_WIDTH]``
+    record every backend carries (None -> zeros; scalars/short vectors
+    are zero-padded)."""
+    if arg is None:
+        return np.zeros((arg_width,), np.float32)
+    a = np.asarray(arg, np.float32).reshape(-1)
+    if a.size > arg_width:
+        raise ValueError(
+            f"event arg has {a.size} elements; ARG_WIDTH is {arg_width}"
+        )
+    out = np.zeros((arg_width,), np.float32)
+    out[: a.size] = a
+    return out
+
+
+def _check_emits(emits, max_emit: int, name: str):
+    emits = jnp.asarray(emits, jnp.float32)
+    if emits.shape != (max_emit, EMIT_WIDTH):
+        raise ValueError(
+            f"handler {name!r} must return emits of shape "
+            f"({max_emit}, {EMIT_WIDTH}) = (config.max_emit, 2+ARG_WIDTH) "
+            f"rows of (delay, type, arg...); got {emits.shape}"
+        )
+    return emits
+
+
+def _adapt_emits_host(fn: Callable, max_emit: int, name: str) -> Callable:
+    """Portable delay rows -> host ``(delay, type, arg)`` tuples.
+
+    The tuples keep traced values; the schedulers concretize them after
+    the batch and skip ν-rows (type < 0)."""
+
+    @functools.wraps(fn)
+    def host_handler(state, t, arg):
+        state, emits = fn(state, t, arg)
+        emits = _check_emits(emits, max_emit, name)
+        new = [(emits[i, 0], emits[i, 1], emits[i, 2:])
+               for i in range(max_emit)]
+        return state, new
+
+    host_handler.returns_events = True
+    return host_handler
+
+
+def _adapt_emits_device(fn: Callable, max_emit: int, name: str) -> Callable:
+    """Portable delay rows -> on-device absolute-time rows."""
+
+    @functools.wraps(fn)
+    def device_handler(state, t, arg):
+        state, emits = fn(state, t, arg)
+        emits = _check_emits(emits, max_emit, name)
+        valid = emits[:, 1] >= 0
+        times = jnp.where(valid, t + emits[:, 0], 0.0)
+        return state, emits.at[:, 0].set(times)
+
+    device_handler.returns_events = True
+    return device_handler
+
+
+def _sequential_from_entity(local: Callable, name: str) -> Callable:
+    """Derive the whole-state sequential handler from an entity-local
+    one: gather the entity row (``arg[0]``), apply, scatter back.
+
+    This is the form mixed windows dispatch on every backend; the device
+    engine's vmapped run path applies the same local handler per lane,
+    so the two dispatch routes stay bit-identical.
+    """
+
+    @functools.wraps(local)
+    def handler(state, t, arg):
+        arg = jnp.asarray(arg, jnp.float32)
+        eid = arg[0].astype(jnp.int32)
+        sub = jax.tree.map(lambda leaf: leaf[eid], state)
+        out = local(sub, t, arg)
+        return jax.tree.map(
+            lambda leaf, new: leaf.at[eid].set(new), state, out
+        )
+
+    handler.__name__ = f"entity_seq_{name}"
+    return handler
+
+
+@dataclasses.dataclass(frozen=True)
+class RunResult:
+    """Normalized result of one :meth:`CompiledSim.run`.
+
+    ``events``/``batches``/``dropped``/``final_time`` mean the same
+    thing on every backend (``dropped`` is always 0 on the host's
+    unbounded heap; ``rollbacks`` is only nonzero under the speculative
+    scheduler).  ``raw`` keeps the backend-native stats object.
+    """
+
+    state: Any
+    events: int
+    batches: int
+    dropped: int
+    final_time: float
+    rollbacks: int = 0
+    raw: Any = None
+
+    @property
+    def mean_batch_length(self) -> float:
+        return self.events / self.batches if self.batches else 0.0
+
+    def stats(self) -> dict:
+        return {
+            "events": self.events,
+            "batches": self.batches,
+            "dropped": self.dropped,
+            "final_time": self.final_time,
+            "rollbacks": self.rollbacks,
+            "mean_batch_length": self.mean_batch_length,
+        }
+
+
+class SimProgram:
+    """Declarative model: event alphabet + lookaheads + initial events.
+
+    Registration (``handler`` / ``entity_handler`` / ``register``) must
+    happen before the program is frozen; :meth:`build` freezes it.
+    Initial events may be scheduled at any time — they are snapshotted
+    into each :class:`CompiledSim` run, never consumed.
+    """
+
+    def __init__(self, name: str = "sim", config: Config | None = None):
+        self.name = name
+        self.config = config or Config()
+        self._specs: list[_HandlerSpec] = []
+        self._by_name: dict[str, _HandlerSpec] = {}
+        self._schedule: list[tuple[float, int, np.ndarray]] = []
+        self._frozen = False
+        self._registries: dict[str, EventRegistry] = {}
+
+    # -- registration -----------------------------------------------------
+    def register(self, name: str, fn: Callable, *,
+                 lookahead: float = float("inf"), emits: bool = False,
+                 entity: bool = False) -> _HandlerSpec:
+        """Register one event type.  ``emits=True`` handlers follow the
+        portable fixed-record delay convention (module docstring);
+        ``entity=True`` handlers are entity-local and must not emit."""
+        if self._frozen:
+            raise RuntimeError(
+                "SimProgram is frozen; register all event types before "
+                "build() (paper §III-A: constant handler array)"
+            )
+        if name in self._by_name:
+            raise ValueError(f"event type {name!r} already registered")
+        if entity and emits:
+            raise ValueError(
+                f"entity-parallel type {name!r} must not emit events "
+                "(vmapped run dispatch has no emission lanes)"
+            )
+        spec = _HandlerSpec(
+            type_id=len(self._specs), name=name, fn=fn,
+            lookahead=float(lookahead), emits=bool(emits),
+            entity=bool(entity),
+        )
+        self._specs.append(spec)
+        self._by_name[name] = spec
+        return spec
+
+    def handler(self, name: str | Callable | None = None, *,
+                lookahead: float = float("inf"), emits: bool = False):
+        """Decorator form: ``@prog.handler("ARRIVE", lookahead=1.0,
+        emits=True)`` (or bare ``@prog.handler``)."""
+        if callable(name):
+            fn, name = name, None
+            self.register(fn.__name__, fn)
+            return fn
+
+        def wrap(fn):
+            self.register(name or fn.__name__, fn,
+                          lookahead=lookahead, emits=emits)
+            return fn
+
+        return wrap
+
+    def entity_handler(self, name: str | Callable | None = None, *,
+                       lookahead: float = float("inf")):
+        """Decorator registering an entity-parallel type.  The function
+        maps an entity slice: ``(entity_state, t, arg) -> entity_state``
+        with ``arg[0]`` the entity index and every state leaf carrying
+        the entity dimension on axis 0."""
+        if callable(name):
+            fn, name = name, None
+            self.register(fn.__name__, fn, entity=True)
+            return fn
+
+        def wrap(fn):
+            self.register(name or fn.__name__, fn,
+                          lookahead=lookahead, entity=True)
+            return fn
+
+        return wrap
+
+    # -- initial events ---------------------------------------------------
+    def schedule(self, time: float, name: str, arg: Any = None) -> None:
+        """Add one initial event (by type name; ``arg`` is canonicalized
+        to the fixed f32[ARG_WIDTH] record)."""
+        if name not in self._by_name:
+            raise KeyError(
+                f"unknown event type {name!r}; registered: "
+                f"{sorted(self._by_name)}"
+            )
+        self._schedule.append(
+            (float(time), self._by_name[name].type_id, normalize_arg(arg))
+        )
+
+    def schedule_many(
+        self, events: Iterable[tuple[float, str] | tuple[float, str, Any]]
+    ) -> None:
+        for ev in events:
+            self.schedule(*ev)
+
+    def scheduled_events(self) -> list[tuple[float, int, np.ndarray]]:
+        """Snapshot of the initial events as (time, type_id, arg_vec)."""
+        return list(self._schedule)
+
+    # -- introspection ----------------------------------------------------
+    def freeze(self) -> "SimProgram":
+        self._frozen = True
+        return self
+
+    @property
+    def frozen(self) -> bool:
+        return self._frozen
+
+    @property
+    def names(self) -> list[str]:
+        return [s.name for s in self._specs]
+
+    def type_id(self, name: str) -> int:
+        return self._by_name[name].type_id
+
+    def __len__(self) -> int:
+        return len(self._specs)
+
+    # -- backend registries ------------------------------------------------
+    def _registry(self, backend: str) -> EventRegistry:
+        self.freeze()
+        if backend not in self._registries:
+            adapt = (_adapt_emits_device if backend == "device"
+                     else _adapt_emits_host)
+            reg = EventRegistry()
+            for spec in self._specs:
+                fn = spec.fn
+                if spec.entity:
+                    fn = _sequential_from_entity(fn, spec.name)
+                if spec.emits:
+                    fn = adapt(fn, self.config.max_emit, spec.name)
+                reg.register(spec.name, fn, lookahead=spec.lookahead)
+            self._registries[backend] = reg.freeze()
+        return self._registries[backend]
+
+    def host_registry(self) -> EventRegistry:
+        """Registry with handlers adapted to the host schedulers'
+        list-of-``(delay, type, arg)`` emission convention."""
+        return self._registry("host")
+
+    def device_registry(self) -> EventRegistry:
+        """Registry with handlers adapted to the on-device absolute-time
+        fixed-record emission convention."""
+        return self._registry("device")
+
+    def device_entity_handlers(self) -> dict[int, Callable]:
+        """type_id -> entity-local handler, for the device engine's
+        vmapped single-type-run dispatch."""
+        return {s.type_id: s.fn for s in self._specs if s.entity}
+
+    # -- compilation -------------------------------------------------------
+    def build(self, *, backend: str = "device",
+              scheduler: str = "conservative", composer: str = "lazy",
+              queue_mode: str = "tiered",
+              capacity: int | None = None,
+              front_cap: int | None = None, stage_cap: int | None = None,
+              state_spec=None, arg_spec=None,
+              check_causality: bool = False,
+              window_slack: float = float("inf"),
+              jit_handlers: bool = True) -> "CompiledSim":
+        """Compile this model against one runtime.
+
+        ``backend="device"`` honors ``queue_mode`` (+ the optional
+        capacity/tier overrides); ``backend="host"`` honors
+        ``scheduler`` and ``composer`` (+ eager specs / causality /
+        slack knobs).  Passing a knob that the selected backend does
+        not read is an error, not a silent default — a mis-targeted
+        ``scheduler=`` must not quietly run a different runtime.
+        Everything model-level — handlers, lookaheads, Config, initial
+        events — comes from the program; nothing about the model is
+        repeated at the call site.  ``max_emit`` is Config-only: the
+        portable emit-row shape is baked into the handler adapters.
+        """
+        self.freeze()
+        if backend == "device":
+            from repro.core.engine import DeviceEngine
+
+            misdirected = {
+                "scheduler": scheduler != "conservative",
+                "composer": composer != "lazy",
+                "state_spec": state_spec is not None,
+                "arg_spec": arg_spec is not None,
+                "check_causality": check_causality,
+                "window_slack": window_slack != float("inf"),
+                "jit_handlers": not jit_handlers,
+            }
+            bad = [k for k, hit in misdirected.items() if hit]
+            if bad:
+                raise ValueError(
+                    f"{bad} are host-backend knobs; the device backend "
+                    "would silently ignore them — drop them or build "
+                    "with backend='host'"
+                )
+            if queue_mode not in _QUEUE_MODES:
+                raise ValueError(
+                    f"unknown queue_mode {queue_mode!r}; "
+                    f"expected one of {_QUEUE_MODES}"
+                )
+            engine = DeviceEngine.from_program(
+                self, queue_mode=queue_mode, capacity=capacity,
+                front_cap=front_cap, stage_cap=stage_cap,
+            )
+            return CompiledSim(self, backend="device", engine=engine,
+                               variant=queue_mode)
+        if backend == "host":
+            misdirected = {
+                "queue_mode": queue_mode != "tiered",
+                "capacity": capacity is not None,
+                "front_cap": front_cap is not None,
+                "stage_cap": stage_cap is not None,
+            }
+            bad = [k for k, hit in misdirected.items() if hit]
+            if bad:
+                raise ValueError(
+                    f"{bad} are device-backend knobs; the host backend "
+                    "would silently ignore them — drop them or build "
+                    "with backend='device'"
+                )
+            from repro.core.composer import EagerComposer, LazyComposer
+            from repro.core.scheduler import (
+                ConservativeScheduler,
+                SpeculativeScheduler,
+            )
+
+            if scheduler not in _HOST_SCHEDULERS:
+                raise ValueError(
+                    f"unknown scheduler {scheduler!r}; "
+                    f"expected one of {_HOST_SCHEDULERS}"
+                )
+            if scheduler == "unbatched":
+                return CompiledSim(self, backend="host", variant="unbatched",
+                                   jit_handlers=jit_handlers)
+            if composer == "lazy":
+                comp = LazyComposer.from_program(self)
+            elif composer == "eager":
+                if arg_spec is None:
+                    arg_spec = jax.ShapeDtypeStruct(
+                        (ARG_WIDTH,), jnp.float32
+                    )
+                comp = EagerComposer.from_program(
+                    self, state_spec=state_spec, arg_spec=arg_spec
+                )
+            else:
+                raise ValueError(f"unknown composer {composer!r}")
+            if scheduler == "conservative":
+                sched = ConservativeScheduler.from_program(
+                    self, composer=comp, check_causality=check_causality
+                )
+            else:
+                sched = SpeculativeScheduler.from_program(
+                    self, composer=comp, window_slack=window_slack
+                )
+            return CompiledSim(self, backend="host", sched=sched,
+                               variant=scheduler)
+        raise ValueError(
+            f"unknown backend {backend!r}; expected 'device' or 'host'"
+        )
+
+
+class CompiledSim:
+    """One (model, runtime) pairing with a uniform ``run`` contract.
+
+    ``run`` is re-runnable: every call rebuilds the initial pending set
+    from the program's schedule.  On the device backend that hides the
+    queue-donation footgun — the donated (consumed) queue value is an
+    internal detail, callers never hold one.  Composed batch programs
+    and the engine's jitted main loop are cached on this object, so
+    repeat runs pay no recompilation.
+    """
+
+    def __init__(self, program: SimProgram, *, backend: str,
+                 engine=None, sched=None, variant: str = "",
+                 jit_handlers: bool = True):
+        self.program = program
+        self.backend = backend
+        self.engine = engine
+        self.sched = sched
+        self.variant = variant
+        self.jit_handlers = jit_handlers
+
+    def __repr__(self):
+        return (f"CompiledSim({self.program.name!r}, "
+                f"backend={self.backend!r}, variant={self.variant!r})")
+
+    @property
+    def registry(self) -> EventRegistry:
+        return (self.program.device_registry() if self.backend == "device"
+                else self.program.host_registry())
+
+    def _initial_events(self, events):
+        if events is None:
+            evs = self.program.scheduled_events()
+        else:
+            evs = []
+            for (t, ty, *rest) in events:
+                type_id = (self.program.type_id(ty) if isinstance(ty, str)
+                           else int(ty))
+                arg = rest[0] if rest else None
+                evs.append((float(t), type_id, normalize_arg(arg)))
+        return evs
+
+    def run(self, state, *, until: float | None = None,
+            max_batches: int | None = None,
+            max_events: int | None = None,
+            events: Sequence | None = None) -> RunResult:
+        """Execute until the pending set drains (or a bound trips).
+
+        ``until`` stops before any event later than it runs (identical
+        horizon rule on every backend); ``max_batches`` bounds executed
+        batches; ``max_events`` bounds executed events (host backends
+        only — the device loop counts batches).  ``events`` optionally
+        replaces the program's initial schedule for this run, as
+        ``(time, type_name_or_id[, arg])`` tuples.
+        """
+        t_end = float("inf") if until is None else float(until)
+        evs = self._initial_events(events)
+        if self.backend == "device":
+            if max_events is not None:
+                raise ValueError(
+                    "max_events is host-only; the device loop counts "
+                    "batches — use max_batches"
+                )
+            queue = self.engine.initial_queue(evs)
+            state, queue, stats = self.engine.run(
+                state, queue,
+                max_batches=(1 << 30) if max_batches is None
+                else int(max_batches),
+                t_end=t_end,
+            )
+            return RunResult(
+                state=state,
+                events=int(stats["events"]),
+                batches=int(stats["batches"]),
+                dropped=int(stats["dropped"]),
+                final_time=float(stats["time"]),
+                raw=stats,
+            )
+        queue = HostEventQueue()
+        for (t, type_id, arg) in evs:
+            queue.push(t, type_id, arg)
+        if self.variant == "unbatched":
+            from repro.core.scheduler import run_unbatched
+
+            state, rs = run_unbatched(
+                self.program.host_registry(), state, queue,
+                jit_handlers=self.jit_handlers,
+                max_events=max_events, max_batches=max_batches,
+                t_end=t_end,
+            )
+        else:
+            state, rs = self.sched.run(
+                state, queue, max_events=max_events,
+                max_batches=max_batches, t_end=t_end,
+            )
+        return RunResult(
+            state=state,
+            events=rs.events_executed,
+            batches=rs.batches_executed,
+            dropped=0,
+            final_time=float(rs.final_time),
+            rollbacks=rs.rollbacks,
+            raw=rs,
+        )

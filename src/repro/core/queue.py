@@ -111,9 +111,15 @@ class HostEventQueue:
         return ev
 
     def push_event(self, ev: Event) -> None:
-        ev = dataclasses.replace(ev, seq=self._seq)
+        """Re-insert an existing event, PRESERVING its seq.
+
+        Used by speculative rollback: re-pushed events must keep their
+        original tie-break rank, otherwise they would sort after
+        same-timestamp events that were never extracted and execution
+        order would diverge from the sequential one.
+        """
         heapq.heappush(self._heap, (ev.time, ev.seq, ev))
-        self._seq += 1
+        self._seq = max(self._seq, ev.seq + 1)
         self.push_count += 1
 
     def pop(self) -> Event:
@@ -322,12 +328,28 @@ def device_queue_pop(q: DeviceQueue):
     return q, t, ty, arg
 
 
-def device_queue_extract_ref(q: DeviceQueue, max_len: int, lookaheads):
+def device_queue_next_time(q: DeviceQueue):
+    """Earliest pending timestamp under the canonical layout (O(1)).
+
+    The occupied prefix is (time, seq)-sorted, so the head slot answers;
+    an empty queue holds the ``inf`` sentinel there.
+    """
+    return q.times[0]
+
+
+def device_queue_next_time_ref(q: DeviceQueue):
+    """Earliest pending timestamp, layout-independent (O(capacity))."""
+    return jnp.min(jnp.where(q.types >= 0, q.times, _INF))
+
+
+def device_queue_extract_ref(q: DeviceQueue, max_len: int, lookaheads,
+                             t_cap=None):
     """Reference window extraction: ``max_len`` serial peek/pop rounds.
 
     The seed engine's loop (paper Fig 2 evaluated one event at a time):
     each round is an O(capacity) masked argmin inside ``lax.cond``, with
-    a serial dependence between rounds.  Returns
+    a serial dependence between rounds.  ``t_cap`` optionally starts the
+    dynamic window bound below ``inf`` (the run horizon).  Returns
     ``(q', ts, tys, args, length)`` with zero-padding past ``length``.
     Kept as the executable specification for
     :func:`device_queue_extract`.
@@ -354,7 +376,8 @@ def device_queue_extract_ref(q: DeviceQueue, max_len: int, lookaheads):
 
         return jax.lax.cond(can_take, take, skip, None)
 
-    init = (q, ts0, tys0, args0, jnp.int32(0), _INF, jnp.bool_(False))
+    cap = _INF if t_cap is None else jnp.asarray(t_cap, jnp.float32)
+    init = (q, ts0, tys0, args0, jnp.int32(0), cap, jnp.bool_(False))
     q, ts, tys, args, length, _t_max, _done = jax.lax.fori_loop(
         0, max_len, body, init
     )
@@ -395,7 +418,7 @@ def _prefix_rank(mask):
     ).astype(jnp.int32) - 1
 
 
-def window_prefix_mask(ts, wins, valid):
+def window_prefix_mask(ts, wins, valid, t_cap=None):
     """Vectorized §III-B dynamic-lookahead take rule.
 
     Given candidates already sorted by ``(time, seq)``, the serial rule
@@ -406,22 +429,28 @@ def window_prefix_mask(ts, wins, valid):
     ``cummin`` over the window bounds ``wins = t + l``, and a prefix-AND
     (via cumsum of rejections) that implements the stop condition.
 
+    ``t_cap`` initializes the dynamic bound below ``inf`` — the run
+    horizon (``until``): with it, no event past the cap is ever taken,
+    the cross-backend ``t_end`` contract.
+
     Shared with :func:`repro.core.scheduler.extract_window`, which is
     the host/serial form of the same rule; the differential tests assert
     their equivalence.
     """
     ts = jnp.asarray(ts, jnp.float32)
     wins = jnp.asarray(wins, jnp.float32)
+    cap = _INF if t_cap is None else jnp.asarray(t_cap, jnp.float32)
     # Exclusive cummin of the window bounds: t_max before candidate i.
     t_max = jnp.concatenate(
         [jnp.full((1,), jnp.inf, jnp.float32), jax.lax.cummin(wins)[:-1]]
     )
-    ok = valid & (ts <= t_max)
+    ok = valid & (ts <= jnp.minimum(t_max, cap))
     # Prefix-AND: no rejection at any earlier position.
     return jnp.cumsum(~ok) == 0
 
 
-def device_queue_extract(q: DeviceQueue, max_len: int, lookaheads):
+def device_queue_extract(q: DeviceQueue, max_len: int, lookaheads,
+                         t_cap=None):
     """Single-pass window extraction (paper Fig 2, fully vectorized).
 
     Requires the canonical sorted layout (occupied slots form a prefix
@@ -452,7 +481,7 @@ def device_queue_extract(q: DeviceQueue, max_len: int, lookaheads):
     valid = tys_c >= 0
     la = lookaheads[jnp.clip(tys_c, 0, num_types - 1)]
     wins = jnp.where(valid, ts_c + la, jnp.inf)
-    take = window_prefix_mask(ts_c, wins, valid)
+    take = window_prefix_mask(ts_c, wins, valid, t_cap)
     length = jnp.sum(take).astype(jnp.int32)
 
     ts = jnp.where(take, ts_c, 0.0)
@@ -715,6 +744,22 @@ def tiered_queue_occupancy(q: TieredDeviceQueue):
     return q.front_n + q.stage_n + q.main_n
 
 
+def tiered_queue_next_time(q: TieredDeviceQueue):
+    """Timestamp of the earliest pending event (``inf`` when empty).
+
+    While the front is non-empty its head is the global minimum (tier
+    invariant); a drained front falls back to min(staging, main head) —
+    O(stage_cap) for the unsorted ring, still capacity-independent.
+    """
+    m_min = jnp.where(
+        q.main_n > 0,
+        jnp.take(q.m_times, jnp.clip(q.m_head, 0, q.capacity - 1)),
+        _INF,
+    )
+    rest = jnp.minimum(jnp.min(q.s_times), m_min)
+    return jnp.where(q.front_n > 0, q.f_times[0], rest)
+
+
 def _flush_stage(q: TieredDeviceQueue) -> TieredDeviceQueue:
     """Bulk-merge the staging ring into the main array (rare path).
 
@@ -865,7 +910,8 @@ def _refill_front(q: TieredDeviceQueue) -> TieredDeviceQueue:
     )
 
 
-def tiered_queue_extract(q: TieredDeviceQueue, max_len: int, lookaheads):
+def tiered_queue_extract(q: TieredDeviceQueue, max_len: int, lookaheads,
+                         t_cap=None):
     """Window extraction from the front tier (paper Fig 2).
 
     Identical take rule and output as :func:`device_queue_extract`, but
@@ -894,7 +940,7 @@ def tiered_queue_extract(q: TieredDeviceQueue, max_len: int, lookaheads):
     valid = tys_c >= 0
     la = lookaheads[jnp.clip(tys_c, 0, num_types - 1)]
     wins = jnp.where(valid, ts_c + la, jnp.inf)
-    take = window_prefix_mask(ts_c, wins, valid)
+    take = window_prefix_mask(ts_c, wins, valid, t_cap)
     length = jnp.sum(take).astype(jnp.int32)
 
     ts = jnp.where(take, ts_c, 0.0)

@@ -22,7 +22,14 @@ Schedulers:
 Emission anchoring: handlers emit ``(delay, type, arg)`` and the new
 event is scheduled at ``t_emitter + delay`` (the composer tags each
 emission with its in-batch source index), identically across the
-batched, unbatched, and speculative paths.
+batched, unbatched, and speculative paths.  Emissions whose type is
+negative are ν-rows (unused slots of the fixed-record convention that
+``repro.api.SimProgram`` compiles portable handlers to) and are skipped
+everywhere — including the speculative violation predicate.
+
+All three run entry points accept ``t_end``: a batch (or event) is
+started only while the earliest pending event's timestamp is <= t_end,
+the same horizon contract as ``DeviceEngine.run``.
 """
 
 from __future__ import annotations
@@ -64,16 +71,19 @@ def extract_window(
     queue: HostEventQueue,
     registry: EventRegistry,
     max_len: int,
+    t_cap: float = float("inf"),
 ) -> list[Event]:
     """Pop the maximal runnable prefix under the dynamic lookahead window.
 
-    This is the serial form of the take rule; the vectorized form shared
-    with the device queue is :func:`repro.core.queue.window_prefix_mask`
-    (and :func:`extract_window_presorted` below), and the differential
-    tests assert their equivalence.
+    ``t_cap`` starts the dynamic bound below ``inf`` — the run horizon:
+    no event with a later timestamp is extracted.  This is the serial
+    form of the take rule; the vectorized form shared with the device
+    queue is :func:`repro.core.queue.window_prefix_mask` (and
+    :func:`extract_window_presorted` below), and the differential tests
+    assert their equivalence.
     """
     batch: list[Event] = []
-    t_max = float("inf")
+    t_max = t_cap
     while queue and len(batch) < max_len:
         head = queue.peek()
         if head.time > t_max:
@@ -118,12 +128,28 @@ class ConservativeScheduler:
         self.max_len = composer.codec.max_len
         self.check_causality = check_causality
 
+    @classmethod
+    def from_program(cls, program, *, composer: _ComposerBase | None = None,
+                     check_causality: bool = False):
+        """Construct from a frozen SimProgram (host-adapted registry)."""
+        from repro.core.composer import LazyComposer
+
+        composer = composer or LazyComposer.from_program(program)
+        return cls(program.host_registry(), composer,
+                   check_causality=check_causality)
+
     def run(self, state, queue: HostEventQueue, *,
-            max_events: int | None = None) -> tuple[Any, RunStats]:
+            max_events: int | None = None,
+            max_batches: int | None = None,
+            t_end: float = float("inf")) -> tuple[Any, RunStats]:
         stats = RunStats()
         budget = float("inf") if max_events is None else max_events
-        while queue and stats.events_executed < budget:
-            batch = extract_window(queue, self.registry, self.max_len)
+        b_budget = float("inf") if max_batches is None else max_batches
+        while (queue and stats.events_executed < budget
+               and stats.batches_executed < b_budget
+               and queue.peek().time <= t_end):
+            batch = extract_window(queue, self.registry, self.max_len,
+                                   t_cap=t_end)
             if not batch:  # cannot happen: first event is always extractable
                 break
             word = [ev.type_id for ev in batch]
@@ -137,14 +163,17 @@ class ConservativeScheduler:
             # do not depend on how events were grouped into batches).
             last_t = batch[-1].time
             for (src, delay, type_id, arg) in emitted:
+                ty = int(type_id)
+                if ty < 0:
+                    continue  # ν-row (unused fixed-record slot)
                 t_new = float(batch[src].time) + float(delay)
                 if self.check_causality and t_new < last_t:
                     raise RuntimeError(
-                        f"causality violation: event type {type_id} emitted "
+                        f"causality violation: event type {ty} emitted "
                         f"at {t_new} < batch end {last_t}; lookahead too "
                         "large for this model"
                     )
-                queue.push(t_new, type_id, arg)
+                queue.push(t_new, ty, arg)
             stats.record_batch(len(batch))
             stats.final_time = last_t
         return state, stats
@@ -157,6 +186,8 @@ def run_unbatched(
     *,
     jit_handlers: bool = True,
     max_events: int | None = None,
+    max_batches: int | None = None,
+    t_end: float = float("inf"),
 ) -> tuple[Any, RunStats]:
     """One-by-one execution, the common sequential DES baseline.
 
@@ -170,14 +201,20 @@ def run_unbatched(
     for et in registry:
         progs[et.type_id] = jax.jit(et.handler) if jit_handlers else et.handler
     budget = float("inf") if max_events is None else max_events
-    while queue and stats.events_executed < budget:
+    if max_batches is not None:  # one event per "batch" here
+        budget = min(budget, max_batches)
+    while (queue and stats.events_executed < budget
+           and queue.peek().time <= t_end):
         ev = queue.pop()
         et = registry[ev.type_id]
         result = progs[ev.type_id](state, jnp.float32(ev.time), ev.arg)
         if et.returns_events:
             state, emitted = result
             for (delay, type_id, arg) in emitted:
-                queue.push(ev.time + float(delay), type_id, arg)
+                ty = int(type_id)
+                if ty < 0:
+                    continue  # ν-row (unused fixed-record slot)
+                queue.push(ev.time + float(delay), ty, arg)
         else:
             state = result
         stats.record_batch(1)
@@ -209,12 +246,25 @@ class SpeculativeScheduler:
         # How far past t_max we are willing to speculate.
         self.window_slack = window_slack
 
-    def _extract_speculative(self, queue: HostEventQueue):
+    @classmethod
+    def from_program(cls, program, *, composer: _ComposerBase | None = None,
+                     window_slack: float = float("inf")):
+        """Construct from a frozen SimProgram (host-adapted registry)."""
+        from repro.core.composer import LazyComposer
+
+        composer = composer or LazyComposer.from_program(program)
+        return cls(program.host_registry(), composer,
+                   window_slack=window_slack)
+
+    def _extract_speculative(self, queue: HostEventQueue,
+                             t_cap: float = float("inf")):
         batch: list[Event] = []
         t_max = float("inf")
         while queue and len(batch) < self.max_len:
             head = queue.peek()
-            if head.time > t_max + self.window_slack:
+            # Speculation may run past the lookahead window (by
+            # window_slack) but never past the run horizon t_cap.
+            if head.time > min(t_max + self.window_slack, t_cap):
                 break
             batch.append(queue.pop())
             la = self.registry[head.type_id].lookahead
@@ -222,11 +272,16 @@ class SpeculativeScheduler:
         return batch, t_max
 
     def run(self, state, queue: HostEventQueue, *,
-            max_events: int | None = None) -> tuple[Any, RunStats]:
+            max_events: int | None = None,
+            max_batches: int | None = None,
+            t_end: float = float("inf")) -> tuple[Any, RunStats]:
         stats = RunStats()
         budget = float("inf") if max_events is None else max_events
-        while queue and stats.events_executed < budget:
-            batch, t_max = self._extract_speculative(queue)
+        b_budget = float("inf") if max_batches is None else max_batches
+        while (queue and stats.events_executed < budget
+               and stats.batches_executed < b_budget
+               and queue.peek().time <= t_end):
+            batch, t_max = self._extract_speculative(queue, t_cap=t_end)
             word = [ev.type_id for ev in batch]
             code = self.composer.codec.encode(word)
             ts = [jnp.float32(ev.time) for ev in batch]
@@ -246,7 +301,8 @@ class SpeculativeScheduler:
             # event.)
             del t_max
             violated = any(
-                float(batch[src].time) + float(delay) < last_t
+                int(_ty) >= 0
+                and float(batch[src].time) + float(delay) < last_t
                 for (src, delay, _ty, _a) in emitted
             )
             if violated:
@@ -262,7 +318,9 @@ class SpeculativeScheduler:
                     if et.returns_events:
                         state, new = result
                         for (delay, ty, a) in new:
-                            queue.push(ev.time + float(delay), ty, a)
+                            if int(ty) < 0:
+                                continue  # ν-row
+                            queue.push(ev.time + float(delay), int(ty), a)
                     else:
                         state = result
                     stats.record_batch(1)
@@ -270,7 +328,11 @@ class SpeculativeScheduler:
                 continue
             state = state_new
             for (src, delay, type_id, arg) in emitted:
-                queue.push(float(batch[src].time) + float(delay), type_id, arg)
+                if int(type_id) < 0:
+                    continue  # ν-row
+                queue.push(
+                    float(batch[src].time) + float(delay), int(type_id), arg
+                )
             stats.record_batch(len(batch))
             stats.final_time = last_t
         return state, stats

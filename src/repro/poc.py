@@ -63,6 +63,28 @@ def build_registry(iters: int = DEFAULT_ITERS,
     return reg.freeze()
 
 
+def build_program(iters: int = DEFAULT_ITERS,
+                  lookahead: float = 1_000_000.0,
+                  config=None):
+    """The PoC model as a :class:`repro.api.SimProgram` — the same two
+    handlers, declared once and compilable to every runtime."""
+    from repro.core.program import Config, SimProgram
+
+    prog = SimProgram("poc", config=config or Config(max_batch_len=4))
+
+    @prog.handler("Increment", lookahead=lookahead)
+    def increment(state, t, arg):
+        del t, arg
+        return increment_body(state, iters)
+
+    @prog.handler("Set", lookahead=lookahead)
+    def set_(state, t, arg):
+        del state, t, arg
+        return jnp.uint32(SET_VALUE)
+
+    return prog
+
+
 INCREMENT, SET = 0, 1  # type ids, in registration order
 
 

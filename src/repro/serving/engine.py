@@ -33,7 +33,7 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.events import EventRegistry
+from repro.core.program import SimProgram
 from repro.core.queue import HostEventQueue
 from repro.core.scheduler import extract_window
 from repro.models import LM
@@ -92,19 +92,26 @@ class ServingEngine:
         self._decode_k_programs: dict[int, Any] = {}
         self._prefill_programs: dict[int, Any] = {}
 
-        # --- the event alphabet (paper §III-A: constant handler array) ---
-        reg = EventRegistry()
-        reg.register("ARRIVE", self._h_arrive, lookahead=arrival_lookahead)
-        reg.register("PREFILL", self._h_prefill, lookahead=0.0)
+        # --- the event alphabet (paper §III-A: constant handler array),
+        # declared on a SimProgram like every other model in the repo.
+        # The serving control plane keeps its own run loop (the fused
+        # k-step decode fast path below), so it consumes the program's
+        # host registry directly rather than a CompiledSim; bound
+        # methods register fine — the handlers mutate `self`, which is
+        # the control-plane state.
+        prog = SimProgram("serving-control-plane")
+        prog.register("ARRIVE", self._h_arrive, lookahead=arrival_lookahead)
+        prog.register("PREFILL", self._h_prefill, lookahead=0.0)
         # DECODE lookahead = arrival lookahead: the only events a decode
         # emits are EVICTs, and evictions cannot affect other DECODEs in
         # the window (slot reuse requires a PREFILL, which is gated by
         # the ARRIVE lookahead) — so decode runs may batch up to the
         # next possible arrival, the paper's dynamic window at work.
-        reg.register("DECODE", self._h_decode_single,
-                     lookahead=arrival_lookahead)
-        reg.register("EVICT", self._h_evict, lookahead=0.0)
-        self.registry = reg.freeze()
+        prog.register("DECODE", self._h_decode_single,
+                      lookahead=arrival_lookahead)
+        prog.register("EVICT", self._h_evict, lookahead=0.0)
+        self.program = prog.freeze()
+        self.registry = prog.host_registry()
         self.queue = HostEventQueue()
 
     # ------------------------------------------------------------------

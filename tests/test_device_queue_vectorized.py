@@ -251,6 +251,14 @@ def _order_sensitive_registry():
     return reg.freeze()
 
 
+def test_use_vectorized_queue_removed():
+    """The removed flag fails fast with a pointer at queue_mode."""
+    reg = _order_sensitive_registry()
+    with pytest.raises(TypeError, match="queue_mode"):
+        DeviceEngine(reg, max_batch_len=3, capacity=32,
+                     use_vectorized_queue=True)
+
+
 @pytest.mark.parametrize("seed", [0, 1])
 def test_engine_vectorized_matches_reference_path(seed):
     """Full DeviceEngine runs: vectorized queue vs seed reference queue
@@ -259,10 +267,10 @@ def test_engine_vectorized_matches_reference_path(seed):
     events = [(float(t), int(rng.integers(0, 2)), None)
               for t in range(int(rng.integers(4, 10)))]
     results = []
-    for vec in (True, False):
+    for mode in ("flat", "reference"):
         reg = _order_sensitive_registry()
         eng = DeviceEngine(reg, max_batch_len=3, capacity=32, max_emit=1,
-                           use_vectorized_queue=vec)
+                           queue_mode=mode)
         q = eng.initial_queue(events)
         s, q, stats = eng.run(jnp.int32(1), q, max_batches=64)
         results.append((s, q, stats))

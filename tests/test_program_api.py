@@ -1,0 +1,243 @@
+"""API-level tests for `repro.api` (SimProgram / CompiledSim) and the
+emits_events wrap-not-mutate regression."""
+
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import ARG_WIDTH, Config, RunResult, SimProgram, emits_events
+from repro.core.events import EventRegistry
+
+
+# ---------------------------------------------------------------------------
+# emits_events: wrap, don't mutate (regression)
+# ---------------------------------------------------------------------------
+
+def _plain(state, t, arg):
+    return state, [(1.0, 0, None)]
+
+
+def test_emits_events_does_not_mutate_original():
+    marked = emits_events(_plain)
+    assert marked.returns_events
+    assert marked is not _plain
+    assert not hasattr(_plain, "returns_events")
+    assert marked.__wrapped__ is _plain
+    assert marked("s", 0.0, None) == _plain("s", 0.0, None)
+
+
+def test_emits_events_on_partial_bound_method_and_builtin():
+    # functools.partial
+    p = functools.partial(_plain)
+    mp = emits_events(p)
+    assert mp.returns_events and mp("s", 0.0, None) == _plain("s", 0.0, None)
+
+    # bound method (setattr on these raises AttributeError)
+    class M:
+        def h(self, state, t, arg):
+            return state, [(2.0, 0, None)]
+
+    bound = M().h
+    mb = emits_events(bound)
+    assert mb.returns_events
+    assert mb("s", 0.0, None) == ("s", [(2.0, 0, None)])
+
+    # builtin (cannot take attributes either)
+    mbuiltin = emits_events(len)
+    assert mbuiltin.returns_events and mbuiltin([1, 2, 3]) == 3
+
+
+def test_registry_detects_wrapped_handler():
+    reg = EventRegistry()
+
+    class M:
+        def h(self, state, t, arg):
+            return state + 1, [(1.0, 0, None)]
+
+    et = reg.register("A", emits_events(M().h), lookahead=1.0)
+    assert et.returns_events
+
+
+# ---------------------------------------------------------------------------
+# SimProgram registration / validation
+# ---------------------------------------------------------------------------
+
+def test_duplicate_and_post_freeze_registration_rejected():
+    prog = SimProgram()
+    prog.register("A", lambda s, t, a: s)
+    with pytest.raises(ValueError, match="already registered"):
+        prog.register("A", lambda s, t, a: s)
+    prog.freeze()
+    with pytest.raises(RuntimeError, match="frozen"):
+        prog.register("B", lambda s, t, a: s)
+
+
+def test_entity_handlers_must_not_emit():
+    prog = SimProgram()
+    with pytest.raises(ValueError, match="must not emit"):
+        prog.register("E", lambda es, t, a: es, entity=True, emits=True)
+
+
+def test_schedule_unknown_type():
+    prog = SimProgram()
+    prog.register("A", lambda s, t, a: s)
+    with pytest.raises(KeyError, match="unknown event type"):
+        prog.schedule(0.0, "Nope")
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        Config(max_batch_len=0)
+    with pytest.raises(ValueError):
+        Config(max_emit=0)
+    with pytest.raises(ValueError):
+        Config(codec="huffman")
+
+
+def test_build_rejects_unknown_targets():
+    prog = SimProgram()
+    prog.register("A", lambda s, t, a: s)
+    with pytest.raises(ValueError, match="backend"):
+        prog.build(backend="fpga")
+    with pytest.raises(ValueError, match="scheduler"):
+        prog.build(backend="host", scheduler="optimistic2")
+    with pytest.raises(ValueError, match="queue_mode"):
+        prog.build(backend="device", queue_mode="heap")
+
+
+def test_build_rejects_misdirected_backend_knobs():
+    """A knob the selected backend would not read must fail loudly,
+    not silently run a different runtime."""
+    prog = SimProgram()
+    prog.register("A", lambda s, t, a: s)
+    with pytest.raises(ValueError, match="host-backend"):
+        prog.build(backend="device", scheduler="speculative")
+    with pytest.raises(ValueError, match="host-backend"):
+        prog.build(backend="device", window_slack=2.0)
+    with pytest.raises(ValueError, match="device-backend"):
+        prog.build(backend="host", queue_mode="flat")
+    with pytest.raises(ValueError, match="device-backend"):
+        prog.build(backend="host", capacity=64)
+
+
+def test_emit_shape_validated():
+    prog = SimProgram(config=Config(max_emit=2))
+
+    @prog.handler("A", lookahead=1.0, emits=True)
+    def a(state, t, arg):
+        return state, jnp.zeros((1, 2 + ARG_WIDTH), jnp.float32)  # wrong
+
+    prog.schedule(0.0, "A")
+    with pytest.raises(ValueError, match="max_emit"):
+        prog.build(backend="device").run(jnp.int32(0))
+
+
+def test_arg_normalization_and_width_check():
+    from repro.api import normalize_arg
+
+    np.testing.assert_array_equal(normalize_arg(None),
+                                  np.zeros((ARG_WIDTH,), np.float32))
+    np.testing.assert_array_equal(normalize_arg(3.0)[:2],
+                                  np.asarray([3.0, 0.0], np.float32))
+    with pytest.raises(ValueError, match="ARG_WIDTH"):
+        normalize_arg(np.arange(ARG_WIDTH + 1))
+
+
+# ---------------------------------------------------------------------------
+# CompiledSim run contract
+# ---------------------------------------------------------------------------
+
+def _counter_prog(**cfg):
+    prog = SimProgram(config=Config(**cfg) if cfg else None)
+
+    @prog.handler("TICK", lookahead=1.0)
+    def tick(state, t, arg):
+        return state + 1
+
+    for t in range(6):
+        prog.schedule(float(t), "TICK")
+    return prog
+
+
+def test_run_result_fields_and_mean_batch_length():
+    res = _counter_prog(max_batch_len=2).build(backend="host").run(
+        jnp.int32(0))
+    assert isinstance(res, RunResult)
+    assert int(res.state) == 6
+    # lookahead 1.0 on the integer grid -> pairs: [0,1], [2,3], [4,5]
+    assert res.events == 6 and res.batches == 3
+    assert res.dropped == 0 and res.rollbacks == 0
+    assert res.final_time == 5.0
+    assert res.mean_batch_length == 2.0
+    assert res.stats()["mean_batch_length"] == 2.0
+
+
+def test_max_batches_uniform_across_backends():
+    counts = set()
+    for kw in (dict(backend="host", scheduler="conservative"),
+               dict(backend="host", scheduler="unbatched"),
+               dict(backend="device", queue_mode="tiered")):
+        res = _counter_prog(max_batch_len=1).build(**kw).run(
+            jnp.int32(0), max_batches=3)
+        counts.add((int(res.state), res.batches))
+    assert counts == {(3, 3)}
+
+
+def test_device_rejects_max_events():
+    sim = _counter_prog().build(backend="device")
+    with pytest.raises(ValueError, match="max_events"):
+        sim.run(jnp.int32(0), max_events=3)
+
+
+def test_run_events_override():
+    prog = _counter_prog()
+    sim = prog.build(backend="host")
+    res = sim.run(jnp.int32(0), events=[(0.0, "TICK"), (1.0, "TICK")])
+    assert int(res.state) == 2 and res.events == 2
+    # the program's own schedule is untouched
+    res2 = sim.run(jnp.int32(0))
+    assert res2.events == 6
+
+
+def test_from_program_constructors():
+    """The backend layer is constructible from a frozen program."""
+    from repro.core.composer import LazyComposer
+    from repro.core.engine import DeviceEngine, Simulator
+    from repro.core.scheduler import ConservativeScheduler
+
+    prog = _counter_prog(max_batch_len=3, capacity=32)
+    eng = DeviceEngine.from_program(prog, queue_mode="flat")
+    assert eng.capacity == 32 and eng.max_batch_len == 3
+    s, _q, stats = eng.run(jnp.int32(0),
+                           eng.initial_queue(prog.scheduled_events()))
+    assert int(s) == 6
+
+    sim = Simulator.from_program(prog)
+    state, rs = sim.run(jnp.int32(0), mode="conservative")
+    assert int(state) == 6
+
+    sched = ConservativeScheduler.from_program(prog)
+    assert isinstance(sched.composer, LazyComposer)
+    assert sched.max_len == 3
+
+
+def test_entity_sequential_derivation_matches_manual():
+    """Mixed windows use the derived sequential handler; it must match
+    applying the local handler by hand."""
+    prog = SimProgram(config=Config(max_batch_len=2, capacity=16))
+
+    @prog.entity_handler("BUMP", lookahead=1.0)
+    def bump(es, t, arg):
+        return es * 2 + 1
+
+    prog.schedule(0.0, "BUMP", arg=[1.0])
+    prog.schedule(0.0, "BUMP", arg=[3.0])
+    state0 = jnp.arange(4, dtype=jnp.int32)
+    expect = np.asarray(state0).copy()
+    for eid in (1, 3):
+        expect[eid] = expect[eid] * 2 + 1
+    for kw in (dict(backend="host"), dict(backend="device")):
+        res = prog.build(**kw).run(state0)
+        np.testing.assert_array_equal(np.asarray(res.state), expect)
