@@ -17,7 +17,8 @@ runtime with :meth:`SimProgram.build`:
     result = prog.build(backend="host", scheduler="speculative").run(...)
 
 Every backend — host (conservative / speculative / unbatched × lazy /
-eager composition) and device (tiered / flat / reference queues) — runs
+eager composition) and device (tiered / tiered3 / flat / reference
+queues) — runs
 the same definition with bit-identical final state and normalized
 :class:`RunResult` stats.  The classes in :mod:`repro.core` remain the
 backend layer underneath; reach for them only when benchmarking a

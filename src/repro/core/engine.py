@@ -26,12 +26,22 @@ Per-batch scheduling cost is selected by ``queue_mode`` (DESIGN.md §4):
 
 * ``"tiered"`` (default) — two-tier queue; per-batch work touches only
   the small front/staging tiers, so scheduling overhead is independent
-  of queue capacity.
+  of queue capacity on the common path (the staging flush merge is
+  still O(capacity) under near-full, near-head re-emit pressure).
+* ``"tiered3"`` — the log-structured third tier (DESIGN.md §4.4):
+  staging flushes become bounded sorted runs and front refills a
+  bounded k-way merge, so no per-batch path is O(capacity) even at
+  >=90% occupancy; the one O(capacity) compaction amortizes over an
+  entire run pool.  The mode for capacity 64k+ scenarios.
 * ``"flat"`` — the PR-1 single-array vectorized ops: a constant number
   of data-parallel passes, but the emit merge is O(capacity) per batch.
-* ``"reference"`` — the seed per-event ops (serial argmin/scatter
-  chains); kept as the executable specification for differential
-  testing and the overhead benchmark.
+* ``"reference"`` — seed semantics for differential testing and the
+  overhead benchmark: extraction is the serial per-event argmin chain
+  (the executable spec), inserts the one-pass
+  :func:`device_queue_push_rows` (bit-identical to the serial seed
+  pushes INCLUDING slot placement; the serial chain survives as
+  ``device_queue_push_rows_serial``, exercised by the differential
+  tests).
 
 The queue argument to :meth:`DeviceEngine.run` is DONATED to the jitted
 program (its buffers are reused for the output queue), so a queue value
@@ -67,6 +77,7 @@ from repro.core.events import EventRegistry
 from repro.core.queue import (
     DeviceQueue,
     HostEventQueue,
+    Tiered3DeviceQueue,
     TieredDeviceQueue,
     device_queue_extract,
     device_queue_extract_ref,
@@ -75,6 +86,11 @@ from repro.core.queue import (
     device_queue_next_time,
     device_queue_next_time_ref,
     device_queue_push_rows,
+    tiered3_queue_extract,
+    tiered3_queue_fill_rows,
+    tiered3_queue_from_host,
+    tiered3_queue_has_pending,
+    tiered3_queue_next_time,
     tiered_queue_extract,
     tiered_queue_fill_rows,
     tiered_queue_from_host,
@@ -177,12 +193,16 @@ class DeviceEngine:
     queue-capacity overflow.
 
     ``queue_mode`` selects the pending-set implementation:
-    ``"tiered"`` (default, capacity-independent per-batch cost),
+    ``"tiered"`` (default, capacity-independent per-batch cost on the
+    common path), ``"tiered3"`` (log-structured run tier: bounded
+    worst-case per-batch cost, for near-full/64k+ scenarios),
     ``"flat"`` (PR-1 single-array vectorized ops), or ``"reference"``
-    (seed per-event ops, the executable specification).
-    ``front_cap``/``stage_cap`` size the tiered queue's front tier and
-    staging ring; the defaults scale with ``max_batch_len`` and
-    ``max_emit`` and are clamped to valid ranges.
+    (seed semantics: serial-spec extraction + the bit-identical
+    one-pass bulk insert).
+    ``front_cap``/``stage_cap`` size the tiered queues' front tier and
+    staging ring and ``num_runs`` the tiered3 run pool; the defaults
+    scale with ``max_batch_len`` and ``max_emit`` and are clamped to
+    valid ranges.
 
     ``entity_handlers`` maps a type_id to an entity-local handler
     ``(entity_state, t, arg) -> entity_state`` over slices of the state
@@ -203,6 +223,7 @@ class DeviceEngine:
     queue_mode: str = "tiered"
     front_cap: int | None = None
     stage_cap: int | None = None
+    num_runs: int | None = None
     entity_handlers: Mapping[int, Callable] | None = None
     # Removed 2024-era flag; kept as an InitVar so old call sites get a
     # pointer at queue_mode instead of a generic unexpected-kwarg error.
@@ -218,10 +239,11 @@ class DeviceEngine:
                 "queue_mode=...)."
             )
         self.registry.freeze()
-        if self.queue_mode not in ("tiered", "flat", "reference"):
+        if self.queue_mode not in ("tiered", "tiered3", "flat",
+                                   "reference"):
             raise ValueError(
                 f"unknown queue_mode {self.queue_mode!r}; expected "
-                "'tiered', 'flat', or 'reference'"
+                "'tiered', 'tiered3', 'flat', or 'reference'"
             )
         # Tier sizing: the rare O(capacity) paths (front refill, staging
         # flush) amortize over ~front_cap/max_batch_len resp.
@@ -235,6 +257,10 @@ class DeviceEngine:
         if self.stage_cap is None:
             self.stage_cap = max(256, 8 * emit_rows)
         self.stage_cap = max(self.stage_cap, emit_rows)
+        # Run pool: one compaction per num_runs*stage_cap staged events.
+        if self.num_runs is None:
+            self.num_runs = 8
+        self.num_runs = max(self.num_runs, 1)
         self.codec = DenseCodec(len(self.registry), self.max_batch_len)
         self.dispatch = build_switch_dispatcher(
             self.registry, self.codec, max_emit=self.max_emit
@@ -278,6 +304,7 @@ class DeviceEngine:
                      capacity: int | None = None,
                      front_cap: int | None = None,
                      stage_cap: int | None = None,
+                     num_runs: int | None = None,
                      t_end: float = float("inf")) -> "DeviceEngine":
         """Construct the device backend from a frozen SimProgram.
 
@@ -299,16 +326,24 @@ class DeviceEngine:
             queue_mode=queue_mode,
             front_cap=front_cap,
             stage_cap=stage_cap,
+            num_runs=num_runs,
             entity_handlers=program.device_entity_handlers() or None,
         )
 
     # -- queue construction -------------------------------------------------
-    def initial_queue(self, events) -> DeviceQueue | TieredDeviceQueue:
+    def initial_queue(
+        self, events
+    ) -> DeviceQueue | TieredDeviceQueue | Tiered3DeviceQueue:
         # Built host-side, one device_put (None args become zero vectors).
         if self.queue_mode == "tiered":
             return tiered_queue_from_host(
                 events, self.capacity, front_cap=self.front_cap,
                 stage_cap=self.stage_cap,
+            )
+        if self.queue_mode == "tiered3":
+            return tiered3_queue_from_host(
+                events, self.capacity, front_cap=self.front_cap,
+                stage_cap=self.stage_cap, num_runs=self.num_runs,
             )
         return device_queue_from_host(events, self.capacity)
 
@@ -316,6 +351,10 @@ class DeviceEngine:
     def _extract(self, queue, t_cap=None):
         if self.queue_mode == "tiered":
             return tiered_queue_extract(
+                queue, self.max_batch_len, self._lookaheads, t_cap
+            )
+        if self.queue_mode == "tiered3":
+            return tiered3_queue_extract(
                 queue, self.max_batch_len, self._lookaheads, t_cap
             )
         if self.queue_mode == "flat":
@@ -361,6 +400,7 @@ class DeviceEngine:
     def _run(self, state, queue, t_end, *, max_batches: int):
         inserts = {
             "tiered": tiered_queue_fill_rows,
+            "tiered3": tiered3_queue_fill_rows,
             "flat": device_queue_fill_rows,
             "reference": device_queue_push_rows,
         }
@@ -376,6 +416,9 @@ class DeviceEngine:
         if self.queue_mode == "tiered":
             has_pending = tiered_queue_has_pending
             next_time = tiered_queue_next_time
+        elif self.queue_mode == "tiered3":
+            has_pending = tiered3_queue_has_pending
+            next_time = tiered3_queue_next_time
         elif self.queue_mode == "flat":
             has_pending = lambda queue: queue.types[0] >= 0
             next_time = device_queue_next_time
@@ -417,8 +460,9 @@ class DeviceEngine:
         }
         return jax.lax.while_loop(cond, body, (state, queue, stats0))
 
-    def run(self, state, queue: DeviceQueue | TieredDeviceQueue, *,
-            max_batches: int = 1 << 30, t_end: float | None = None):
+    def run(self, state,
+            queue: DeviceQueue | TieredDeviceQueue | Tiered3DeviceQueue,
+            *, max_batches: int = 1 << 30, t_end: float | None = None):
         """Run to completion (or ``max_batches`` / horizon ``t_end``).
 
         ``t_end`` overrides the engine default per call without

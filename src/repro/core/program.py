@@ -68,7 +68,7 @@ from repro.core.queue import HostEventQueue
 EMIT_WIDTH = 2 + ARG_WIDTH
 
 _HOST_SCHEDULERS = ("conservative", "speculative", "unbatched")
-_QUEUE_MODES = ("tiered", "flat", "reference")
+_QUEUE_MODES = ("tiered", "tiered3", "flat", "reference")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -385,6 +385,7 @@ class SimProgram:
               queue_mode: str = "tiered",
               capacity: int | None = None,
               front_cap: int | None = None, stage_cap: int | None = None,
+              num_runs: int | None = None,
               state_spec=None, arg_spec=None,
               check_causality: bool = False,
               window_slack: float = float("inf"),
@@ -430,6 +431,7 @@ class SimProgram:
             engine = DeviceEngine.from_program(
                 self, queue_mode=queue_mode, capacity=capacity,
                 front_cap=front_cap, stage_cap=stage_cap,
+                num_runs=num_runs,
             )
             return CompiledSim(self, backend="device", engine=engine,
                                variant=queue_mode)
@@ -439,6 +441,7 @@ class SimProgram:
                 "capacity": capacity is not None,
                 "front_cap": front_cap is not None,
                 "stage_cap": stage_cap is not None,
+                "num_runs": num_runs is not None,
             }
             bad = [k for k, hit in misdirected.items() if hit]
             if bad:

@@ -76,6 +76,33 @@ Two families of operations are provided:
   and the ``size``/``next_seq``/``dropped`` accounting bit-exactly;
   the logical capacity of the whole tiered queue equals the main
   array's capacity (front and staging are structure, not extra room).
+
+* **Log-structured tiered ops** (DESIGN.md §4.4) over
+  :class:`Tiered3DeviceQueue`: the two-tier design's one remaining
+  O(capacity) path — the staging flush's lex merge + ring compaction,
+  which near-full workloads with near-head re-emits hit every few
+  batches — is replaced by a pool of fixed-size **sorted runs**:
+
+  - a staging flush lex-sorts the ring and writes it as one new run
+    (O(stage_cap²) fused bools + one row scatter, capacity-independent);
+
+  - a front refill is a *bounded* k-way merge: the first ``front_cap``
+    remainder elements of every run plus the main head window are
+    lex-sorted by their true ``(time, seq)`` keys and the earliest
+    slots are consumed by advancing per-run offsets — O(num_runs ·
+    front_cap) work, no put-back, no tag bookkeeping (true seqs make
+    the order exact, so the two-tier ``s_evict`` machinery disappears);
+
+  - only when the run pool is exhausted do the runs merge into the
+    main array, and the main ring carries ``num_runs × stage_cap``
+    physical slack slots so that merge is usually a bounded tail
+    append — the O(capacity) rotate+merge compaction fires only when
+    the slack is gone, amortized over an entire pool of staged events
+    and never on the per-batch path.
+
+  Same bit-exact contract and logical-capacity rule as the other
+  families (``capacity`` excludes the slack; front/staging/runs are
+  structure, not room).
 """
 
 from __future__ import annotations
@@ -266,12 +293,14 @@ def device_queue_push(q: DeviceQueue, time, type_id, arg) -> DeviceQueue:
     return jax.lax.cond(have_room, do_push, overflow, q)
 
 
-def device_queue_push_rows(q: DeviceQueue, rows) -> DeviceQueue:
-    """Reference bulk insert: one serial ``device_queue_push`` per row.
+def device_queue_push_rows_serial(q: DeviceQueue, rows) -> DeviceQueue:
+    """Seed bulk insert: one serial ``device_queue_push`` per row.
 
     Row layout is ``(time, type, arg...)``; ``type < 0`` rows are
     skipped.  O(rows × capacity) with a serial dependence chain — kept
-    as the executable specification for :func:`device_queue_fill_rows`.
+    as the executable specification for :func:`device_queue_push_rows`
+    and :func:`device_queue_fill_rows` (differential tests prove both
+    bit-identical to this, the push-rows one including slot placement).
     """
     def body(i, q):
         row = rows[i]
@@ -284,6 +313,56 @@ def device_queue_push_rows(q: DeviceQueue, rows) -> DeviceQueue:
         )
 
     return jax.lax.fori_loop(0, rows.shape[0], body, q)
+
+
+def device_queue_push_rows(q: DeviceQueue, rows) -> DeviceQueue:
+    """Reference bulk insert as ONE scatter pass (layout-independent).
+
+    Bit-identical to :func:`device_queue_push_rows_serial` INCLUDING
+    slot placement: serial pushes fill free slots in ascending slot
+    order, so the row with insert-rank ``k`` lands in the ``k``-th free
+    slot — all destinations are known up front and every column is one
+    ``R``-row scatter instead of ``R`` chained O(capacity) argmin/cond
+    rounds.  Valid row ``r`` gets ``seq = next_seq + vrank(r)`` and is
+    dropped iff ``size + vrank(r) >= capacity`` (``size`` counts ghosts
+    — the serial ``have_room`` check at the moment row ``r`` pushes),
+    with ``size``/``next_seq`` still advancing and ``dropped`` counted.
+    """
+    rows = jnp.asarray(rows, jnp.float32)
+    C = q.capacity
+    t_r = rows[:, 0]
+    ty_r = rows[:, 1].astype(jnp.int32)
+    arg_r = rows[:, 2:]
+
+    valid = ty_r >= 0
+    vrank = _prefix_rank(valid)
+    num_valid = jnp.sum(valid).astype(jnp.int32)
+    insert = valid & (q.size + vrank < C)
+    num_insert = jnp.sum(insert).astype(jnp.int32)
+    seq_r = q.next_seq + vrank
+
+    # k-th free slot: rank the free slots by cumsum, invert by scatter.
+    # `size >= occupancy` guarantees every inserting row finds a free
+    # slot (insert-rank < C - size <= number of free slots).
+    free = q.types < 0
+    free_rank = jnp.cumsum(free).astype(jnp.int32) - 1
+    slot_of_rank = jnp.full((C,), C, jnp.int32).at[
+        jnp.where(free, free_rank, C)
+    ].set(jnp.arange(C, dtype=jnp.int32), mode="drop")
+    irank = _prefix_rank(insert)
+    dest = jnp.where(
+        insert, slot_of_rank[jnp.clip(irank, 0, C - 1)], C
+    )
+
+    return q._replace(
+        times=q.times.at[dest].set(t_r, mode="drop"),
+        types=q.types.at[dest].set(ty_r, mode="drop"),
+        args=q.args.at[dest].set(arg_r, mode="drop"),
+        seqs=q.seqs.at[dest].set(seq_r, mode="drop"),
+        size=q.size + num_valid,
+        next_seq=q.next_seq + num_valid,
+        dropped=q.dropped + (num_valid - num_insert),
+    )
 
 
 def _min_key_slot(q: DeviceQueue):
@@ -657,6 +736,19 @@ class TieredDeviceQueue(NamedTuple):
         return self.s_times.shape[0]
 
 
+def _ring_unroll(col, fill, head, n, offset=0):
+    """Materialize a head-offset ring column's live window at physical
+    ``offset``: one O(P) gather (roll by ``head - offset``) with the
+    dead slots reset to ``fill``.  Shared by every ring compaction /
+    re-centering site — the roll semantics must stay identical."""
+    P = col.shape[0]
+    i_idx = jnp.arange(P, dtype=jnp.int32)
+    rolled = jnp.take(col, (i_idx - offset + head) % P, axis=0)
+    live = (i_idx >= offset) & (i_idx < offset + n)
+    mask = live if col.ndim == 1 else live[:, None]
+    return jnp.where(mask, rolled, fill)
+
+
 def _sentinel_cols(n: int, arg_width: int):
     return (
         jnp.full((n,), jnp.inf, jnp.float32),
@@ -813,18 +905,10 @@ def _flush_stage(q: TieredDeviceQueue) -> TieredDeviceQueue:
         # Rotate the ring back to physical 0 (masking the dead slots
         # before the head and the stale tail), then counting-merge.
         i_idx = jnp.arange(C, dtype=jnp.int32)
-        logical = (i_idx + q.m_head) % C
-        live = i_idx < q.main_n
-
-        def unroll(col, fill):
-            rolled = jnp.take(col, logical, axis=0)
-            mask = live if col.ndim == 1 else live[:, None]
-            return jnp.where(mask, rolled, fill)
-
-        mt = unroll(q.m_times, jnp.inf)
-        my = unroll(q.m_types, -1)
-        ma = unroll(q.m_args, 0.0)
-        ms = unroll(q.m_seqs, 2**31 - 1)
+        mt = _ring_unroll(q.m_times, jnp.inf, q.m_head, q.main_n)
+        my = _ring_unroll(q.m_types, -1, q.m_head, q.main_n)
+        ma = _ring_unroll(q.m_args, 0.0, q.m_head, q.main_n)
+        ms = _ring_unroll(q.m_seqs, 2**31 - 1, q.m_head, q.main_n)
 
         older = jnp.where(
             sev,
@@ -1122,6 +1206,902 @@ def tiered_queue_to_flat(q: TieredDeviceQueue) -> DeviceQueue:
     types = np.concatenate([c[1] for c in cols])
     args = np.concatenate([c[2] for c in cols])
     seqs = np.concatenate([c[3] for c in cols])
+    occ = types >= 0
+    order = np.lexsort((seqs[occ], times[occ]))
+    n = int(occ.sum())
+    C = q.capacity
+    assert n <= C, "tier occupancy exceeded logical capacity"
+    out_t = np.full((C,), np.inf, np.float32)
+    out_y = np.full((C,), -1, np.int32)
+    out_a = np.zeros((C, q.f_args.shape[1]), np.float32)
+    out_s = np.full((C,), 2**31 - 1, np.int32)
+    out_t[:n] = times[occ][order]
+    out_y[:n] = types[occ][order]
+    out_a[:n] = args[occ][order]
+    out_s[:n] = seqs[occ][order]
+    return DeviceQueue(
+        times=jnp.asarray(out_t), types=jnp.asarray(out_y),
+        args=jnp.asarray(out_a), seqs=jnp.asarray(out_s),
+        size=jnp.asarray(q.size), next_seq=jnp.asarray(q.next_seq),
+        dropped=jnp.asarray(q.dropped),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Three-tier queue: front / staging / sorted-run log / main (DESIGN.md §4.4)
+# ---------------------------------------------------------------------------
+
+def _lex_order(ts, sq):
+    """Ascending ``(time, seq)`` permutation for a mid-size vector.
+
+    ONE ``lax.sort`` call with two key operands (lexicographic) and an
+    iota payload, instead of the all-pairs rank of
+    :func:`_small_lex_perm`: the run-merge vectors are a few thousand
+    elements, where m² fused bools stop being free, and XLA:CPU sort
+    custom calls have enough fixed overhead that one variadic call
+    beats two chained argsorts.
+    """
+    idx = jnp.arange(ts.shape[0], dtype=jnp.int32)
+    _, _, perm = jax.lax.sort((ts, sq, idx), num_keys=2)
+    return perm
+
+
+class Tiered3DeviceQueue(NamedTuple):
+    """Pending-event set split into front / staging / run log / main.
+
+    Same front (``f_*``) and staging (``s_*``) tiers as
+    :class:`TieredDeviceQueue`; the differences are the third tier and
+    the slack reserve:
+
+    * ``r_*`` — the **run log**: ``num_runs`` fixed-size sorted runs of
+      ``stage_cap`` slots each.  A staging flush becomes one new run
+      (sorted by true ``(time, seq)``); ``r_off``/``r_len`` bound each
+      run's live remainder (``r_off`` advances as refills consume the
+      run head, so nothing is ever "put back").  The per-run min-time
+      summary is ``r_times[i, r_off[i]]``.
+    * ``m_*`` — the **main** head-offset ring, physically
+      ``capacity + num_runs * stage_cap`` slots: the extra slack lets
+      an exhausted run pool usually merge into main as one bounded
+      tail append; the O(capacity) rotate+merge compaction only fires
+      once the slack itself is gone.
+
+    Because every element's true ``seq`` participates in the run and
+    refill merges, no eviction tags are needed: lexicographic
+    ``(time, seq)`` order is recovered exactly wherever tiers meet.
+    Tier invariant and accounting match :class:`TieredDeviceQueue`:
+    ``max(front) <= min(staging ∪ runs ∪ main)``, and the *logical*
+    capacity excludes the slack — ``capacity`` is what overflow
+    accounting is measured against, bit-identical to the reference.
+    """
+
+    f_times: jnp.ndarray   # f32[front_cap]
+    f_types: jnp.ndarray   # i32[front_cap], -1 = empty
+    f_args: jnp.ndarray    # f32[front_cap, ARG_WIDTH]
+    f_seqs: jnp.ndarray    # i32[front_cap]
+    m_times: jnp.ndarray   # f32[capacity + num_runs*stage_cap]
+    m_types: jnp.ndarray   # i32[...]
+    m_args: jnp.ndarray    # f32[..., ARG_WIDTH]
+    m_seqs: jnp.ndarray    # i32[...]
+    s_times: jnp.ndarray   # f32[stage_cap]
+    s_types: jnp.ndarray   # i32[stage_cap]
+    s_args: jnp.ndarray    # f32[stage_cap, ARG_WIDTH]
+    s_seqs: jnp.ndarray    # i32[stage_cap]
+    r_times: jnp.ndarray   # f32[num_runs, stage_cap]
+    r_types: jnp.ndarray   # i32[num_runs, stage_cap]
+    r_args: jnp.ndarray    # f32[num_runs, stage_cap, ARG_WIDTH]
+    r_seqs: jnp.ndarray    # i32[num_runs, stage_cap]
+    r_off: jnp.ndarray     # i32[num_runs], consumed prefix of each run
+    r_len: jnp.ndarray     # i32[num_runs], written length of each run
+    front_n: jnp.ndarray   # i32 scalar
+    main_n: jnp.ndarray    # i32 scalar
+    m_head: jnp.ndarray    # i32 scalar, first logical main slot (ring)
+    stage_n: jnp.ndarray   # i32 scalar
+    size: jnp.ndarray      # i32 scalar, logical pushes (incl. ghosts)
+    next_seq: jnp.ndarray  # i32 scalar
+    dropped: jnp.ndarray   # i32 scalar
+
+    @property
+    def main_phys(self) -> int:
+        return self.m_times.shape[0]
+
+    @property
+    def capacity(self) -> int:
+        return self.main_phys - self.num_runs * self.stage_cap
+
+    @property
+    def front_cap(self) -> int:
+        return self.f_times.shape[0]
+
+    @property
+    def stage_cap(self) -> int:
+        return self.s_times.shape[0]
+
+    @property
+    def num_runs(self) -> int:
+        return self.r_times.shape[0]
+
+
+def tiered3_queue_init(capacity: int, *, front_cap: int = 256,
+                       stage_cap: int = 256, num_runs: int = 8,
+                       arg_width: int = ARG_WIDTH) -> Tiered3DeviceQueue:
+    front_cap = min(front_cap, capacity)
+    phys = capacity + num_runs * stage_cap
+    ft, fy, fa, fs = _sentinel_cols(front_cap, arg_width)
+    mt, my, ma, ms = _sentinel_cols(phys, arg_width)
+    st, sy, sa, ss = _sentinel_cols(stage_cap, arg_width)
+    z = jnp.int32(0)
+    return Tiered3DeviceQueue(
+        f_times=ft, f_types=fy, f_args=fa, f_seqs=fs,
+        m_times=mt, m_types=my, m_args=ma, m_seqs=ms,
+        s_times=st, s_types=sy, s_args=sa, s_seqs=ss,
+        r_times=jnp.full((num_runs, stage_cap), jnp.inf, jnp.float32),
+        r_types=jnp.full((num_runs, stage_cap), -1, jnp.int32),
+        r_args=jnp.zeros((num_runs, stage_cap, arg_width), jnp.float32),
+        r_seqs=jnp.full((num_runs, stage_cap), 2**31 - 1, jnp.int32),
+        r_off=jnp.zeros((num_runs,), jnp.int32),
+        r_len=jnp.zeros((num_runs,), jnp.int32),
+        front_n=z, main_n=z, m_head=z, stage_n=z, size=z, next_seq=z,
+        dropped=z,
+    )
+
+
+def tiered3_queue_from_host(events, capacity: int, *, front_cap: int = 256,
+                            stage_cap: int = 256, num_runs: int = 8,
+                            arg_width: int = ARG_WIDTH
+                            ) -> Tiered3DeviceQueue:
+    """Host-built seed queue, one device_put (cf. tiered_queue_from_host).
+
+    Earliest ``front_cap`` events seed the front, the rest the main
+    array at head 0; runs and staging start empty.  Reference overflow
+    semantics against the LOGICAL capacity (the slack is structure).
+    """
+    front_cap = min(front_cap, capacity)
+    phys = capacity + num_runs * stage_cap
+    times, types, args, seqs, n, m = _host_sorted_seed(
+        events, capacity, arg_width
+    )
+    nf = min(m, front_cap)
+    ft = np.full((front_cap,), np.inf, np.float32)
+    fy = np.full((front_cap,), -1, np.int32)
+    fa = np.zeros((front_cap, arg_width), np.float32)
+    fs = np.full((front_cap,), 2**31 - 1, np.int32)
+    ft[:nf], fy[:nf], fa[:nf], fs[:nf] = (
+        times[:nf], types[:nf], args[:nf], seqs[:nf]
+    )
+    mt = np.full((phys,), np.inf, np.float32)
+    my = np.full((phys,), -1, np.int32)
+    ma = np.zeros((phys, arg_width), np.float32)
+    ms = np.full((phys,), 2**31 - 1, np.int32)
+    nm = m - nf
+    mt[:nm], my[:nm], ma[:nm], ms[:nm] = (
+        times[nf:], types[nf:], args[nf:], seqs[nf:]
+    )
+    st, sy, sa, ss = (np.full((stage_cap,), np.inf, np.float32),
+                      np.full((stage_cap,), -1, np.int32),
+                      np.zeros((stage_cap, arg_width), np.float32),
+                      np.full((stage_cap,), 2**31 - 1, np.int32))
+    return jax.device_put(Tiered3DeviceQueue(
+        f_times=ft, f_types=fy, f_args=fa, f_seqs=fs,
+        m_times=mt, m_types=my, m_args=ma, m_seqs=ms,
+        s_times=st, s_types=sy, s_args=sa, s_seqs=ss,
+        r_times=np.full((num_runs, stage_cap), np.inf, np.float32),
+        r_types=np.full((num_runs, stage_cap), -1, np.int32),
+        r_args=np.zeros((num_runs, stage_cap, arg_width), np.float32),
+        r_seqs=np.full((num_runs, stage_cap), 2**31 - 1, np.int32),
+        r_off=np.zeros((num_runs,), np.int32),
+        r_len=np.zeros((num_runs,), np.int32),
+        front_n=np.int32(nf), main_n=np.int32(nm), m_head=np.int32(0),
+        stage_n=np.int32(0),
+        size=np.int32(n), next_seq=np.int32(n), dropped=np.int32(n - m),
+    ))
+
+
+def _run_mins(q: Tiered3DeviceQueue):
+    """Per-run min-time summary: the head of each live remainder
+    (``inf`` for consumed/empty runs).  One O(num_runs) gather."""
+    S = q.stage_cap
+    head = jnp.take_along_axis(
+        q.r_times, jnp.clip(q.r_off, 0, S - 1)[:, None], axis=1
+    )[:, 0]
+    return jnp.where(q.r_len > q.r_off, head, jnp.inf)
+
+
+def tiered3_queue_has_pending(q: Tiered3DeviceQueue):
+    """True while any tier holds a real event (O(num_runs))."""
+    return ((q.front_n > 0) | (q.stage_n > 0) | (q.main_n > 0)
+            | jnp.any(q.r_len > q.r_off))
+
+
+def tiered3_queue_occupancy(q: Tiered3DeviceQueue):
+    """Number of real pending events across all four tiers."""
+    return (q.front_n + q.stage_n + q.main_n
+            + jnp.sum(q.r_len - q.r_off).astype(jnp.int32))
+
+
+def tiered3_queue_next_time(q: Tiered3DeviceQueue):
+    """Earliest pending timestamp (``inf`` when empty); O(stage_cap +
+    num_runs) on the drained-front fallback, capacity-independent."""
+    m_min = jnp.where(
+        q.main_n > 0,
+        jnp.take(q.m_times, jnp.clip(q.m_head, 0, q.main_phys - 1)),
+        _INF,
+    )
+    rest = jnp.minimum(
+        jnp.minimum(jnp.min(q.s_times), jnp.min(_run_mins(q))), m_min
+    )
+    return jnp.where(q.front_n > 0, q.f_times[0], rest)
+
+
+def _merge_runs_into_main(q: Tiered3DeviceQueue) -> Tiered3DeviceQueue:
+    """Drain the whole run pool into the main ring (rare path).
+
+    The live remainders of every run are lex-sorted by their true
+    ``(time, seq)`` keys into one block (O(num_runs · stage_cap ·
+    log) — bounded, capacity-independent).  Fast path: when the block's
+    minimum strictly exceeds the main tail and the ring's physical
+    slack still fits it, ONE tail ``dynamic_update_slice`` lands it.
+    Fallback (the only O(capacity) operation in the tiered3 family):
+    rotate the ring back to physical 0 and lex-merge — amortized over
+    an entire pool (``num_runs × stage_cap`` staged events) per firing.
+    Never drops: occupancy <= logical capacity <= physical size.
+    """
+    R, S, P = q.num_runs, q.stage_cap, q.main_phys
+    RL = R * S
+    k_idx = jnp.arange(S, dtype=jnp.int32)[None, :]
+    live = (k_idx >= q.r_off[:, None]) & (k_idx < q.r_len[:, None])
+    bt = jnp.where(live, q.r_times, jnp.inf).reshape(RL)
+    by = jnp.where(live, q.r_types, -1).reshape(RL)
+    ba = jnp.where(live[:, :, None], q.r_args, 0.0).reshape(
+        RL, q.r_args.shape[2])
+    bs = jnp.where(live, q.r_seqs, _I32_MAX).reshape(RL)
+    order = _lex_order(bt, bs)
+    bt, by, ba, bs = bt[order], by[order], ba[order], bs[order]
+    run_live = jnp.sum(live).astype(jnp.int32)
+
+    head = jnp.where(q.main_n > 0, q.m_head, 0)
+    tail = head + q.main_n
+    m_last = jnp.take(q.m_times, jnp.clip(tail - 1, 0, P - 1))
+    can_append = ((q.main_n == 0) | (bt[0] > m_last)) & (tail + RL <= P)
+
+    def append(q):
+        def put(col, bcol):
+            return jax.lax.dynamic_update_slice_in_dim(col, bcol, tail, 0)
+
+        return q._replace(
+            m_times=put(q.m_times, bt),
+            m_types=put(q.m_types, by),
+            m_args=put(q.m_args, ba),
+            m_seqs=put(q.m_seqs, bs),
+            m_head=head,
+        )
+
+    def merge_all(q):
+        ct = jnp.concatenate(
+            [_ring_unroll(q.m_times, jnp.inf, q.m_head, q.main_n), bt])
+        cy = jnp.concatenate(
+            [_ring_unroll(q.m_types, -1, q.m_head, q.main_n), by])
+        ca = jnp.concatenate(
+            [_ring_unroll(q.m_args, 0.0, q.m_head, q.main_n), ba])
+        cs = jnp.concatenate(
+            [_ring_unroll(q.m_seqs, 2**31 - 1, q.m_head, q.main_n), bs])
+        # Real elements <= logical capacity <= P, so truncating the
+        # sorted concat to P drops only sentinels.
+        perm = _lex_order(ct, cs)[:P]
+        return q._replace(
+            m_times=ct[perm], m_types=cy[perm], m_args=ca[perm],
+            m_seqs=cs[perm], m_head=jnp.int32(0),
+        )
+
+    q = jax.lax.cond(can_append, append, merge_all, q)
+    return q._replace(
+        main_n=q.main_n + run_live,
+        r_off=jnp.zeros((R,), jnp.int32),
+        r_len=jnp.zeros((R,), jnp.int32),
+    )
+
+
+def _rotate_main(q: Tiered3DeviceQueue) -> Tiered3DeviceQueue:
+    """Re-center the sorted main ring — one O(P) gather, no sort.
+
+    The live window moves to start at a margin of up to ``2·stage_cap``
+    dead slots, reclaiming BOTH kinds of headroom at once: tail slack
+    for far-future appends and head slack for the bounded near-head
+    merge (which writes at ``m_head - n_pre``).  Head slack otherwise
+    only accrues as refills consume the head — and a front kept full
+    by near-head merges never refills, so the flush must be able to
+    mint its own headroom.  Amortized over ~stage_cap-many flush
+    events per firing.
+    """
+    P = q.main_phys
+    S = q.stage_cap
+    # Generous margin (up to a quarter of the ring): head merges can
+    # consume ~stage_cap headroom per flush, and each rotate is O(P),
+    # so rotating rarely beats rotating tightly.
+    margin = jnp.minimum(jnp.maximum(2 * S, P // 4),
+                         jnp.maximum(P - q.main_n - S, 0))
+    return q._replace(
+        m_times=_ring_unroll(q.m_times, jnp.inf, q.m_head, q.main_n,
+                             margin),
+        m_types=_ring_unroll(q.m_types, -1, q.m_head, q.main_n, margin),
+        m_args=_ring_unroll(q.m_args, 0.0, q.m_head, q.main_n, margin),
+        m_seqs=_ring_unroll(q.m_seqs, 2**31 - 1, q.m_head, q.main_n,
+                            margin),
+        m_head=margin,
+    )
+
+
+def _flush_stage_to_run(q: Tiered3DeviceQueue) -> Tiered3DeviceQueue:
+    """Drain the staging ring by SPLITTING the sorted block three ways.
+
+    The staged block is lex-sorted once (O(stage_cap²) fused bools),
+    then partitioned by where its elements land relative to the main
+    ring — real emit mixes contain both near-head re-emits and
+    far-future events, so a single-destination flush would almost
+    always hit a fallback:
+
+    * **suffix** (times strictly after the main tail): one O(stage_cap)
+      gather + ``dynamic_update_slice`` into the ring's physical
+      slack — the common far-future path.  When the tail would run off
+      the physical end, the sorted ring is first re-centered
+      (:func:`_rotate_main` — one O(P) gather, no sort, amortized
+      over the whole slack).
+    * **prefix** (times strictly before the K-th element past the
+      head): counting-merged with the K+stage_cap head window and
+      written back as ONE block starting at ``m_head - n_pre`` — the
+      already-consumed ring slots are the headroom (re-minted by the
+      same re-centering rotate when they run out).  Beyond the write
+      range the merged sequence is the old window shifted by exactly
+      ``n_pre``, so slot ``head - n_pre + j`` holds element
+      ``head + j - n_pre`` either way: nothing past the window is
+      touched.  All-pairs strict lex compares on true ``(time, seq)``
+      keys — exact, bounded, no sort custom call.  This is the shape
+      that made the two-tier flush an O(capacity) lex merge + ring
+      compaction.
+    * **middle** (neither, or the prefix guard failed): one new sorted
+      run in the log (an O(stage_cap) row write).  When it needs a
+      slot and every run is occupied, the pool first drains into main
+      (:func:`_merge_runs_into_main`), which frees all of them.
+
+    Every leg builds its block with gathers and lands it with one
+    ``dynamic_update_slice`` — XLA:CPU executes those as bulk copies,
+    where equivalent scatters cost ~100× more per row.  Every leg is
+    O(stage_cap·K) worst case — capacity-independent.
+    """
+    S = q.stage_cap
+    P = q.main_phys
+    # Head window: K main elements is how far past the head a "near"
+    # emit may land and still take the bounded merge (wider blocks use
+    # the run log).  A quarter of the stage keeps the all-pairs compare
+    # small while covering the emits-just-past-the-window DES shape.
+    K = max(min(S, 32), S // 4)
+    KS = K + S
+    perm = _small_lex_perm(q.s_times, q.s_seqs)
+    st = q.s_times[perm]
+    sty = q.s_types[perm]
+    sarg = q.s_args[perm]
+    sseq = q.s_seqs[perm]
+    sval = sty >= 0
+    s_total = q.stage_n
+    j_idx = jnp.arange(S, dtype=jnp.int32)
+
+    def sub_block(offset, count):
+        """Sorted sub-range [offset, offset+count) of the staged block
+        as its own S-wide block (sentinels past ``count``)."""
+        idx = jnp.clip(offset + j_idx, 0, S - 1)
+        live = j_idx < count
+        return (
+            jnp.where(live, st[idx], jnp.inf),
+            jnp.where(live, sty[idx], -1),
+            jnp.where(live[:, None], sarg[idx], 0.0),
+            jnp.where(live, sseq[idx], _I32_MAX),
+        )
+
+    # --- suffix: strictly after the main tail -> slack append ---------
+    # main_n <= capacity = P - num_runs*S, so after a rotate there is
+    # ALWAYS tail room for a stage_cap block.
+    head0 = jnp.where(q.main_n > 0, q.m_head, 0)
+    m_last = jnp.take(
+        q.m_times, jnp.clip(head0 + q.main_n - 1, 0, P - 1))
+    after_tail = sval & ((q.main_n == 0) | (st > m_last))
+    n_suf = jnp.sum(after_tail).astype(jnp.int32)
+
+    def append_suffix(q):
+        q = jax.lax.cond(
+            jnp.where(q.main_n > 0, q.m_head, 0) + q.main_n + S > P,
+            _rotate_main, lambda q: q, q,
+        )
+        head1 = jnp.where(q.main_n > 0, q.m_head, 0)
+        tail1 = head1 + q.main_n
+        bt, by, ba, bs = sub_block(s_total - n_suf, n_suf)
+
+        def put(col, bcol):
+            return jax.lax.dynamic_update_slice_in_dim(col, bcol, tail1, 0)
+
+        return q._replace(
+            m_times=put(q.m_times, bt),
+            m_types=put(q.m_types, by),
+            m_args=put(q.m_args, ba),
+            m_seqs=put(q.m_seqs, bs),
+            m_head=head1,
+            main_n=q.main_n + n_suf,
+        )
+
+    q = jax.lax.cond(n_suf > 0, append_suffix, lambda q: q, q)
+
+    # --- prefix: strictly inside the head window -> bounded merge -----
+    # (reads the post-suffix state: with a short main the window can
+    # include just-appended elements; statically elided when the
+    # window cannot even fit the ring — tiny-geometry configs, which
+    # the run log covers)
+    suf_lo = s_total - n_suf
+    n_pre = jnp.int32(0)
+    head = jnp.where(q.main_n > 0, q.m_head, 0)
+    if KS <= P:
+        ext_idx = jnp.clip(head + jnp.arange(KS, dtype=jnp.int32), 0, P - 1)
+        ext_live = jnp.arange(KS) < q.main_n
+        wt = jnp.where(ext_live, q.m_times[ext_idx], jnp.inf)
+        ws = jnp.where(ext_live, q.m_seqs[ext_idx], _I32_MAX)
+        wy = jnp.where(ext_live, q.m_types[ext_idx], -1)
+        wa = jnp.where(ext_live[:, None], q.m_args[ext_idx], 0.0)
+        n_pre_want = jnp.sum(
+            sval & (j_idx < suf_lo) & (st < wt[K])
+        ).astype(jnp.int32)
+        # Without head-side headroom (or a window running off the physical
+        # end), re-center the ring: rotation moves positions, not values,
+        # so the window columns read above stay valid.
+        q = jax.lax.cond(
+            (n_pre_want > 0)
+            & ((head < n_pre_want) | (head - n_pre_want + KS > P)),
+            _rotate_main, lambda q: q, q,
+        )
+        head = jnp.where(q.main_n > 0, q.m_head, 0)
+        # Guard again: degenerate geometries (margin clamped below n_pre)
+        # still fall through to the run log.
+        n_pre = jnp.where(
+            (head >= n_pre_want) & (head - n_pre_want + KS <= P),
+            n_pre_want, 0)
+
+        def head_merge(q):
+            # Counting merge of the prefix (first n_pre sorted entries)
+            # with the sorted window: the B-positions come from all-pairs
+            # strict lex compares (exact on true (time, seq) keys), the
+            # output block from one searchsorted-driven gather per column.
+            is_pre = j_idx < n_pre
+            bt = jnp.where(is_pre, st, jnp.inf)
+            bs = jnp.where(is_pre, sseq, _I32_MAX)
+            w_lt_b = (wt[None, :] < bt[:, None]) | (
+                (wt[None, :] == bt[:, None]) & (ws[None, :] < bs[:, None])
+            )
+            # pos_b ascends (B sorted); invalid rows push past the block.
+            pos_b = jnp.where(
+                is_pre,
+                j_idx + jnp.sum(w_lt_b, axis=1).astype(jnp.int32),
+                KS + S,
+            )
+            i_idx = jnp.arange(KS, dtype=jnp.int32)
+            ins_before = jnp.searchsorted(
+                pos_b, i_idx, side="right").astype(jnp.int32)
+            is_ins = ins_before > jnp.searchsorted(
+                pos_b, i_idx, side="left").astype(jnp.int32)
+            src = jnp.where(
+                is_ins, KS + jnp.clip(ins_before - 1, 0, S - 1),
+                jnp.clip(i_idx - ins_before, 0, KS - 1),
+            )
+            start = head - n_pre
+
+            def merge_put(col, wcol, bcol):
+                merged = jnp.take(jnp.concatenate([wcol, bcol]), src, axis=0)
+                return jax.lax.dynamic_update_slice_in_dim(
+                    col, merged, start, 0)
+
+            return q._replace(
+                m_times=merge_put(q.m_times, wt, st),
+                m_types=merge_put(q.m_types, wy, sty),
+                m_args=merge_put(q.m_args, wa, sarg),
+                m_seqs=merge_put(q.m_seqs, ws, sseq),
+                m_head=start,
+                main_n=q.main_n + n_pre,
+            )
+
+        q = jax.lax.cond(n_pre > 0, head_merge, lambda q: q, q)
+
+    # --- middle: whatever neither leg could place -> one sorted run ---
+    n_mid = s_total - n_suf - n_pre
+
+    def to_run(q):
+        q = jax.lax.cond(
+            jnp.all(q.r_len > q.r_off), _merge_runs_into_main,
+            lambda q: q, q,
+        )
+        slot = jnp.argmax(q.r_off >= q.r_len)  # first free run
+        bt, by, ba, bs = sub_block(n_pre, n_mid)
+        return q._replace(
+            r_times=q.r_times.at[slot].set(bt),
+            r_types=q.r_types.at[slot].set(by),
+            r_args=q.r_args.at[slot].set(ba),
+            r_seqs=q.r_seqs.at[slot].set(bs),
+            r_off=q.r_off.at[slot].set(0),
+            r_len=q.r_len.at[slot].set(n_mid),
+        )
+
+    q = jax.lax.cond(n_mid > 0, to_run, lambda q: q, q)
+
+    empty_t, empty_y, empty_a, empty_s = _sentinel_cols(
+        S, q.s_args.shape[1])
+    return q._replace(
+        s_times=empty_t, s_types=empty_y, s_args=empty_a, s_seqs=empty_s,
+        stage_n=jnp.int32(0),
+    )
+
+
+
+def _runs_intersect_refill(q: Tiered3DeviceQueue):
+    """True iff some run holds an element the next MAIN-ONLY refill
+    would need: the main-only path takes the next
+    ``min(front_cap - front_n, main_n)`` main elements, so a run
+    matters only if its min key could precede the last of those.  A
+    dormant far-future run (e.g. stragglers parked during warmup)
+    then costs nothing: refills keep streaming from main and the run
+    is consulted again only once the clock reaches it.  Strict time
+    comparison — a tie falls back to the exact k-way merge.
+    """
+    take = jnp.minimum(q.front_cap - q.front_n, q.main_n)
+    last_idx = jnp.clip(q.m_head + take - 1, 0, q.main_phys - 1)
+    last_t = jnp.take(q.m_times, last_idx)
+    # Empty main (take == 0) must still drain live runs.
+    return jnp.min(_run_mins(q)) <= jnp.where(take > 0, last_t, jnp.inf)
+
+
+def _refill_front3_windowed(w: int):
+    """Front refill — always bounded, never O(capacity).
+
+    Staging is flushed first (append / head merge / run).  With no run
+    intersecting the take, the refill is the two-tier O(front_cap)
+    main-head gather (:func:`_refill_main_only`); otherwise the
+    bounded k-way merge (:func:`_refill_kway`) with its take capped at
+    the static ``w`` — see there for why small top-ups win.
+    """
+    def refill(q):
+        q = jax.lax.cond(
+            q.stage_n > 0, _flush_stage_to_run, lambda q: q, q)
+        return jax.lax.cond(
+            _runs_intersect_refill(q),
+            lambda q: _refill_kway(q, w), _refill_main_only, q,
+        )
+
+    return refill
+
+
+def _refill_main_only(q: Tiered3DeviceQueue) -> Tiered3DeviceQueue:
+    """Refill with an empty run pool (the common case once far-future
+    flushes append straight to main): every main element sorts after
+    every front element, so the refill is the two-tier O(front_cap)
+    gather — no sort at all.  The main ring just advances ``m_head``.
+    """
+    F = q.front_cap
+    P = q.main_phys
+    take = jnp.minimum(F - q.front_n, q.main_n)
+    i_idx = jnp.arange(F, dtype=jnp.int32)
+    src = jnp.where(
+        i_idx < q.front_n, i_idx,
+        F + jnp.clip(q.m_head + i_idx - q.front_n, 0, P - 1),
+    )
+    fill_ok = i_idx < q.front_n + take
+
+    def refill(fcol, mcol, fill):
+        out = jnp.take(jnp.concatenate([fcol, mcol]), src, axis=0)
+        mask = fill_ok if out.ndim == 1 else fill_ok[:, None]
+        return jnp.where(mask, out, fill)
+
+    main_n = q.main_n - take
+    return q._replace(
+        f_times=refill(q.f_times, q.m_times, jnp.inf),
+        f_types=refill(q.f_types, q.m_types, -1),
+        f_args=refill(q.f_args, q.m_args, 0.0),
+        f_seqs=refill(q.f_seqs, q.m_seqs, 2**31 - 1),
+        front_n=q.front_n + take,
+        main_n=main_n,
+        m_head=jnp.where(main_n > 0, q.m_head + take, 0),
+    )
+
+
+def _refill_kway(q: Tiered3DeviceQueue, w: int | None = None
+                 ) -> Tiered3DeviceQueue:
+    """Refill against a live run pool: the bounded k-way merge.
+
+    The candidate set is the first ``w`` live elements of every run
+    plus the main head window — (num_runs + 1) · w candidates,
+    lex-ordered by their true ``(time, seq)`` keys with the all-pairs
+    rank (fused bools; an XLA:CPU sort custom call would cost more
+    than the whole merge).  The earliest ``min(front_cap - front_n,
+    w)`` fill the front; each source just advances its head offset by
+    the number taken (runs: ``r_off``; main: ``m_head``), so nothing
+    is written back.  Any element outside a candidate window has ``w``
+    same-source elements ahead of it, so it can never be among the
+    earliest ``need <= w`` — the windows lose nothing.
+
+    The engine calls this with a SMALL ``w`` (a few batch windows):
+    topping the front up incrementally keeps N² at a few hundred
+    squared — effectively free — where one full-front refill would
+    need an N that forces a real sort.  O(num_runs · w²) per refill,
+    independent of capacity.
+    """
+    F, R, S, P = q.front_cap, q.num_runs, q.stage_cap, q.main_phys
+    W = F if w is None else min(w, F)
+    N = (R + 1) * W
+
+    widx = q.r_off[:, None] + jnp.arange(W, dtype=jnp.int32)[None, :]
+    rvalid = widx < q.r_len[:, None]
+    wc = jnp.clip(widx, 0, S - 1)
+    ct_r = jnp.where(rvalid, jnp.take_along_axis(q.r_times, wc, axis=1),
+                     jnp.inf)
+    cy_r = jnp.take_along_axis(q.r_types, wc, axis=1)
+    ca_r = jnp.take_along_axis(q.r_args, wc[:, :, None], axis=1)
+    cs_r = jnp.where(rvalid, jnp.take_along_axis(q.r_seqs, wc, axis=1),
+                     _I32_MAX)
+
+    midx = jnp.clip(q.m_head + jnp.arange(W, dtype=jnp.int32), 0, P - 1)
+    mvalid = jnp.arange(W) < q.main_n
+    ct_m = jnp.where(mvalid, q.m_times[midx], jnp.inf)
+    cy_m = q.m_types[midx]
+    ca_m = q.m_args[midx]
+    cs_m = jnp.where(mvalid, q.m_seqs[midx], _I32_MAX)
+
+    ct = jnp.concatenate([ct_r.reshape(R * W), ct_m])
+    cy = jnp.concatenate([cy_r.reshape(R * W), cy_m])
+    ca = jnp.concatenate([ca_r.reshape(R * W, -1), ca_m])
+    cs = jnp.concatenate([cs_r.reshape(R * W), cs_m])
+    src = jnp.concatenate([
+        jnp.repeat(jnp.arange(R, dtype=jnp.int32), W),
+        jnp.full((W,), R, jnp.int32),
+    ])
+    valid = jnp.concatenate([rvalid.reshape(R * W), mvalid])
+
+    order = _small_lex_perm(ct, cs)
+    ct, cy, ca, cs = ct[order], cy[order], ca[order], cs[order]
+    src, valid = src[order], valid[order]
+
+    need = jnp.minimum(F - q.front_n, W)
+    # Valid candidates form a sorted prefix (sentinels are lex-max), so
+    # the take mask is a prefix too — the taken block lands in front
+    # slots [front_n, front_n + taken) already sorted.
+    take = (jnp.arange(N) < need) & valid
+    taken = jnp.sum(take).astype(jnp.int32)
+    counts = jnp.zeros((R + 2,), jnp.int32).at[
+        jnp.where(take, src, R + 1)
+    ].add(1, mode="drop")
+
+    main_taken = counts[R]
+    main_n = q.main_n - main_taken
+    i_idx = jnp.arange(F, dtype=jnp.int32)
+    srcF = jnp.where(
+        i_idx < q.front_n, i_idx,
+        F + jnp.clip(i_idx - q.front_n, 0, N - 1),
+    )
+    fill_ok = i_idx < q.front_n + taken
+
+    def refill(fcol, ccol, fill):
+        out = jnp.take(jnp.concatenate([fcol, ccol]), srcF, axis=0)
+        mask = fill_ok if out.ndim == 1 else fill_ok[:, None]
+        return jnp.where(mask, out, fill)
+
+    return q._replace(
+        f_times=refill(q.f_times, ct, jnp.inf),
+        f_types=refill(q.f_types, cy, -1),
+        f_args=refill(q.f_args, ca, 0.0),
+        f_seqs=refill(q.f_seqs, cs, 2**31 - 1),
+        front_n=q.front_n + taken,
+        r_off=q.r_off + counts[:R],
+        main_n=main_n,
+        m_head=jnp.where(main_n > 0, q.m_head + main_taken, 0),
+    )
+
+
+def tiered3_queue_extract(q: Tiered3DeviceQueue, max_len: int, lookaheads,
+                          t_cap=None):
+    """Window extraction from the front tier (paper Fig 2).
+
+    Identical take rule and output as :func:`tiered_queue_extract`;
+    the drained-front refill is the bounded path of
+    :func:`_refill_front3_windowed` instead of a staging flush into
+    main.
+    Returns ``(q', ts, tys, args, length)``.
+    """
+    if max_len > q.front_cap:
+        raise ValueError(
+            f"max_len {max_len} exceeds front tier capacity {q.front_cap}"
+        )
+    k = max_len
+    F = q.front_cap
+    num_types = lookaheads.shape[0]
+
+    need_refill = (q.front_n < k) & (
+        (q.stage_n > 0) | (q.main_n > 0) | jnp.any(q.r_len > q.r_off)
+    )
+    # Small k-way top-ups (a few windows' worth) keep the live-run
+    # merge in all-pairs territory; the empty-pool path still refills
+    # the whole front in one gather.
+    q = jax.lax.cond(
+        need_refill, _refill_front3_windowed(min(F, 4 * k)),
+        lambda q: q, q,
+    )
+
+    ts_c = q.f_times[:k]
+    tys_c = q.f_types[:k]
+    valid = tys_c >= 0
+    la = lookaheads[jnp.clip(tys_c, 0, num_types - 1)]
+    wins = jnp.where(valid, ts_c + la, jnp.inf)
+    take = window_prefix_mask(ts_c, wins, valid, t_cap)
+    length = jnp.sum(take).astype(jnp.int32)
+
+    ts = jnp.where(take, ts_c, 0.0)
+    tys = jnp.where(take, tys_c, 0)
+    args = jnp.where(take[:, None], q.f_args[:k], 0.0)
+
+    def shift(col, fill):
+        pad = jnp.full((k,) + col.shape[1:], fill, col.dtype)
+        return jax.lax.dynamic_slice_in_dim(
+            jnp.concatenate([col, pad]), length, F
+        )
+
+    q = q._replace(
+        f_times=shift(q.f_times, jnp.inf),
+        f_types=shift(q.f_types, -1),
+        f_args=shift(q.f_args, 0.0),
+        f_seqs=shift(q.f_seqs, 2**31 - 1),
+        front_n=q.front_n - length,
+        size=q.size - length,
+    )
+    return q, ts, tys, args, length
+
+
+def tiered3_queue_fill_rows(q: Tiered3DeviceQueue, rows
+                            ) -> Tiered3DeviceQueue:
+    """Per-batch emit insert touching only the front and staging tiers.
+
+    Same partition and accounting as :func:`tiered_queue_fill_rows`
+    (boundary now spans staging ∪ runs ∪ main; drop rule unchanged:
+    valid row ``r`` is a ghost iff ``size + r >= capacity``), but the
+    pre-flush when staging could overflow writes one sorted run
+    (O(stage_cap), capacity-independent) instead of merging into main
+    — near-full near-head pressure no longer touches an O(capacity)
+    path on any per-batch route.  No eviction tags: runs keep true
+    seqs and every downstream merge is a true ``(time, seq)`` lex sort.
+    """
+    rows = jnp.asarray(rows, jnp.float32)
+    R = rows.shape[0]
+    F = q.front_cap
+    C = q.capacity
+    if R > q.stage_cap:
+        raise ValueError(
+            f"emit block of {R} rows exceeds stage_cap {q.stage_cap}"
+        )
+
+    q = jax.lax.cond(
+        q.stage_n + R > q.stage_cap, _flush_stage_to_run, lambda q: q, q
+    )
+
+    t_r = rows[:, 0]
+    ty_r = rows[:, 1].astype(jnp.int32)
+    arg_r = rows[:, 2:]
+    valid = ty_r >= 0
+    r_idx = jnp.arange(R, dtype=jnp.int32)
+    vrank = _prefix_rank(valid)
+    num_valid = jnp.sum(valid).astype(jnp.int32)
+    insert = valid & (q.size + vrank < C)
+    num_insert = jnp.sum(insert).astype(jnp.int32)
+    seq_r = q.next_seq + vrank
+
+    # Tier boundary: earliest key outside the front (emit seqs exceed
+    # every queued seq, so the partition is on time alone).
+    m_min = jnp.where(
+        q.main_n > 0,
+        jnp.take(q.m_times, jnp.clip(q.m_head, 0, q.main_phys - 1)),
+        jnp.inf,
+    )
+    b_time = jnp.minimum(
+        jnp.minimum(m_min, jnp.min(q.s_times)), jnp.min(_run_mins(q))
+    )
+    to_front = insert & (t_r < b_time)
+    to_stage = insert & ~to_front
+
+    # --- front merge (output F + R wide: overflow becomes eviction) ---
+    FE = F + R
+    perm = _small_lex_perm(
+        jnp.where(to_front, t_r, jnp.inf),
+        jnp.where(to_front, r_idx, _I32_MAX),
+    )
+    rt = jnp.where(to_front, t_r, jnp.inf)[perm]
+    rty = ty_r[perm]
+    rarg = arg_r[perm]
+    rseq = seq_r[perm]
+    rins = to_front[perm]
+
+    older = jnp.minimum(
+        jnp.searchsorted(q.f_times, rt, side="right").astype(jnp.int32),
+        q.front_n,
+    )
+    pos = jnp.where(rins, older + r_idx, FE + R)
+
+    i_idx = jnp.arange(FE, dtype=jnp.int32)
+    ins_before = jnp.searchsorted(pos, i_idx, side="left").astype(jnp.int32)
+    is_ins = (
+        jnp.searchsorted(pos, i_idx, side="right").astype(jnp.int32)
+        > ins_before
+    )
+    src = jnp.where(
+        is_ins, FE + jnp.clip(ins_before, 0, R - 1),
+        jnp.clip(i_idx - ins_before, 0, FE - 1),
+    )
+
+    def fmerge(col, rcol, fill):
+        ext = jnp.concatenate(
+            [col, jnp.full((R,) + col.shape[1:], fill, col.dtype), rcol]
+        )
+        return jnp.take(ext, src, axis=0)
+
+    merged_t = fmerge(q.f_times, rt, jnp.inf)
+    merged_y = fmerge(q.f_types, rty, -1)
+    merged_a = fmerge(q.f_args, rarg, 0.0)
+    merged_s = fmerge(q.f_seqs, rseq, 2**31 - 1)
+
+    n_front = jnp.sum(to_front).astype(jnp.int32)
+    occ_after = q.front_n + n_front
+    evict_cnt = jnp.maximum(occ_after - F, 0)
+    front_n_new = jnp.minimum(occ_after, F)
+
+    # --- staging appends: evicted front tail, then direct rows --------
+    SC = q.stage_cap
+    e_valid = merged_y[F:] >= 0
+    dest_e = jnp.where(e_valid, q.stage_n + r_idx, SC)
+    srank = _prefix_rank(to_stage)
+    dest_s = jnp.where(to_stage, q.stage_n + evict_cnt + srank, SC)
+    n_stage = jnp.sum(to_stage).astype(jnp.int32)
+
+    def stage_put(col, evals, svals):
+        col = col.at[dest_e].set(evals, mode="drop")
+        return col.at[dest_s].set(svals, mode="drop")
+
+    return q._replace(
+        f_times=merged_t[:F], f_types=merged_y[:F],
+        f_args=merged_a[:F], f_seqs=merged_s[:F],
+        s_times=stage_put(q.s_times, merged_t[F:], t_r),
+        s_types=stage_put(q.s_types, merged_y[F:], ty_r),
+        s_args=stage_put(q.s_args, merged_a[F:], arg_r),
+        s_seqs=stage_put(q.s_seqs, merged_s[F:], seq_r),
+        front_n=front_n_new,
+        stage_n=q.stage_n + evict_cnt + n_stage,
+        size=q.size + num_valid,
+        next_seq=q.next_seq + num_valid,
+        dropped=q.dropped + (num_valid - num_insert),
+    )
+
+
+def tiered3_queue_to_flat(q: Tiered3DeviceQueue) -> DeviceQueue:
+    """Canonical flat view of a tiered3 queue (host-side, for tests)."""
+    head, main_n = int(q.m_head), int(q.main_n)
+    off = np.asarray(q.r_off)
+    rlen = np.asarray(q.r_len)
+    parts = []
+    for pre in ("f", "s"):
+        parts.append(tuple(
+            np.asarray(getattr(q, f"{pre}_{name}"))
+            for name in ("times", "types", "args", "seqs")
+        ))
+    mcols = tuple(
+        np.asarray(getattr(q, f"m_{name}"))[head:head + main_n]
+        for name in ("times", "types", "args", "seqs")
+    )
+    parts.append(mcols)
+    for i in range(q.num_runs):
+        parts.append(tuple(
+            np.asarray(getattr(q, f"r_{name}"))[i, off[i]:rlen[i]]
+            for name in ("times", "types", "args", "seqs")
+        ))
+    times = np.concatenate([p[0] for p in parts])
+    types = np.concatenate([p[1] for p in parts])
+    args = np.concatenate([p[2] for p in parts])
+    seqs = np.concatenate([p[3] for p in parts])
     occ = types >= 0
     order = np.lexsort((seqs[occ], times[occ]))
     n = int(occ.sum())

@@ -22,6 +22,14 @@ LazyComposer-style) and selected at runtime by the lookahead window.
 
 Mixed windows (a DECODE run interrupted by an ARRIVE) fall back to
 per-event execution, exactly like a batch whose window closes early.
+
+This engine drives REAL device work from host handlers, so it runs on
+the host scheduler.  Its simulation twin —
+:mod:`repro.serving.scenarios` — expresses the same admission/decode/
+evict alphabet as a pure ``SimProgram``, which compiles to every
+backend; build it with ``queue_mode="tiered3"`` for capacity-planning
+runs with 64k+ pending events (bounded near-full scheduling cost,
+DESIGN.md §4.4).
 """
 
 from __future__ import annotations

@@ -1,0 +1,161 @@
+"""Device-compilable serving scenarios (DESIGN.md §7.2).
+
+:class:`repro.serving.engine.ServingEngine` is the REAL control plane —
+its handlers mutate Python state and drive device work, so it runs on
+the host scheduler only.  This module is its simulation twin: the same
+admission/decode/evict event alphabet expressed as a pure
+:class:`~repro.core.program.SimProgram`, so capacity planning ("what do
+64k queued requests do to this admission policy?") compiles to ANY
+backend — in particular the device engine with
+``queue_mode="tiered3"``, whose bounded near-full scheduling cost is
+what makes the large-pending-set regime affordable (the ROADMAP's 64k+
+serving scenarios).
+
+Event alphabet (ids are registration order):
+
+* ``ARRIVE`` (0) — a request joins the waiting pool and chains the next
+  arrival (counter-hashed inter-arrival gap on the exact f32 grid, so
+  every backend computes bit-identical timestamps); also emits an
+  ``ADMIT`` attempt one ``arrival_lookahead`` later.  Every declared
+  lookahead is a TRUE lower bound on the type's emission delays — the
+  contract the conservative window trusts; a delay below the lookahead
+  would make the windowed backends diverge from sequential execution.
+* ``ADMIT`` (1) — admit the longest-waiting request into the first free
+  slot (counter-hashed decode budget); with no free slot it re-emits
+  itself one decode tick later — the retry loop of
+  ``ServingEngine._h_prefill``.
+* ``TICK``  (2) — one decode step for every active slot on the integer
+  time grid (the pre-scheduled decode cadence); slots reaching zero
+  finish and free themselves (eviction folded into the tick, as the
+  real engine does at the next decode boundary).  Re-emits itself while
+  any work remains or can still arrive.
+
+Everything is branchless jnp, so one definition runs bit-identically on
+host conservative/speculative/unbatched and device
+tiered3/tiered/flat/reference — asserted by
+``tests/test_serving_scenarios.py``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.program import EMIT_WIDTH, Config, SimProgram
+
+__all__ = ["build_admission_program", "initial_state"]
+
+_ARRIVE, _ADMIT, _TICK = 0.0, 1.0, 2.0
+
+
+def _hash_mod(k, salt: int, mod: int):
+    """Deterministic counter hash -> [0, mod), pure i32 (same wraparound
+    on every backend)."""
+    h = (k + jnp.int32(salt)) * jnp.int32(1103515245)
+    return jnp.abs(h) % jnp.int32(mod)
+
+
+def initial_state(num_slots: int):
+    """All-idle serving state: per-slot remaining decode budget plus the
+    admission counters."""
+    return {
+        "slots": jnp.zeros((num_slots,), jnp.int32),
+        "waiting": jnp.int32(0),
+        "arrivals": jnp.int32(0),
+        "admitted": jnp.int32(0),
+        "served": jnp.int32(0),
+        "decoded": jnp.int32(0),
+        "retries": jnp.int32(0),
+    }
+
+
+def build_admission_program(*, num_slots: int = 8, num_requests: int = 64,
+                            max_decode: int = 6,
+                            arrival_lookahead: float = 0.25,
+                            config: Config | None = None) -> SimProgram:
+    """Serving admission/decode/evict control plane as a SimProgram.
+
+    ``num_requests`` bounds the arrival chain (so runs terminate);
+    inter-arrival gaps are ``0.25 * (1 + hash % 8)`` — multiples of the
+    exact f32 grid, the repo's cross-backend parity convention — which
+    pins ``arrival_lookahead`` to exactly 0.25 (validated).  Decode
+    budgets are ``1 + hash % max_decode`` ticks.  Build with
+    ``prog.build(backend="device", queue_mode="tiered3",
+    capacity=...)`` for the large-pending-set regime, or any other
+    backend for bit-identical validation.
+    """
+    cfg = config or Config(max_batch_len=8, capacity=1024, max_emit=2)
+    if cfg.max_emit < 2:
+        raise ValueError("admission program needs Config(max_emit >= 2)")
+    if arrival_lookahead != 0.25:
+        raise ValueError(
+            "arrival_lookahead must be exactly 0.25: it is ARRIVE's "
+            "minimum emission delay AND its declared lookahead, it may "
+            "not exceed the 0.25 minimum inter-arrival gap, and "
+            "off-grid values (not a multiple of 0.25) silently break "
+            "the cross-backend f32 timestamp parity this scenario "
+            "asserts"
+        )
+    prog = SimProgram("serving-admission", config=cfg)
+
+    def _blank():
+        return jnp.full((cfg.max_emit, EMIT_WIDTH), -1.0, jnp.float32)
+
+    @prog.handler("ARRIVE", lookahead=arrival_lookahead, emits=True)
+    def arrive(state, t, arg):
+        k = state["arrivals"]
+        state = dict(state, arrivals=k + 1, waiting=state["waiting"] + 1)
+        gap = 0.25 * (1.0 + _hash_mod(k, 101, 8).astype(jnp.float32))
+        more = (k + 1) < num_requests
+        emits = _blank()
+        emits = emits.at[0, 0].set(gap).at[0, 1].set(
+            jnp.where(more, _ARRIVE, -1.0))
+        emits = emits.at[1, 0].set(arrival_lookahead).at[1, 1].set(_ADMIT)
+        return state, emits
+
+    @prog.handler("ADMIT", lookahead=1.0, emits=True)
+    def admit(state, t, arg):
+        slots = state["slots"]
+        free = slots <= 0
+        any_free = jnp.any(free)
+        have_wait = state["waiting"] > 0
+        do = have_wait & any_free
+        took = do.astype(jnp.int32)
+        slot = jnp.argmax(free)
+        budget = 1 + _hash_mod(state["admitted"], 977, max_decode)
+        slots = jnp.where(do, slots.at[slot].set(budget), slots)
+        retry = have_wait & ~any_free
+        state = dict(
+            state, slots=slots,
+            waiting=state["waiting"] - took,
+            admitted=state["admitted"] + took,
+            retries=state["retries"] + retry.astype(jnp.int32),
+        )
+        emits = _blank()
+        emits = emits.at[0, 0].set(1.0).at[0, 1].set(
+            jnp.where(retry, _ADMIT, -1.0))
+        return state, emits
+
+    @prog.handler("TICK", lookahead=1.0, emits=True)
+    def tick(state, t, arg):
+        slots = state["slots"]
+        active = slots > 0
+        slots = jnp.where(active, slots - 1, slots)
+        finished = active & (slots == 0)
+        state = dict(
+            state, slots=slots,
+            served=state["served"] + jnp.sum(finished).astype(jnp.int32),
+            decoded=state["decoded"] + jnp.sum(active).astype(jnp.int32),
+        )
+        # Keep the cadence alive while anything is active, waiting, or
+        # still to arrive.  A pending ADMIT retry implies waiting > 0,
+        # so this predicate never strands work.
+        more = ((state["arrivals"] < num_requests)
+                | (state["waiting"] > 0) | jnp.any(slots > 0))
+        emits = _blank()
+        emits = emits.at[0, 0].set(1.0).at[0, 1].set(
+            jnp.where(more, _TICK, -1.0))
+        return state, emits
+
+    prog.schedule(0.0, "ARRIVE")
+    prog.schedule(1.0, "TICK")
+    return prog.freeze()

@@ -1,0 +1,498 @@
+"""Differential tests: log-structured tiered3 (front/staging/runs/main)
+device-queue ops vs the seed per-event reference ops.
+
+The tiered3 ops must reproduce the reference ``(time, seq)`` pop order
+BIT-EXACTLY — including timestamp ties, run-pool exhaustion (the merge
+into main, both the slack-append fast path and the rotate+merge
+compaction), bounded k-way refills that consume from several runs at
+once, and overflow ghosts landing across all four tiers.  The
+stationary >=90%-occupancy property test drives exactly the
+near-head/far-future re-emit shape that made the two-tier flush merge
+O(capacity) — the workload the third tier exists for.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import DeviceEngine, EventRegistry, emits_events
+from repro.core.events import ARG_WIDTH
+from repro.core.queue import (
+    device_queue_extract_ref,
+    device_queue_from_host,
+    device_queue_init,
+    device_queue_pop,
+    device_queue_push,
+    device_queue_push_rows_serial,
+    tiered3_queue_extract,
+    tiered3_queue_fill_rows,
+    tiered3_queue_from_host,
+    tiered3_queue_has_pending,
+    tiered3_queue_init,
+    tiered3_queue_occupancy,
+    tiered3_queue_to_flat,
+    tiered_queue_fill_rows,
+    tiered_queue_init,
+    tiered_queue_to_flat,
+)
+
+EMIT_W = 2 + ARG_WIDTH
+
+_fill_t3 = jax.jit(tiered3_queue_fill_rows)
+_fill_t2 = jax.jit(tiered_queue_fill_rows)
+_fill_ref = jax.jit(device_queue_push_rows_serial)
+_extract_t3 = jax.jit(tiered3_queue_extract, static_argnums=1)
+_extract_ref = jax.jit(device_queue_extract_ref, static_argnums=1)
+
+
+def canonical(q):
+    """Layout-independent view: occupied slots sorted by (time, seq)."""
+    times = np.asarray(q.times)
+    types = np.asarray(q.types)
+    args = np.asarray(q.args)
+    seqs = np.asarray(q.seqs)
+    occ = types >= 0
+    order = np.lexsort((seqs[occ], times[occ]))
+    return {
+        "times": times[occ][order],
+        "types": types[occ][order],
+        "args": args[occ][order],
+        "seqs": seqs[occ][order],
+        "size": int(q.size),
+        "next_seq": int(q.next_seq),
+        "dropped": int(q.dropped),
+    }
+
+
+def assert_t3_equals_flat(qt, qf, msg=""):
+    ca, cb = canonical(tiered3_queue_to_flat(qt)), canonical(qf)
+    for field, va in ca.items():
+        np.testing.assert_array_equal(
+            va, cb[field], err_msg=f"{msg}: field {field!r} diverged",
+        )
+
+
+def random_rows(rng, n_rows, *, p_valid=0.7, num_types=3, t_lo=0, t_hi=5):
+    rows = np.zeros((n_rows, EMIT_W), np.float32)
+    rows[:, 1] = -1.0
+    for i in range(n_rows):
+        if rng.random() < p_valid:
+            # small integer times force heavy timestamp ties
+            rows[i, 0] = float(rng.integers(t_lo, t_hi))
+            rows[i, 1] = float(rng.integers(0, num_types))
+            rows[i, 2:] = rng.random(ARG_WIDTH).astype(np.float32)
+    return jnp.asarray(rows)
+
+
+def run_differential(seed, capacity, max_len, front_cap, stage_cap,
+                     num_runs, steps=50, n_rows=4):
+    rng = np.random.default_rng(seed)
+    lookaheads = jnp.asarray(
+        rng.choice([0.0, 0.5, 1.0, np.inf], size=3), jnp.float32
+    )
+    qa = tiered3_queue_init(capacity, front_cap=front_cap,
+                            stage_cap=stage_cap, num_runs=num_runs)
+    qb = device_queue_init(capacity)
+    for step in range(steps):
+        if rng.random() < 0.5:
+            rows = random_rows(rng, n_rows)
+            qa = _fill_t3(qa, rows)
+            qb = _fill_ref(qb, rows)
+        else:
+            qa, tsa, tya, aa, la = _extract_t3(qa, max_len, lookaheads)
+            qb, tsb, tyb, ab, lb = _extract_ref(qb, max_len, lookaheads)
+            msg = f"seed {seed} step {step}"
+            np.testing.assert_array_equal(
+                np.asarray(tsa), np.asarray(tsb), err_msg=msg)
+            np.testing.assert_array_equal(
+                np.asarray(tya), np.asarray(tyb), err_msg=msg)
+            np.testing.assert_array_equal(
+                np.asarray(aa), np.asarray(ab), err_msg=msg)
+            assert int(la) == int(lb), msg
+        assert_t3_equals_flat(qa, qb, msg=f"seed {seed} step {step}")
+        occ = int(tiered3_queue_occupancy(qa))
+        assert occ <= capacity, "tier occupancy exceeded logical capacity"
+        assert bool(tiered3_queue_has_pending(qa)) == (occ > 0)
+
+
+# Tiny tiers + tiny run pools force every rare path: run-pool
+# exhaustion (merge into main: slack append AND rotate compaction),
+# multi-run k-way refills, front eviction through staging into runs.
+# num_runs=1 degenerates to flush-per-pool-slot; front_cap == capacity
+# is the everything-in-front config.
+@pytest.mark.parametrize("front_cap,stage_cap,num_runs", [
+    (6, 4, 1), (4, 5, 2), (5, 7, 3), (24, 24, 2), (8, 40, 1),
+])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_interleaved_stream_differential(seed, front_cap, stage_cap,
+                                         num_runs):
+    run_differential(seed, capacity=24, max_len=4, front_cap=front_cap,
+                     stage_cap=stage_cap, num_runs=num_runs)
+
+
+def test_pop_order_bit_exact_under_ties():
+    """max_len=1 extraction must reproduce device_queue_pop's
+    lexicographic (time, seq) order exactly, including ties."""
+    rng = np.random.default_rng(7)
+    lookaheads = jnp.asarray([0.0, 0.0], jnp.float32)
+    events = [(float(rng.integers(0, 3)), int(rng.integers(0, 2)),
+               np.full((ARG_WIDTH,), float(i), np.float32))
+              for i in range(12)]
+    qa = tiered3_queue_from_host(events, 16, front_cap=4, stage_cap=4,
+                                 num_runs=2)
+    qb = device_queue_init(16)
+    for (t, ty, arg) in events:
+        qb = device_queue_push(qb, t, ty, jnp.asarray(arg))
+    for _ in range(12):
+        qa, ts, tys, args, length = _extract_t3(qa, 1, lookaheads)
+        qb, t, ty, arg = device_queue_pop(qb)
+        assert int(length) == 1
+        assert float(ts[0]) == float(t)
+        assert int(tys[0]) == int(ty)
+        np.testing.assert_array_equal(np.asarray(args[0]), np.asarray(arg))
+    assert int(qa.size) == 0 and int(qb.size) == 0
+    assert not bool(tiered3_queue_has_pending(qa))
+
+
+def test_from_host_matches_flat_from_host():
+    """Tiered3 and flat host-side seed builds agree, incl. overflow."""
+    rng = np.random.default_rng(3)
+    capacity = 6
+    events = []
+    for i in range(9):  # 3 past capacity
+        arg = rng.random(ARG_WIDTH).astype(np.float32)
+        events.append((float(rng.integers(0, 4)),
+                       int(rng.integers(0, 3)), arg))
+    qa = tiered3_queue_from_host(events, capacity, front_cap=2,
+                                 stage_cap=4, num_runs=2)
+    qb = device_queue_from_host(events, capacity)
+    assert_t3_equals_flat(qa, qb, "from_host")
+    assert int(qa.dropped) == 3
+    assert int(tiered3_queue_occupancy(qa)) == capacity
+
+
+def test_overflow_across_tiers_bit_exact():
+    """Emits dropped when front+staging+runs+main are full must match
+    the reference dropped/size/next_seq accounting bit-exactly,
+    including continued ghost growth after saturation."""
+    capacity = 8
+    qa = tiered3_queue_init(capacity, front_cap=4, stage_cap=3, num_runs=2)
+    qb = device_queue_init(capacity)
+    for lo in (0, 3, 6):
+        rows = np.zeros((3, EMIT_W), np.float32)
+        rows[:, 0] = np.arange(lo, lo + 3)
+        rows[:, 1] = 0.0
+        if lo == 6:
+            rows[2, 1] = -1.0  # hole: 8 real events total
+        qa = _fill_t3(qa, jnp.asarray(rows))
+        qb = _fill_ref(qb, jnp.asarray(rows))
+    assert_t3_equals_flat(qa, qb, "exactly full")
+    assert int(tiered3_queue_occupancy(qa)) == capacity
+    assert int(qa.dropped) == 0
+
+    over = np.zeros((3, EMIT_W), np.float32)
+    over[:, 0] = [100.0, 0.5, 102.0]   # 0.5 would land in the FRONT
+    over[:, 1] = [1.0, 1.0, -1.0]
+    qa = _fill_t3(qa, jnp.asarray(over))
+    qb = _fill_ref(qb, jnp.asarray(over))
+    assert_t3_equals_flat(qa, qb, "overflow")
+    assert int(qa.dropped) == 2
+    assert int(qa.size) == capacity + 2
+    assert int(qa.next_seq) == capacity + 2
+    assert int(tiered3_queue_occupancy(qa)) == capacity
+
+    lookaheads = jnp.asarray([np.inf, np.inf], jnp.float32)
+    for _ in range(4):
+        qa, _, _, _, la = _extract_t3(qa, 4, lookaheads)
+        qb, _, _, _, lb = _extract_ref(qb, 4, lookaheads)
+        assert int(la) == int(lb)
+        assert_t3_equals_flat(qa, qb, "drain")
+    assert not bool(tiered3_queue_has_pending(qa))
+    assert int(qa.size) == 2  # the ghosts remain in size, as reference
+
+
+def test_run_pool_exhaustion_merges_into_main():
+    """Far-future emit pressure with a tiny run pool must force the
+    merge-into-main path (append AND compaction legs) while staying
+    bit-exact, and the runs must all be freed afterwards."""
+    qa = tiered3_queue_init(32, front_cap=4, stage_cap=3, num_runs=2)
+    qb = device_queue_init(32)
+    la = jnp.asarray([1.0], jnp.float32)
+    t = 0.0
+    for step in range(24):
+        # mostly far-future appends, occasional near-head (compaction leg)
+        near = step % 5 == 4
+        base = t + (0.5 if near else 50.0)
+        rows = np.zeros((3, EMIT_W), np.float32)
+        rows[:, 0] = [base, base + 0.5, base + 1.0]
+        rows[:, 1] = 0.0
+        qa = _fill_t3(qa, jnp.asarray(rows))
+        qb = _fill_ref(qb, jnp.asarray(rows))
+        qa, tsa, _, _, lna = _extract_t3(qa, 3, la)
+        qb, tsb, _, _, lnb = _extract_ref(qb, 3, la)
+        np.testing.assert_array_equal(np.asarray(tsa), np.asarray(tsb))
+        assert int(lna) == int(lnb)
+        if int(lna):
+            t = float(np.asarray(tsa)[int(lna) - 1])
+        assert_t3_equals_flat(qa, qb, f"pool step {step}")
+    # the stream above overflows the 2-run pool many times over
+    assert int(qa.size) >= 0
+
+
+# ---------------------------------------------------------------------------
+# Satellite regression: overflow DURING a staging flush (ghost rows
+# landing in the same fill_rows call that triggers the pre-flush) must
+# not double- or under-count dropped/size/next_seq — pinned for both
+# the two-tier and tiered3 queues against the serial reference.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("tiered_kind", ["tiered", "tiered3"])
+@pytest.mark.parametrize("hole_in_block", [False, True])
+def test_overflow_during_flush_accounting(tiered_kind, hole_in_block):
+    capacity, F, S = 8, 3, 3
+    if tiered_kind == "tiered":
+        qa = tiered_queue_init(capacity, front_cap=F, stage_cap=S)
+        fill, to_flat = _fill_t2, tiered_queue_to_flat
+    else:
+        qa = tiered3_queue_init(capacity, front_cap=F, stage_cap=S,
+                                num_runs=2)
+        fill, to_flat = _fill_t3, tiered3_queue_to_flat
+    qb = device_queue_init(capacity)
+
+    def both(spec):
+        nonlocal qa, qb
+        rows = np.zeros((len(spec), EMIT_W), np.float32)
+        rows[:, 1] = -1.0
+        for i, (t, ty) in enumerate(spec):
+            rows[i, 0], rows[i, 1] = t, ty
+        qa = fill(qa, jnp.asarray(rows))
+        qb = _fill_ref(qb, jnp.asarray(rows))
+
+    # fill to 7 of 8, spread across tiers
+    both([(10.0, 0), (20.0, 0), (30.0, 0)])
+    both([(1.0, 0), (2.0, 0), (40.0, 0)])
+    # near-head: front merge evicts the tail into staging (stage_n > 0,
+    # so the NEXT 3-row block must pre-flush: stage_n + 3 > stage_cap 3)
+    both([(0.5, 0)])
+    # trigger block: pre-flush fires, then the valid rows arrive with
+    # only 1 logical slot left -> the rest are ghosts landing mid-flush
+    spec = [(0.25, 0), (999.0, 0), (1.5, 0)]
+    if hole_in_block:
+        spec[1] = (888.0, -1)   # ν-row must not advance any counter
+    both(spec)
+    ghosts = 1 if hole_in_block else 2
+
+    ca = canonical(to_flat(qa))
+    cb = canonical(qb)
+    for field, va in ca.items():
+        np.testing.assert_array_equal(
+            va, cb[field],
+            err_msg=f"{tiered_kind}: field {field!r} diverged")
+    assert ca["dropped"] == ghosts
+    assert ca["size"] == capacity + ghosts
+    assert ca["next_seq"] == capacity + ghosts
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis properties
+# ---------------------------------------------------------------------------
+
+@given(
+    seed=st.integers(0, 2**16),
+    front_cap=st.integers(4, 12),
+    stage_cap=st.integers(4, 12),
+    num_runs=st.integers(1, 4),
+    capacity=st.sampled_from([8, 16, 24]),
+)
+@settings(max_examples=20, deadline=None)
+def test_property_random_streams(seed, front_cap, stage_cap, num_runs,
+                                 capacity):
+    """For ANY tier geometry (incl. degenerate single-run pools) and
+    random event stream, tiered3 reproduces the reference pop order and
+    counters bit-exactly."""
+    run_differential(seed, capacity=capacity, max_len=4,
+                     front_cap=front_cap, stage_cap=stage_cap,
+                     num_runs=num_runs, steps=24)
+
+
+def _run_near_full_churn(seed, num_runs, near_period):
+    """The flush-merge trigger shape: the queue held at >=90%
+    stationary occupancy (every extract matched by an equal-size
+    re-emit block) with re-emits alternating between near-head landings
+    (front merges + evictions) and far-future landings
+    (staging/run/main pressure) must stay bit-exact against the
+    reference spec at every step."""
+    rng = np.random.default_rng(seed)
+    capacity, max_len = 40, 4
+    qa = tiered3_queue_init(capacity, front_cap=6, stage_cap=5,
+                            num_runs=num_runs)
+    qb = device_queue_init(capacity)
+    la = jnp.asarray([2.0], jnp.float32)
+    seed_n = int(capacity * 0.92)
+    # seed in blocks (keeps every tier populated, unlike from_host)
+    t = 0.0
+    n = 0
+    while n < seed_n:
+        k = min(4, seed_n - n)
+        rows = np.zeros((4, EMIT_W), np.float32)
+        rows[:, 1] = -1.0
+        rows[:k, 0] = t + np.arange(k, dtype=np.float32) * 0.5
+        rows[:k, 1] = 0.0
+        qa = _fill_t3(qa, jnp.asarray(rows))
+        qb = _fill_ref(qb, jnp.asarray(rows))
+        t += 2.0
+        n += k
+    occ0 = int(tiered3_queue_occupancy(qa))
+    assert occ0 >= int(capacity * 0.9)
+    clock = 0.0
+    for step in range(30):
+        qa, tsa, _, _, lna = _extract_t3(qa, max_len, la)
+        qb, tsb, _, _, lnb = _extract_ref(qb, max_len, la)
+        np.testing.assert_array_equal(np.asarray(tsa), np.asarray(tsb),
+                                      err_msg=f"step {step}")
+        assert int(lna) == int(lnb)
+        if int(lna):
+            clock = float(np.asarray(tsa)[int(lna) - 1])
+        # stationary re-emit: one row per extracted event, alternating
+        # near-head / far-future by stripe
+        near = (step // near_period) % 2 == 0
+        rows = np.zeros((max_len, EMIT_W), np.float32)
+        rows[:, 1] = -1.0
+        k = int(lna)
+        for i in range(k):
+            delta = (0.5 + 0.5 * float(rng.integers(0, 3)) if near
+                     else 1e5 + float(rng.integers(0, 9)))
+            rows[i, 0] = clock + delta
+            rows[i, 1] = 0.0
+        qa = _fill_t3(qa, jnp.asarray(rows))
+        qb = _fill_ref(qb, jnp.asarray(rows))
+        assert_t3_equals_flat(qa, qb, f"churn step {step}")
+    # occupancy really was stationary (re-emits replaced extractions)
+    assert int(tiered3_queue_occupancy(qa)) == occ0
+
+
+@pytest.mark.parametrize("seed,num_runs,near_period", [
+    (0, 1, 2), (1, 2, 3), (2, 3, 2),
+])
+def test_near_full_churn_fixed_cases(seed, num_runs, near_period):
+    """Bare-env coverage of the near-full churn shape (the hypothesis
+    property below widens the same driver when available)."""
+    _run_near_full_churn(seed, num_runs, near_period)
+
+
+@given(
+    seed=st.integers(0, 2**16),
+    num_runs=st.integers(1, 3),
+    near_period=st.integers(2, 4),
+)
+@settings(max_examples=10, deadline=None)
+def test_property_near_full_churn(seed, num_runs, near_period):
+    _run_near_full_churn(seed, num_runs, near_period)
+
+
+# ---------------------------------------------------------------------------
+# Engine level
+# ---------------------------------------------------------------------------
+
+def _order_sensitive_registry():
+    reg = EventRegistry()
+
+    @emits_events
+    def ping(state, t, arg):
+        emit = jnp.full((1, EMIT_W), -1.0, jnp.float32)
+        emit = jnp.where(
+            t < 6.0,
+            emit.at[0, 0].set(t + 1.0).at[0, 1].set(1.0),
+            emit,
+        )
+        return state * 7 + (t.astype(jnp.int32) * 2 + 1), emit
+
+    def pong(state, t, arg):
+        return state * 7 + (t.astype(jnp.int32) * 2 + 2)
+
+    reg.register("Ping", ping, lookahead=1.0)
+    reg.register("Pong", pong, lookahead=1.0)
+    return reg.freeze()
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_engine_four_queue_modes_agree(seed):
+    """Full DeviceEngine runs under tiered3 / tiered / flat / reference
+    queues give identical states, stats, and final queue contents."""
+    rng = np.random.default_rng(seed)
+    events = [(float(t), int(rng.integers(0, 2)), None)
+              for t in range(int(rng.integers(4, 10)))]
+    results = {}
+    for mode in ("tiered3", "tiered", "flat", "reference"):
+        kw = {}
+        if mode == "tiered":
+            kw = {"front_cap": 4, "stage_cap": 3}
+        elif mode == "tiered3":
+            kw = {"front_cap": 4, "stage_cap": 3, "num_runs": 2}
+        reg = _order_sensitive_registry()
+        eng = DeviceEngine(reg, max_batch_len=3, capacity=32, max_emit=1,
+                           queue_mode=mode, **kw)
+        q = eng.initial_queue(events)
+        s, q, stats = eng.run(jnp.int32(1), q, max_batches=64)
+        results[mode] = (s, q, stats)
+    s_t, q_t, st_t = results["tiered3"]
+    for mode in ("tiered", "flat", "reference"):
+        s_o, q_o, st_o = results[mode]
+        assert int(s_t) == int(s_o), mode
+        ca = canonical(tiered3_queue_to_flat(q_t))
+        qf = q_o if mode in ("flat", "reference") \
+            else tiered_queue_to_flat(q_o)
+        cb = canonical(qf)
+        for field, va in ca.items():
+            np.testing.assert_array_equal(
+                va, cb[field], err_msg=f"vs {mode}: {field}")
+        for k in ("batches", "events", "dropped"):
+            assert int(st_t[k]) == int(st_o[k]), (mode, k)
+        assert float(st_t["time"]) == float(st_o["time"]), mode
+
+
+def test_engine_overflow_cascade_across_tiers():
+    """A 2^k spawning cascade over a tiny tiered3 queue must overflow
+    with the same dropped/size/next_seq as the flat and reference
+    engines, and the run must terminate (size counts ghosts)."""
+    def make_reg():
+        reg = EventRegistry()
+
+        @emits_events
+        def spawner(state, t, arg):
+            emit = jnp.zeros((2, EMIT_W), jnp.float32)
+            emit = emit.at[:, 0].set(t + 1.0).at[:, 1].set(0.0)
+            return state + 1, emit
+
+        reg.register("S", spawner, lookahead=1.0)
+        return reg.freeze()
+
+    outcomes = {}
+    for mode in ("tiered3", "flat", "reference"):
+        kw = {"front_cap": 2, "stage_cap": 5, "num_runs": 2} \
+            if mode == "tiered3" else {}
+        eng = DeviceEngine(make_reg(), max_batch_len=2, capacity=4,
+                           max_emit=2, queue_mode=mode, **kw)
+        q = eng.initial_queue([(0.0, 0, None)])
+        s, q, stats = eng.run(jnp.int32(0), q, max_batches=8)
+        outcomes[mode] = (int(s), int(stats["dropped"]), int(q.size),
+                          int(q.next_seq))
+    assert outcomes["tiered3"] == outcomes["flat"] == outcomes["reference"]
+    assert outcomes["tiered3"][1] > 0  # it really overflowed
+
+
+def test_engine_refill_aware_loop_termination():
+    """With a front tier far smaller than the pending set (and events
+    spread across runs and main), the engine must keep refilling and
+    execute every event."""
+    reg = EventRegistry()
+    reg.register("N", lambda s, t, a: s + 1, lookahead=np.inf)
+    eng = DeviceEngine(reg, max_batch_len=4, capacity=64, front_cap=4,
+                       stage_cap=4, num_runs=2, queue_mode="tiered3")
+    events = [(float(t), 0, None) for t in range(50)]
+    s, q, stats = eng.run(jnp.int32(0), eng.initial_queue(events))
+    assert int(s) == 50
+    assert int(stats["events"]) == 50
+    assert int(q.size) == 0

@@ -346,3 +346,90 @@ def test_entity_handler_rejects_emitting_types():
     reg.register("E", e, lookahead=1.0)
     with pytest.raises(ValueError, match="must not emit"):
         DeviceEngine(reg, entity_handlers={0: lambda s, t, a: s})
+
+
+# ---------------------------------------------------------------------------
+# Satellite regression: device_queue_push_rows is ONE scatter pass that
+# must stay bit-identical to the serial seed spec INCLUDING slot
+# placement (serial pushes fill free slots in ascending order), over
+# full-queue and tie-heavy row batches.
+# ---------------------------------------------------------------------------
+
+def assert_layout_identical(qa, qb, msg=""):
+    """Stronger than canonical(): every field equal slot-for-slot."""
+    for name in qa._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(qa, name)), np.asarray(getattr(qb, name)),
+            err_msg=f"{msg}: field {name!r} diverged",
+        )
+
+
+def _tie_rows(times, types):
+    rows = np.zeros((len(times), EMIT_W), np.float32)
+    rows[:, 0] = times
+    rows[:, 1] = types
+    for i in range(len(times)):
+        rows[i, 2:] = i + 1
+    return jnp.asarray(rows)
+
+
+def test_push_rows_bulk_matches_serial_full_queue_and_ties():
+    from repro.core.queue import device_queue_push_rows_serial
+
+    fill_b = jax.jit(device_queue_push_rows)
+    fill_s = jax.jit(device_queue_push_rows_serial)
+    ex = jax.jit(device_queue_extract_ref, static_argnums=1)
+    la = jnp.asarray([1.0, 1.0, 1.0], jnp.float32)
+
+    qa, qb = device_queue_init(8), device_queue_init(8)
+    # tie-heavy: every row same timestamp (order must fall back to seq)
+    blk = _tie_rows([3.0, 3.0, 3.0, 3.0], [0, 1, 2, 0])
+    qa, qb = fill_b(qa, blk), fill_s(qb, blk)
+    assert_layout_identical(qa, qb, "tie block")
+    # fill EXACTLY to capacity with a hole in the middle
+    blk = _tie_rows([1.0, 2.0, 1.0, 2.0], [1, -1, 0, 2])
+    qa, qb = fill_b(qa, blk), fill_s(qb, blk)
+    blk = _tie_rows([0.5, 0.5], [2, 2])
+    qa, qb = fill_b(qa, blk), fill_s(qb, blk)
+    # 9 logical pushes into capacity 8: one ghost, all slots occupied
+    assert int(qa.size) == 9 and int(qa.dropped) == 1
+    assert int(jnp.sum(qa.types >= 0)) == 8
+    assert_layout_identical(qa, qb, "exactly full")
+    # overflowing block on the full queue: all ghosts
+    blk = _tie_rows([9.0, 9.0, 9.0], [0, 0, 0])
+    qa, qb = fill_b(qa, blk), fill_s(qb, blk)
+    assert_layout_identical(qa, qb, "ghost block")
+    assert int(qa.dropped) == 4
+    # pop a couple (leaves interior holes), then refill over the holes —
+    # the bulk path must pick the same first-free slots as serial pushes
+    qa, *outa = ex(qa, 3, la)
+    qb, *outb = ex(qb, 3, la)
+    for x, y in zip(outa, outb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    blk = _tie_rows([4.0, 4.0], [1, 1])
+    qa, qb = fill_b(qa, blk), fill_s(qb, blk)
+    assert_layout_identical(qa, qb, "refill over holes")
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_push_rows_bulk_matches_serial_random_streams(seed):
+    from repro.core.queue import device_queue_push_rows_serial
+
+    fill_b = jax.jit(device_queue_push_rows)
+    fill_s = jax.jit(device_queue_push_rows_serial)
+    ex = jax.jit(device_queue_extract_ref, static_argnums=1)
+    rng = np.random.default_rng(seed)
+    la = jnp.asarray(rng.choice([0.0, 1.0, np.inf], size=3), jnp.float32)
+    qa, qb = device_queue_init(12), device_queue_init(12)
+    for step in range(40):
+        if rng.random() < 0.6:
+            rows = random_rows(rng, 4)
+            qa, qb = fill_b(qa, rows), fill_s(qb, rows)
+        else:
+            qa, *outa = ex(qa, 3, la)
+            qb, *outb = ex(qb, 3, la)
+            for x, y in zip(outa, outb):
+                np.testing.assert_array_equal(
+                    np.asarray(x), np.asarray(y),
+                    err_msg=f"seed {seed} step {step}")
+        assert_layout_identical(qa, qb, f"seed {seed} step {step}")
