@@ -38,6 +38,14 @@ Two measurements:
   against the recorded baseline, failing (exit 1) on a >R× regression
   — the CI perf gate.
 
+* ``shards_sweep`` (``--shards-only``) — the sharded engine
+  (DESIGN.md §5.1) against the bit-identical single tiered3 queue on
+  the 92%-occupancy ROUTED churn (re-emits hop entities, so a constant
+  fraction crosses shard boundaries): per-super-step cost for shards
+  ∈ {1, 2, 4} at each capacity, interleaved A/B rounds.  Since every
+  super-step executes exactly the single-queue window, the recorded
+  ratio IS the merge/exchange overhead of the sharded machinery.
+
 Whole-run timings are median-of-N (``--repeats``, default 5) with the
 raw samples recorded next to every median: single-shot numbers on
 shared CPU runners are ±30% noisy, which is exactly the band a
@@ -63,7 +71,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import poc
-from repro.core import DeviceEngine, EventRegistry, Simulator, emits_events
+from repro.core import (
+    DeviceEngine,
+    EventRegistry,
+    ShardedDeviceEngine,
+    Simulator,
+    emits_events,
+)
 from repro.core.events import ARG_WIDTH
 from repro.core.queue import (
     device_queue_extract,
@@ -488,6 +502,112 @@ def near_full(quick: bool = False, repeats: int = 5, sweep: bool = True,
     }
 
 
+def _routed_churn_registry(near_delay: float, num_entities: int):
+    """The near-full churn shape WITH entity routing: each re-emit
+    targets the next entity (mod ``num_entities``), so under the
+    sharded engine a constant fraction of emissions cross shard
+    boundaries and exercise the exchange merge, while the single-queue
+    engines see the identical event stream (they ignore ``arg[0]``)."""
+    reg = EventRegistry()
+
+    @emits_events
+    def churn(state, t, arg):
+        far = jnp.floor(t / 16.0) % 2.0 == 0.0
+        delay = jnp.where(far, jnp.float32(1e6), jnp.float32(near_delay))
+        emit = jnp.zeros((1, 2 + ARG_WIDTH), jnp.float32)
+        emit = emit.at[0, 0].set(t + delay).at[0, 1].set(0.0)
+        emit = emit.at[0, 2].set(
+            jnp.mod(arg[0] + 1.0, float(num_entities)))
+        return state + 1, emit
+
+    reg.register("Churn", churn, lookahead=1e6)
+    return reg.freeze()
+
+
+def shards_sweep(quick: bool = False, repeats: int = 5):
+    """`--shards`: the sharded engine vs the single tiered3 queue.
+
+    The 92%-occupancy routed churn (near-head/far-future re-emits, one
+    event per entity hop) runs on shards ∈ {1, 2, 4} at each capacity
+    — shards=1 is the plain ``DeviceEngine(queue_mode="tiered3")``
+    baseline the sharded runs are bit-identical to.  Interleaved A/B
+    rounds (``_time_engines_interleaved``), so host-load drift hits
+    every engine equally.  What this records is the COST of the
+    lookahead-synchronized merge/exchange machinery per super-step
+    (each super-step executes exactly the single-queue window, so
+    per-batch numbers are directly comparable); per-shard queue work
+    stays bounded, so the overhead ratio should stay flat in capacity.
+    """
+    max_len = 16
+    num_entities = 64
+    max_batches = 128 if quick else 512
+    occupancy = 0.92
+    caps = [1024] if quick else [4096, 65536]
+    shard_counts = (1, 2, 4)
+
+    def engine(n_shards, cap):
+        reg = _routed_churn_registry(17.0, num_entities)
+        kw = dict(max_batch_len=max_len, capacity=cap, max_emit=1)
+        if n_shards == 1:
+            return DeviceEngine(reg, queue_mode="tiered3", **kw)
+        return ShardedDeviceEngine(reg, shards=n_shards, **kw)
+
+    def seeded(cap):
+        return [(float(t), 0,
+                 np.asarray([t % num_entities, 0, 0, 0], np.float32))
+                for t in range(int(cap * occupancy))]
+
+    rows = {}
+    for cap in caps:
+        timed = _time_engines_interleaved(
+            {f"shards={n}": (engine(n, cap), seeded(cap))
+             for n in shard_counts},
+            max_batches, repeats)
+        rows[str(cap)] = {
+            label: {"per_batch_us": t[0], "per_batch_samples_us": t[1]}
+            for label, t in timed.items()
+        }
+
+    def ratio(cap, n):
+        row = rows.get(str(cap))
+        if not row:
+            return None
+        return (row[f"shards={n}"]["per_batch_us"]
+                / row["shards=1"]["per_batch_us"])
+
+    big = caps[-1]
+    return {
+        "description": "routed near-full churn (92% occupancy, "
+                       "cross-entity re-emits); sharded engine vs the "
+                       "bit-identical single tiered3 queue, interleaved "
+                       "rounds",
+        "max_batch_len": max_len,
+        "max_emit": 1,
+        "num_entities": num_entities,
+        "batches_timed": max_batches,
+        "repeats": repeats,
+        "occupancy_fraction": occupancy,
+        "capacities": rows,
+        f"shards2_over_single_at_{big}": ratio(big, 2),
+        f"shards4_over_single_at_{big}": ratio(big, 4),
+    }
+
+
+def _print_shards(sh):
+    for cap, row in sh["capacities"].items():
+        parts = " ".join(
+            f"{label}={vals['per_batch_us']:.1f}us"
+            for label, vals in row.items())
+        print(f"  shards sweep cap={cap:>6}: {parts}")
+
+
+def _merge_shards_into_json(sh):
+    payload = json.loads(JSON_PATH.read_text()) if JSON_PATH.exists() \
+        else {}
+    payload.setdefault("scheduling_overhead", {})["shards_sweep"] = sh
+    JSON_PATH.write_text(json.dumps(payload, indent=2) + "\n")
+
+
 def _merge_near_full_into_json(nf):
     """Refresh only the near_full section, keeping the recorded
     anchor/sweep baselines intact."""
@@ -580,6 +700,7 @@ def _check_near_full_baseline(nf, max_ratio: float) -> int:
 def main(quick: bool = False, out: str | None = None, repeats: int = 5):
     sched = scheduling_overhead(quick=quick, repeats=repeats)
     sched["near_full"] = near_full(quick=quick, repeats=repeats)
+    sched["shards_sweep"] = shards_sweep(quick=quick, repeats=repeats)
     r = run(quick=quick)
     payload = {"host_vs_device": r, "scheduling_overhead": sched}
     if out:
@@ -614,6 +735,7 @@ def main(quick: bool = False, out: str | None = None, repeats: int = 5):
         print(f"capacity-independence: insert 16k/1k tiered={ratio:.2f}x "
               f"tiered3={r3:.2f}x")
     _print_near_full(sched["near_full"])
+    _print_shards(sched["shards_sweep"])
     if not quick:
         print(f"wrote {JSON_PATH}")
     r = dict(r)
@@ -629,6 +751,10 @@ if __name__ == "__main__":
     ap.add_argument("--near-full-only", action="store_true",
                     help="run just the near-full stress and merge it "
                          "into the recorded JSON baseline")
+    ap.add_argument("--shards-only", action="store_true",
+                    help="run just the sharded-engine sweep (shards "
+                         "1/2/4, interleaved rounds) and merge it into "
+                         "the recorded JSON baseline")
     ap.add_argument("--repeats", type=int, default=5,
                     help="whole-run timing samples per measurement; the "
                          "recorded value is the median (raw samples are "
@@ -642,7 +768,18 @@ if __name__ == "__main__":
     ap.add_argument("--out", default=None,
                     help="also write results to this path (CI artifact)")
     args = ap.parse_args()
-    if args.near_full_only:
+    if args.shards_only:
+        sh = shards_sweep(quick=args.quick, repeats=args.repeats)
+        _print_shards(sh)
+        if args.out:
+            Path(args.out).write_text(json.dumps({"shards_sweep": sh},
+                                                 indent=2) + "\n")
+        if args.quick:
+            print("quick mode: not merging into", JSON_PATH.name)
+        else:
+            _merge_shards_into_json(sh)
+            print("merged shards_sweep into", JSON_PATH.name)
+    elif args.near_full_only:
         # The gate reads only the anchor — skip the capacity sweep.
         nf = near_full(quick=args.quick, repeats=args.repeats,
                        sweep=args.check_baseline is None,

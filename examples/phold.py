@@ -7,14 +7,21 @@ with a pseudo-random delay.  It stresses the part the PoC model leaves
 out — a hot emit/insert path with data-dependent routing.
 
 The model is defined ONCE on a :class:`repro.api.SimProgram` and then
-compiled to all six runtimes (host conservative / speculative /
-unbatched; device tiered / flat / reference queues).  Every run must
+compiled to every runtime (host conservative / speculative /
+unbatched; device tiered3 / tiered / flat / reference queues; add
+``--shards N`` for the sharded engine).  Every run must
 produce the same final state bit-for-bit, including the
 order-sensitive ``checksum`` — the randomness is a counter-based hash
 of ``(time, lp)`` and every delay is a multiple of 0.5, so f32 device
 arithmetic and the host heap agree exactly.
 
     PYTHONPATH=src python examples/phold.py [--lps 8] [--t-stop 40] [--tiny]
+                                            [--shards N]
+
+``--shards N`` adds the sharded device engine (N per-shard tiered3
+queues under the lookahead-synchronized super-step, DESIGN.md §5.1) to
+the matrix — LPs route to shards by their index, and the run must stay
+bit-identical to every single-queue backend.
 """
 
 import argparse
@@ -30,6 +37,7 @@ BACKENDS = {
     "host/conservative": dict(backend="host", scheduler="conservative"),
     "host/speculative": dict(backend="host", scheduler="speculative"),
     "host/unbatched": dict(backend="host", scheduler="unbatched"),
+    "device/tiered3": dict(backend="device", queue_mode="tiered3"),
     "device/tiered": dict(backend="device", queue_mode="tiered"),
     "device/flat": dict(backend="device", queue_mode="flat"),
     "device/reference": dict(backend="device", queue_mode="reference"),
@@ -93,12 +101,19 @@ def main():
     ap.add_argument("--t-stop", type=float, default=40.0)
     ap.add_argument("--tiny", action="store_true",
                     help="CI smoke sizes (4 LPs, short horizon)")
+    ap.add_argument("--shards", type=int, default=None,
+                    help="also run the sharded device engine with this "
+                         "many per-shard queues (bit-parity asserted)")
     args = ap.parse_args()
     num_lps = 4 if args.tiny else args.lps
     t_stop = 8.0 if args.tiny else args.t_stop
+    backends = dict(BACKENDS)
+    if args.shards:
+        backends[f"device/{args.shards}shard"] = dict(
+            backend="device", shards=args.shards)
 
     results = {}
-    for label, build_kw in BACKENDS.items():
+    for label, build_kw in backends.items():
         prog = build_program(num_lps=num_lps, t_stop=t_stop)
         sim = prog.build(**build_kw)
         res = sim.run(initial_state(num_lps))

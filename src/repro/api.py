@@ -14,11 +14,12 @@ runtime with :meth:`SimProgram.build`:
     prog.schedule(0.0, "TICK")
 
     result = prog.build(backend="device").run(jnp.int32(0))
+    result = prog.build(backend="device", shards=4).run(jnp.int32(0))
     result = prog.build(backend="host", scheduler="speculative").run(...)
 
 Every backend — host (conservative / speculative / unbatched × lazy /
-eager composition) and device (tiered / tiered3 / flat / reference
-queues) — runs
+eager composition) and device (tiered3 / tiered / flat / reference
+queues, single or ``shards=N`` multi-queue) — runs
 the same definition with bit-identical final state and normalized
 :class:`RunResult` stats.  The classes in :mod:`repro.core` remain the
 backend layer underneath; reach for them only when benchmarking a

@@ -24,15 +24,17 @@ Two runtimes (DESIGN.md §2):
 
 Per-batch scheduling cost is selected by ``queue_mode`` (DESIGN.md §4):
 
-* ``"tiered"`` (default) — two-tier queue; per-batch work touches only
-  the small front/staging tiers, so scheduling overhead is independent
-  of queue capacity on the common path (the staging flush merge is
-  still O(capacity) under near-full, near-head re-emit pressure).
-* ``"tiered3"`` — the log-structured third tier (DESIGN.md §4.4):
-  staging flushes become bounded sorted runs and front refills a
-  bounded k-way merge, so no per-batch path is O(capacity) even at
+* ``"tiered3"`` (default) — the log-structured third tier (DESIGN.md
+  §4.4): staging flushes become bounded sorted runs and front refills
+  a bounded k-way merge, so no per-batch path is O(capacity) even at
   >=90% occupancy; the one O(capacity) compaction amortizes over an
-  entire run pool.  The mode for capacity 64k+ scenarios.
+  entire run pool.  Serves every regime including near-full 64k+
+  scenarios, which is why it is the default (promoted after soaking in
+  the serving scenarios since PR 4).
+* ``"tiered"`` — two-tier queue; per-batch work touches only the small
+  front/staging tiers, so scheduling overhead is independent of queue
+  capacity on the common path (the staging flush merge is still
+  O(capacity) under near-full, near-head re-emit pressure).
 * ``"flat"`` — the PR-1 single-array vectorized ops: a constant number
   of data-parallel passes, but the emit merge is O(capacity) per batch.
 * ``"reference"`` — seed semantics for differential testing and the
@@ -193,12 +195,13 @@ class DeviceEngine:
     queue-capacity overflow.
 
     ``queue_mode`` selects the pending-set implementation:
-    ``"tiered"`` (default, capacity-independent per-batch cost on the
-    common path), ``"tiered3"`` (log-structured run tier: bounded
-    worst-case per-batch cost, for near-full/64k+ scenarios),
-    ``"flat"`` (PR-1 single-array vectorized ops), or ``"reference"``
-    (seed semantics: serial-spec extraction + the bit-identical
-    one-pass bulk insert).
+    ``"tiered3"`` (default: log-structured run tier with bounded
+    worst-case per-batch cost at any occupancy/capacity),
+    ``"tiered"`` (two-tier: capacity-independent per-batch cost on the
+    common path only), ``"flat"`` (PR-1 single-array vectorized ops),
+    or ``"reference"`` (seed semantics: serial-spec extraction + the
+    bit-identical one-pass bulk insert).  For multi-queue execution
+    see :class:`repro.core.sharded.ShardedDeviceEngine`.
     ``front_cap``/``stage_cap`` size the tiered queues' front tier and
     staging ring and ``num_runs`` the tiered3 run pool; the defaults
     scale with ``max_batch_len`` and ``max_emit`` and are clamped to
@@ -220,7 +223,7 @@ class DeviceEngine:
     capacity: int = 1024
     max_emit: int = 2
     t_end: float = float("inf")
-    queue_mode: str = "tiered"
+    queue_mode: str = "tiered3"
     front_cap: int | None = None
     stage_cap: int | None = None
     num_runs: int | None = None
@@ -300,7 +303,7 @@ class DeviceEngine:
         )
 
     @classmethod
-    def from_program(cls, program, *, queue_mode: str = "tiered",
+    def from_program(cls, program, *, queue_mode: str = "tiered3",
                      capacity: int | None = None,
                      front_cap: int | None = None,
                      stage_cap: int | None = None,

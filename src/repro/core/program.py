@@ -21,7 +21,8 @@ exactly once on a :class:`SimProgram` —
 
 — and then compiled against any backend without touching the model:
 
-    sim = prog.build(backend="device", queue_mode="tiered")
+    sim = prog.build(backend="device")               # tiered3 queue
+    sim = prog.build(backend="device", shards=4)     # sharded, 4 queues
     sim = prog.build(backend="host", scheduler="speculative")
     result = sim.run(state0)         # -> RunResult, re-runnable
 
@@ -68,7 +69,8 @@ from repro.core.queue import HostEventQueue
 EMIT_WIDTH = 2 + ARG_WIDTH
 
 _HOST_SCHEDULERS = ("conservative", "speculative", "unbatched")
-_QUEUE_MODES = ("tiered", "tiered3", "flat", "reference")
+_QUEUE_MODES = ("tiered3", "tiered", "flat", "reference")
+_DEFAULT_QUEUE_MODE = "tiered3"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -382,7 +384,8 @@ class SimProgram:
     # -- compilation -------------------------------------------------------
     def build(self, *, backend: str = "device",
               scheduler: str = "conservative", composer: str = "lazy",
-              queue_mode: str = "tiered",
+              queue_mode: str = _DEFAULT_QUEUE_MODE,
+              shards: int | None = None, shard_fn=None,
               capacity: int | None = None,
               front_cap: int | None = None, stage_cap: int | None = None,
               num_runs: int | None = None,
@@ -392,8 +395,15 @@ class SimProgram:
               jit_handlers: bool = True) -> "CompiledSim":
         """Compile this model against one runtime.
 
-        ``backend="device"`` honors ``queue_mode`` (+ the optional
-        capacity/tier overrides); ``backend="host"`` honors
+        ``backend="device"`` honors ``queue_mode`` (default
+        ``"tiered3"`` — bounded per-batch cost at any capacity,
+        DESIGN.md §4.4) plus the optional capacity/tier overrides, and
+        ``shards=N`` (with optional ``shard_fn``): N per-shard tiered3
+        queues run under the lookahead-synchronized
+        :class:`~repro.core.sharded.ShardedDeviceEngine`,
+        bit-identical to the single queue (DESIGN.md §5.1) —
+        entity-parallel types route by their entity index
+        (``arg[0]``) by default.  ``backend="host"`` honors
         ``scheduler`` and ``composer`` (+ eager specs / causality /
         slack knobs).  Passing a knob that the selected backend does
         not read is an error, not a silent default — a mis-targeted
@@ -406,6 +416,7 @@ class SimProgram:
         self.freeze()
         if backend == "device":
             from repro.core.engine import DeviceEngine
+            from repro.core.sharded import ShardedDeviceEngine
 
             misdirected = {
                 "scheduler": scheduler != "conservative",
@@ -428,6 +439,24 @@ class SimProgram:
                     f"unknown queue_mode {queue_mode!r}; "
                     f"expected one of {_QUEUE_MODES}"
                 )
+            if shard_fn is not None and shards is None:
+                raise ValueError("shard_fn requires shards=N")
+            if shards is not None:
+                if queue_mode != "tiered3":
+                    raise ValueError(
+                        f"shards={shards} requires queue_mode='tiered3' "
+                        f"(got {queue_mode!r}): the per-shard pending "
+                        "sets are tiered3 queues"
+                    )
+                engine = ShardedDeviceEngine.from_program(
+                    self, shards=shards, shard_fn=shard_fn,
+                    capacity=capacity, front_cap=front_cap,
+                    stage_cap=stage_cap, num_runs=num_runs,
+                )
+                return CompiledSim(
+                    self, backend="device", engine=engine,
+                    variant=f"tiered3/shards={shards}",
+                )
             engine = DeviceEngine.from_program(
                 self, queue_mode=queue_mode, capacity=capacity,
                 front_cap=front_cap, stage_cap=stage_cap,
@@ -437,7 +466,9 @@ class SimProgram:
                                variant=queue_mode)
         if backend == "host":
             misdirected = {
-                "queue_mode": queue_mode != "tiered",
+                "queue_mode": queue_mode != _DEFAULT_QUEUE_MODE,
+                "shards": shards is not None,
+                "shard_fn": shard_fn is not None,
                 "capacity": capacity is not None,
                 "front_cap": front_cap is not None,
                 "stage_cap": stage_cap is not None,

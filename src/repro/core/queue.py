@@ -196,7 +196,7 @@ def device_queue_init(capacity: int, arg_width: int = ARG_WIDTH) -> DeviceQueue:
     )
 
 
-def _host_sorted_seed(events, capacity: int, arg_width: int):
+def _host_sorted_seed(events, capacity: int, arg_width: int, seqs=None):
     """Shared host-side seed build: the surviving events as columns
     sorted by ``(time, seq)``, plus the logical counters.
 
@@ -205,22 +205,37 @@ def _host_sorted_seed(events, capacity: int, arg_width: int):
     ``size``/``next_seq`` still advancing.  Both ``*_from_host``
     builders split these columns into their own layouts, so the
     reference overflow/seq semantics live in exactly one place.
+
+    ``seqs`` optionally supplies explicit per-event seqs (the sharded
+    engine seeds each shard with its slice of the GLOBAL seed, keeping
+    the global seq discipline); explicit-seq seeds must fit — the
+    global overflow rule was already applied upstream.
     """
     events = list(events)
     n = len(events)
+    if seqs is not None:
+        if len(seqs) != n:
+            raise ValueError(
+                f"{len(seqs)} explicit seqs for {n} seed events"
+            )
+        if n > capacity:
+            raise ValueError(
+                f"explicit-seq seed of {n} events exceeds capacity "
+                f"{capacity}: apply the overflow rule before sharding"
+            )
     m = min(n, capacity)
     times = np.full((m,), np.inf, np.float32)
     types = np.full((m,), -1, np.int32)
     args = np.zeros((m, arg_width), np.float32)
-    seqs = np.zeros((m,), np.int32)
+    seq_col = np.zeros((m,), np.int32)
     for i, (t, ty, arg) in enumerate(events[:m]):
         times[i] = t
         types[i] = ty
         if arg is not None:
             args[i] = np.asarray(arg, np.float32)
-        seqs[i] = i
-    order = np.lexsort((seqs, times))
-    return (times[order], types[order], args[order], seqs[order], n, m)
+        seq_col[i] = i if seqs is None else int(seqs[i])
+    order = np.lexsort((seq_col, times))
+    return (times[order], types[order], args[order], seq_col[order], n, m)
 
 
 def device_queue_from_host(
@@ -1048,60 +1063,55 @@ def tiered_queue_extract(q: TieredDeviceQueue, max_len: int, lookaheads,
     return q, ts, tys, args, length
 
 
-def tiered_queue_fill_rows(q: TieredDeviceQueue, rows) -> TieredDeviceQueue:
-    """Per-batch emit insert touching only the front and staging tiers.
+def _default_fill_accounting(q, rows):
+    """Reference seq/overflow rule shared by the tiered fills: valid
+    row ``r`` gets ``seq = next_seq + vrank(r)`` and survives iff
+    ``size + vrank(r) < capacity`` (``size`` counts ghosts).  Returns
+    ``(seq_r, insert, counters)`` for :func:`_tiered_fill_finish`."""
+    ty_r = rows[:, 1].astype(jnp.int32)
+    valid = ty_r >= 0
+    vrank = _prefix_rank(valid)
+    num_valid = jnp.sum(valid).astype(jnp.int32)
+    insert = valid & (q.size + vrank < q.capacity)
+    num_insert = jnp.sum(insert).astype(jnp.int32)
+    seq_r = q.next_seq + vrank
+    counters = dict(
+        size=q.size + num_valid,
+        next_seq=q.next_seq + num_valid,
+        dropped=q.dropped + (num_valid - num_insert),
+    )
+    return seq_r, insert, counters
 
-    Row layout is ``(time, type, arg...)``; ``type < 0`` rows are
-    skipped.  Valid row ``r`` receives ``seq = next_seq + r`` and is
-    dropped iff ``size + r >= capacity`` — bit-exact reference overflow
-    accounting (``size`` counts ghosts).  Surviving rows whose timestamp
-    precedes the tier boundary (the earliest key in staging ∪ main) are
-    counting-merged into the sorted front at O(front_cap · R) fused
-    bools + O(front_cap) gathers; rows at or past the boundary append to
-    the staging ring.  A full front evicts its tail to staging (the
-    merge output is ``front_cap + R`` wide, so nothing is lost), and a
-    staging ring that could overflow on this batch is first bulk-merged
-    into the main array via the rare :func:`_flush_stage` path.
 
-    No O(capacity) work on the common path — this is what makes
-    per-batch scheduling cost independent of queue capacity.
+def _tiered_fill_finish(q, rows, b_time, seq_r, insert, counters):
+    """Shared tail of BOTH tiered fill families (the ROADMAP-flagged
+    factoring): partition the emit block against the tier boundary,
+    counting-merge the near rows into the sorted front (evicting its
+    tail to staging when full — the merge output is ``front_cap + R``
+    wide, so nothing is lost), append the rest to the staging ring,
+    and install the caller-computed counters.
+
+    Works on :class:`TieredDeviceQueue` and :class:`Tiered3DeviceQueue`
+    alike (identical ``f_*``/``s_*`` field names); the two-tier
+    ``s_evict`` tags are updated iff the queue carries them.  The
+    overflow/seq RULE lives with the caller: ``seq_r`` is the per-row
+    seq (default ``next_seq + vrank``; the sharded engine supplies
+    globally-assigned seqs) and ``insert`` the per-row survive mask —
+    only their consequences are applied here, so the trickiest
+    accounting exists exactly once.  Row seqs must exceed every queued
+    seq (true for fresh emits under both the local and the global seq
+    discipline) — the front-merge tie handling relies on it.
     """
-    rows = jnp.asarray(rows, jnp.float32)
     R = rows.shape[0]
     F = q.front_cap
-    C = q.capacity
-    if R > q.stage_cap:
-        raise ValueError(
-            f"emit block of {R} rows exceeds stage_cap {q.stage_cap}"
-        )
-
-    # Staging must absorb up to R appends this batch (direct + evicted).
-    q = jax.lax.cond(
-        q.stage_n + R > q.stage_cap, _flush_stage, lambda q: q, q
-    )
-
     t_r = rows[:, 0]
     ty_r = rows[:, 1].astype(jnp.int32)
     arg_r = rows[:, 2:]
-    valid = ty_r >= 0
     r_idx = jnp.arange(R, dtype=jnp.int32)
-    vrank = _prefix_rank(valid)
-    num_valid = jnp.sum(valid).astype(jnp.int32)
-    insert = valid & (q.size + vrank < C)
-    num_insert = jnp.sum(insert).astype(jnp.int32)
-    seq_r = q.next_seq + vrank
 
-    # Tier boundary: earliest key outside the front.  Emit seqs all
-    # exceed every queued seq, so a timestamp TIE with the boundary
-    # already sorts the row after it — the partition is on time alone.
-    # The main head is read at the ring offset (slots before m_head are
-    # dead and must not leak into the boundary).
-    m_min = jnp.where(
-        q.main_n > 0,
-        jnp.take(q.m_times, jnp.clip(q.m_head, 0, C - 1)),
-        jnp.inf,
-    )
-    b_time = jnp.minimum(m_min, jnp.min(q.s_times))
+    # Emit seqs all exceed every queued seq, so a timestamp TIE with
+    # the boundary already sorts the row after it — the partition is on
+    # time alone.
     to_front = insert & (t_r < b_time)
     to_stage = insert & ~to_front
 
@@ -1109,7 +1119,7 @@ def tiered_queue_fill_rows(q: TieredDeviceQueue, rows) -> TieredDeviceQueue:
     FE = F + R
     perm = _small_lex_perm(
         jnp.where(to_front, t_r, jnp.inf),
-        jnp.where(to_front, r_idx, _I32_MAX),
+        jnp.where(to_front, seq_r, _I32_MAX),
     )
     rt = jnp.where(to_front, t_r, jnp.inf)[perm]
     rty = ty_r[perm]
@@ -1165,8 +1175,10 @@ def tiered_queue_fill_rows(q: TieredDeviceQueue, rows) -> TieredDeviceQueue:
         col = col.at[dest_e].set(evals, mode="drop")
         return col.at[dest_s].set(svals, mode="drop")
 
-    s_evict = q.s_evict.at[dest_e].set(True, mode="drop")
-    s_evict = s_evict.at[dest_s].set(False, mode="drop")
+    extra = {}
+    if hasattr(q, "s_evict"):
+        s_evict = q.s_evict.at[dest_e].set(True, mode="drop")
+        extra["s_evict"] = s_evict.at[dest_s].set(False, mode="drop")
 
     return q._replace(
         f_times=merged_t[:F], f_types=merged_y[:F],
@@ -1175,13 +1187,56 @@ def tiered_queue_fill_rows(q: TieredDeviceQueue, rows) -> TieredDeviceQueue:
         s_types=stage_put(q.s_types, merged_y[F:], ty_r),
         s_args=stage_put(q.s_args, merged_a[F:], arg_r),
         s_seqs=stage_put(q.s_seqs, merged_s[F:], seq_r),
-        s_evict=s_evict,
         front_n=front_n_new,
         stage_n=q.stage_n + evict_cnt + n_stage,
-        size=q.size + num_valid,
-        next_seq=q.next_seq + num_valid,
-        dropped=q.dropped + (num_valid - num_insert),
+        **counters,
+        **extra,
     )
+
+
+def tiered_queue_fill_rows(q: TieredDeviceQueue, rows) -> TieredDeviceQueue:
+    """Per-batch emit insert touching only the front and staging tiers.
+
+    Row layout is ``(time, type, arg...)``; ``type < 0`` rows are
+    skipped.  Valid row ``r`` receives ``seq = next_seq + r`` and is
+    dropped iff ``size + r >= capacity`` — bit-exact reference overflow
+    accounting (``size`` counts ghosts).  Surviving rows whose timestamp
+    precedes the tier boundary (the earliest key in staging ∪ main) are
+    counting-merged into the sorted front at O(front_cap · R) fused
+    bools + O(front_cap) gathers; rows at or past the boundary append to
+    the staging ring (:func:`_tiered_fill_finish`, shared with the
+    tiered3 fills).  A staging ring that could overflow on this batch
+    is first bulk-merged into the main array via the rare
+    :func:`_flush_stage` path.
+
+    No O(capacity) work on the common path — this is what makes
+    per-batch scheduling cost independent of queue capacity.
+    """
+    rows = jnp.asarray(rows, jnp.float32)
+    R = rows.shape[0]
+    C = q.capacity
+    if R > q.stage_cap:
+        raise ValueError(
+            f"emit block of {R} rows exceeds stage_cap {q.stage_cap}"
+        )
+
+    # Staging must absorb up to R appends this batch (direct + evicted).
+    q = jax.lax.cond(
+        q.stage_n + R > q.stage_cap, _flush_stage, lambda q: q, q
+    )
+
+    seq_r, insert, counters = _default_fill_accounting(q, rows)
+
+    # Tier boundary: earliest key outside the front.  The main head is
+    # read at the ring offset (slots before m_head are dead and must
+    # not leak into the boundary).
+    m_min = jnp.where(
+        q.main_n > 0,
+        jnp.take(q.m_times, jnp.clip(q.m_head, 0, C - 1)),
+        jnp.inf,
+    )
+    b_time = jnp.minimum(m_min, jnp.min(q.s_times))
+    return _tiered_fill_finish(q, rows, b_time, seq_r, insert, counters)
 
 
 def tiered_queue_to_flat(q: TieredDeviceQueue) -> DeviceQueue:
@@ -1347,18 +1402,23 @@ def tiered3_queue_init(capacity: int, *, front_cap: int = 256,
 
 def tiered3_queue_from_host(events, capacity: int, *, front_cap: int = 256,
                             stage_cap: int = 256, num_runs: int = 8,
-                            arg_width: int = ARG_WIDTH
+                            arg_width: int = ARG_WIDTH, seqs=None
                             ) -> Tiered3DeviceQueue:
     """Host-built seed queue, one device_put (cf. tiered_queue_from_host).
 
     Earliest ``front_cap`` events seed the front, the rest the main
     array at head 0; runs and staging start empty.  Reference overflow
     semantics against the LOGICAL capacity (the slack is structure).
+
+    ``seqs`` optionally supplies explicit global seqs (shard seeding):
+    the events must then fit ``capacity`` (the global overflow rule was
+    applied upstream) and the counters become shard-local — ``size`` =
+    occupancy, ``dropped`` = 0, ``next_seq`` past the largest seq.
     """
     front_cap = min(front_cap, capacity)
     phys = capacity + num_runs * stage_cap
-    times, types, args, seqs, n, m = _host_sorted_seed(
-        events, capacity, arg_width
+    times, types, args, seq_col, n, m = _host_sorted_seed(
+        events, capacity, arg_width, seqs
     )
     nf = min(m, front_cap)
     ft = np.full((front_cap,), np.inf, np.float32)
@@ -1366,7 +1426,7 @@ def tiered3_queue_from_host(events, capacity: int, *, front_cap: int = 256,
     fa = np.zeros((front_cap, arg_width), np.float32)
     fs = np.full((front_cap,), 2**31 - 1, np.int32)
     ft[:nf], fy[:nf], fa[:nf], fs[:nf] = (
-        times[:nf], types[:nf], args[:nf], seqs[:nf]
+        times[:nf], types[:nf], args[:nf], seq_col[:nf]
     )
     mt = np.full((phys,), np.inf, np.float32)
     my = np.full((phys,), -1, np.int32)
@@ -1374,8 +1434,14 @@ def tiered3_queue_from_host(events, capacity: int, *, front_cap: int = 256,
     ms = np.full((phys,), 2**31 - 1, np.int32)
     nm = m - nf
     mt[:nm], my[:nm], ma[:nm], ms[:nm] = (
-        times[nf:], types[nf:], args[nf:], seqs[nf:]
+        times[nf:], types[nf:], args[nf:], seq_col[nf:]
     )
+    if seqs is None:
+        size, next_seq, dropped = n, n, n - m
+    else:
+        size = m
+        next_seq = int(seq_col.max()) + 1 if m else 0
+        dropped = 0
     st, sy, sa, ss = (np.full((stage_cap,), np.inf, np.float32),
                       np.full((stage_cap,), -1, np.int32),
                       np.zeros((stage_cap, arg_width), np.float32),
@@ -1392,7 +1458,8 @@ def tiered3_queue_from_host(events, capacity: int, *, front_cap: int = 256,
         r_len=np.zeros((num_runs,), np.int32),
         front_n=np.int32(nf), main_n=np.int32(nm), m_head=np.int32(0),
         stage_n=np.int32(0),
-        size=np.int32(n), next_seq=np.int32(n), dropped=np.int32(n - m),
+        size=np.int32(size), next_seq=np.int32(next_seq),
+        dropped=np.int32(dropped),
     ))
 
 
@@ -1897,24 +1964,24 @@ def _refill_kway(q: Tiered3DeviceQueue, w: int | None = None
     )
 
 
-def tiered3_queue_extract(q: Tiered3DeviceQueue, max_len: int, lookaheads,
-                          t_cap=None):
-    """Window extraction from the front tier (paper Fig 2).
+def tiered3_queue_peek_front(q: Tiered3DeviceQueue, k: int):
+    """Shard-aware entry point: the queue's ``k`` earliest events.
 
-    Identical take rule and output as :func:`tiered_queue_extract`;
-    the drained-front refill is the bounded path of
-    :func:`_refill_front3_windowed` instead of a staging flush into
-    main.
-    Returns ``(q', ts, tys, args, length)``.
+    Refills the front exactly as :func:`tiered3_queue_extract` would
+    (the bounded :func:`_refill_front3_windowed` path), then returns
+    the first ``k`` front slots WITHOUT popping — free slots read as
+    the ``(inf, -1, 0, i32_max)`` sentinels.  The sharded engine merges
+    these candidate heads across shards to reconstruct the exact
+    global §III-B window, then pops each shard's taken prefix with
+    :func:`tiered3_queue_pop_prefix`.
+
+    Returns ``(q', ts, tys, args, seqs)``.
     """
-    if max_len > q.front_cap:
+    if k > q.front_cap:
         raise ValueError(
-            f"max_len {max_len} exceeds front tier capacity {q.front_cap}"
+            f"peek width {k} exceeds front tier capacity {q.front_cap}"
         )
-    k = max_len
     F = q.front_cap
-    num_types = lookaheads.shape[0]
-
     need_refill = (q.front_n < k) & (
         (q.stage_n > 0) | (q.main_n > 0) | jnp.any(q.r_len > q.r_off)
     )
@@ -1925,9 +1992,57 @@ def tiered3_queue_extract(q: Tiered3DeviceQueue, max_len: int, lookaheads,
         need_refill, _refill_front3_windowed(min(F, 4 * k)),
         lambda q: q, q,
     )
+    return q, q.f_times[:k], q.f_types[:k], q.f_args[:k], q.f_seqs[:k]
 
-    ts_c = q.f_times[:k]
-    tys_c = q.f_types[:k]
+
+def tiered3_queue_pop_prefix(q: Tiered3DeviceQueue, length, k: int
+                             ) -> Tiered3DeviceQueue:
+    """Pop the first ``length`` (<= static ``k``) front events: shift
+    every front column left by ``length`` (one fused ``dynamic_slice``
+    per column, exactly the :func:`tiered3_queue_extract` pop).  The
+    caller must have established ``length <= front_n`` via
+    :func:`tiered3_queue_peek_front` — taken candidates are always a
+    valid front prefix."""
+    F = q.front_cap
+
+    def shift(col, fill):
+        pad = jnp.full((k,) + col.shape[1:], fill, col.dtype)
+        return jax.lax.dynamic_slice_in_dim(
+            jnp.concatenate([col, pad]), length, F
+        )
+
+    return q._replace(
+        f_times=shift(q.f_times, jnp.inf),
+        f_types=shift(q.f_types, -1),
+        f_args=shift(q.f_args, 0.0),
+        f_seqs=shift(q.f_seqs, 2**31 - 1),
+        front_n=q.front_n - length,
+        size=q.size - length,
+    )
+
+
+def tiered3_queue_extract(q: Tiered3DeviceQueue, max_len: int, lookaheads,
+                          t_cap=None):
+    """Window extraction from the front tier (paper Fig 2).
+
+    Identical take rule and output as :func:`tiered_queue_extract`;
+    the drained-front refill is the bounded path of
+    :func:`_refill_front3_windowed` instead of a staging flush into
+    main.  Composed from the shard-aware halves — refill+read
+    (:func:`tiered3_queue_peek_front`) and prefix pop
+    (:func:`tiered3_queue_pop_prefix`) — so the sharded engine's split
+    extraction shares every line with the single-queue path the
+    differential suites pin.
+    Returns ``(q', ts, tys, args, length)``.
+    """
+    if max_len > q.front_cap:
+        raise ValueError(
+            f"max_len {max_len} exceeds front tier capacity {q.front_cap}"
+        )
+    k = max_len
+    num_types = lookaheads.shape[0]
+
+    q, ts_c, tys_c, args_c, _seqs_c = tiered3_queue_peek_front(q, k)
     valid = tys_c >= 0
     la = lookaheads[jnp.clip(tys_c, 0, num_types - 1)]
     wins = jnp.where(valid, ts_c + la, jnp.inf)
@@ -1936,23 +2051,36 @@ def tiered3_queue_extract(q: Tiered3DeviceQueue, max_len: int, lookaheads,
 
     ts = jnp.where(take, ts_c, 0.0)
     tys = jnp.where(take, tys_c, 0)
-    args = jnp.where(take[:, None], q.f_args[:k], 0.0)
+    args = jnp.where(take[:, None], args_c, 0.0)
 
-    def shift(col, fill):
-        pad = jnp.full((k,) + col.shape[1:], fill, col.dtype)
-        return jax.lax.dynamic_slice_in_dim(
-            jnp.concatenate([col, pad]), length, F
-        )
-
-    q = q._replace(
-        f_times=shift(q.f_times, jnp.inf),
-        f_types=shift(q.f_types, -1),
-        f_args=shift(q.f_args, 0.0),
-        f_seqs=shift(q.f_seqs, 2**31 - 1),
-        front_n=q.front_n - length,
-        size=q.size - length,
-    )
+    q = tiered3_queue_pop_prefix(q, length, k)
     return q, ts, tys, args, length
+
+
+def _tiered3_boundary(q: Tiered3DeviceQueue):
+    """Earliest key outside the front tier: min over staging, the run
+    summaries, and the main ring head (read at the ring offset — slots
+    before ``m_head`` are dead and must not leak into the boundary)."""
+    m_min = jnp.where(
+        q.main_n > 0,
+        jnp.take(q.m_times, jnp.clip(q.m_head, 0, q.main_phys - 1)),
+        jnp.inf,
+    )
+    return jnp.minimum(
+        jnp.minimum(m_min, jnp.min(q.s_times)), jnp.min(_run_mins(q))
+    )
+
+
+def _tiered3_preflush(q: Tiered3DeviceQueue, R: int) -> Tiered3DeviceQueue:
+    """Make room for up to ``R`` staging appends (direct + evicted)
+    before a fill, via the bounded run-log flush."""
+    if R > q.stage_cap:
+        raise ValueError(
+            f"emit block of {R} rows exceeds stage_cap {q.stage_cap}"
+        )
+    return jax.lax.cond(
+        q.stage_n + R > q.stage_cap, _flush_stage_to_run, lambda q: q, q
+    )
 
 
 def tiered3_queue_fill_rows(q: Tiered3DeviceQueue, rows
@@ -1960,120 +2088,53 @@ def tiered3_queue_fill_rows(q: Tiered3DeviceQueue, rows
     """Per-batch emit insert touching only the front and staging tiers.
 
     Same partition and accounting as :func:`tiered_queue_fill_rows`
-    (boundary now spans staging ∪ runs ∪ main; drop rule unchanged:
-    valid row ``r`` is a ghost iff ``size + r >= capacity``), but the
-    pre-flush when staging could overflow writes one sorted run
-    (O(stage_cap), capacity-independent) instead of merging into main
-    — near-full near-head pressure no longer touches an O(capacity)
-    path on any per-batch route.  No eviction tags: runs keep true
-    seqs and every downstream merge is a true ``(time, seq)`` lex sort.
+    (the shared :func:`_tiered_fill_finish`; boundary now spans staging
+    ∪ runs ∪ main; drop rule unchanged: valid row ``r`` is a ghost iff
+    ``size + r >= capacity``), but the pre-flush when staging could
+    overflow writes one sorted run (O(stage_cap),
+    capacity-independent) instead of merging into main — near-full
+    near-head pressure no longer touches an O(capacity) path on any
+    per-batch route.  No eviction tags: runs keep true seqs and every
+    downstream merge is a true ``(time, seq)`` lex sort.
     """
     rows = jnp.asarray(rows, jnp.float32)
-    R = rows.shape[0]
-    F = q.front_cap
-    C = q.capacity
-    if R > q.stage_cap:
-        raise ValueError(
-            f"emit block of {R} rows exceeds stage_cap {q.stage_cap}"
-        )
-
-    q = jax.lax.cond(
-        q.stage_n + R > q.stage_cap, _flush_stage_to_run, lambda q: q, q
+    q = _tiered3_preflush(q, rows.shape[0])
+    seq_r, insert, counters = _default_fill_accounting(q, rows)
+    return _tiered_fill_finish(
+        q, rows, _tiered3_boundary(q), seq_r, insert, counters
     )
 
-    t_r = rows[:, 0]
-    ty_r = rows[:, 1].astype(jnp.int32)
-    arg_r = rows[:, 2:]
-    valid = ty_r >= 0
-    r_idx = jnp.arange(R, dtype=jnp.int32)
-    vrank = _prefix_rank(valid)
-    num_valid = jnp.sum(valid).astype(jnp.int32)
-    insert = valid & (q.size + vrank < C)
-    num_insert = jnp.sum(insert).astype(jnp.int32)
-    seq_r = q.next_seq + vrank
 
-    # Tier boundary: earliest key outside the front (emit seqs exceed
-    # every queued seq, so the partition is on time alone).
-    m_min = jnp.where(
-        q.main_n > 0,
-        jnp.take(q.m_times, jnp.clip(q.m_head, 0, q.main_phys - 1)),
-        jnp.inf,
+def tiered3_queue_fill_rows_tagged(q: Tiered3DeviceQueue, rows, seqs,
+                                   insert) -> Tiered3DeviceQueue:
+    """Shard-aware emit insert: seqs and survival are decided UPSTREAM.
+
+    The sharded engine assigns seqs from ONE global counter across all
+    shards and applies the reference overflow rule against the GLOBAL
+    logical capacity, then routes each row to its destination shard —
+    so this entry point takes ``seqs`` (i32[R], must exceed every seq
+    already queued in any shard) and ``insert`` (bool[R], the rows this
+    shard actually absorbs: globally surviving AND routed here) instead
+    of deriving them from the local counters.  Rows outside ``insert``
+    are ignored entirely (ghost accounting lives in the engine's global
+    counters), so the local ``size`` tracks real occupancy and
+    ``dropped`` stays 0 on shard queues.  Merge mechanics are byte-for-
+    byte the single-queue path (:func:`_tiered_fill_finish`).
+    """
+    rows = jnp.asarray(rows, jnp.float32)
+    seqs = jnp.asarray(seqs, jnp.int32)
+    q = _tiered3_preflush(q, rows.shape[0])
+    insert = insert & (rows[:, 1] >= 0)
+    n_ins = jnp.sum(insert).astype(jnp.int32)
+    counters = dict(
+        size=q.size + n_ins,
+        next_seq=jnp.maximum(
+            q.next_seq, jnp.max(jnp.where(insert, seqs + 1, 0))
+        ),
+        dropped=q.dropped,
     )
-    b_time = jnp.minimum(
-        jnp.minimum(m_min, jnp.min(q.s_times)), jnp.min(_run_mins(q))
-    )
-    to_front = insert & (t_r < b_time)
-    to_stage = insert & ~to_front
-
-    # --- front merge (output F + R wide: overflow becomes eviction) ---
-    FE = F + R
-    perm = _small_lex_perm(
-        jnp.where(to_front, t_r, jnp.inf),
-        jnp.where(to_front, r_idx, _I32_MAX),
-    )
-    rt = jnp.where(to_front, t_r, jnp.inf)[perm]
-    rty = ty_r[perm]
-    rarg = arg_r[perm]
-    rseq = seq_r[perm]
-    rins = to_front[perm]
-
-    older = jnp.minimum(
-        jnp.searchsorted(q.f_times, rt, side="right").astype(jnp.int32),
-        q.front_n,
-    )
-    pos = jnp.where(rins, older + r_idx, FE + R)
-
-    i_idx = jnp.arange(FE, dtype=jnp.int32)
-    ins_before = jnp.searchsorted(pos, i_idx, side="left").astype(jnp.int32)
-    is_ins = (
-        jnp.searchsorted(pos, i_idx, side="right").astype(jnp.int32)
-        > ins_before
-    )
-    src = jnp.where(
-        is_ins, FE + jnp.clip(ins_before, 0, R - 1),
-        jnp.clip(i_idx - ins_before, 0, FE - 1),
-    )
-
-    def fmerge(col, rcol, fill):
-        ext = jnp.concatenate(
-            [col, jnp.full((R,) + col.shape[1:], fill, col.dtype), rcol]
-        )
-        return jnp.take(ext, src, axis=0)
-
-    merged_t = fmerge(q.f_times, rt, jnp.inf)
-    merged_y = fmerge(q.f_types, rty, -1)
-    merged_a = fmerge(q.f_args, rarg, 0.0)
-    merged_s = fmerge(q.f_seqs, rseq, 2**31 - 1)
-
-    n_front = jnp.sum(to_front).astype(jnp.int32)
-    occ_after = q.front_n + n_front
-    evict_cnt = jnp.maximum(occ_after - F, 0)
-    front_n_new = jnp.minimum(occ_after, F)
-
-    # --- staging appends: evicted front tail, then direct rows --------
-    SC = q.stage_cap
-    e_valid = merged_y[F:] >= 0
-    dest_e = jnp.where(e_valid, q.stage_n + r_idx, SC)
-    srank = _prefix_rank(to_stage)
-    dest_s = jnp.where(to_stage, q.stage_n + evict_cnt + srank, SC)
-    n_stage = jnp.sum(to_stage).astype(jnp.int32)
-
-    def stage_put(col, evals, svals):
-        col = col.at[dest_e].set(evals, mode="drop")
-        return col.at[dest_s].set(svals, mode="drop")
-
-    return q._replace(
-        f_times=merged_t[:F], f_types=merged_y[:F],
-        f_args=merged_a[:F], f_seqs=merged_s[:F],
-        s_times=stage_put(q.s_times, merged_t[F:], t_r),
-        s_types=stage_put(q.s_types, merged_y[F:], ty_r),
-        s_args=stage_put(q.s_args, merged_a[F:], arg_r),
-        s_seqs=stage_put(q.s_seqs, merged_s[F:], seq_r),
-        front_n=front_n_new,
-        stage_n=q.stage_n + evict_cnt + n_stage,
-        size=q.size + num_valid,
-        next_seq=q.next_seq + num_valid,
-        dropped=q.dropped + (num_valid - num_insert),
+    return _tiered_fill_finish(
+        q, rows, _tiered3_boundary(q), seqs, insert, counters
     )
 
 

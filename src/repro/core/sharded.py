@@ -1,0 +1,406 @@
+"""Sharded device engine: lookahead-synchronized multi-queue execution.
+
+PARSIR-style conservative PDES (PAPERS.md) scales past one processor by
+partitioning the pending set across engines and letting each run ahead
+only as far as a lookahead-bounded horizon.  :class:`ShardedDeviceEngine`
+brings that structure to the on-device runtime: entities are partitioned
+across ``shards`` per-shard :class:`~repro.core.queue.Tiered3DeviceQueue`
+pending sets, each super-step synchronizes the shard clocks under a
+shared conservative horizon, and cross-shard emissions travel through
+fixed-capacity exchange blocks merged into the destination queues with
+the same bounded counting-merge primitives the single queue uses (no
+sorts, no scatters — the XLA:CPU traps, DESIGN.md §4.4).
+
+The horizon, honestly
+---------------------
+Every super-step:
+
+1. **peek** — each shard surfaces its ``max_batch_len`` earliest events
+   (:func:`~repro.core.queue.tiered3_queue_peek_front`: the tiered3
+   front tier after its bounded refill), O(front_cap) per shard.
+2. **merge** — the ``shards × max_batch_len`` candidate heads are
+   lex-ordered by their true global ``(time, seq)`` keys (all-pairs
+   rank — the candidate set is tiny) and the §III-B dynamic-lookahead
+   take rule (:func:`~repro.core.queue.window_prefix_mask`) runs over
+   the first ``max_batch_len`` of the merged order.  Because every
+   pending event is among its own shard's ``max_batch_len`` earliest
+   whenever it is among the ``max_batch_len`` globally earliest, this
+   reconstructs EXACTLY the window the single-queue engine would
+   extract.  The window's dynamic bound ``min over taken (t_j + l_j)``
+   is the conservative synchronization horizon; it is bounded below by
+   ``min_i(next_time_i) + min_lookahead`` — the classic conservative
+   floor (no shard can receive a cross-shard event below it) — but the
+   merged evaluation is exact where the floor alone would under- or
+   over-take.
+3. **pop** — the take set is a prefix of the merged order, so each
+   shard's taken events are a prefix of its own candidates; shard ``i``
+   pops its count with one
+   :func:`~repro.core.queue.tiered3_queue_pop_prefix` shift.
+4. **dispatch** — the merged window runs through the identical
+   composed-batch dispatch path as :class:`~repro.core.engine
+   .DeviceEngine` (switch or vmapped entity runs), so the state update
+   is bit-identical.
+5. **exchange** — emitted rows get seqs from ONE global counter
+   (``next_seq + vrank``, the reference rule) and the global overflow
+   rule (ghost iff ``size + vrank >= capacity``, ``size`` counting
+   ghosts) — both computed BEFORE routing, so accounting cannot depend
+   on the partition.  Each destination shard then absorbs its routed
+   rows from the fixed ``max_batch_len × max_emit``-row exchange block
+   via :func:`~repro.core.queue.tiered3_queue_fill_rows_tagged` — the
+   single-queue counting-merge fill with seqs/survival supplied.
+
+Because each super-step reproduces the single-queue window exactly —
+same events, same order, same batch grouping, same seqs, same ghosts —
+the sharded run is bit-identical to ``queue_mode="tiered3"`` with one
+queue: final state, executed (time, seq) sequence, ``dropped``,
+``final_time``, and even ``batches``.  The executable contract lives in
+``tests/test_sharded_engine.py`` and the shared parity harness
+(``tests/_parity.py``).
+
+Compilation shape
+-----------------
+The shard queues are a TUPLE of :class:`Tiered3DeviceQueue` pytrees and
+the per-shard legs (peek, pop, exchange fill) are an unrolled Python
+loop, so each shard's buffers thread through the ``while_loop`` carry
+as separate arrays that XLA updates IN PLACE — per-super-step cost
+stays bounded (capacity-independent) like the single queue's.  Two
+tempting alternatives are wrong at scale and were measured so:
+``lax.scan`` over stacked shards compiles the machinery once (~4×
+faster compile at N=4) but its xs/ys slicing re-materializes every
+shard's capacity-sized leaves every super-step — O(N·capacity) memcpy
+per batch, ~45–100× slower at 64k and GROWING with capacity; ``vmap``
+additionally lowers the rare-path ``lax.cond``s to select pairs that
+execute both branches (including the O(capacity) ring rotate) for
+every shard every step.  Compile time is therefore linear in
+``shards`` (~7 s per shard on CPU) — the price of bounded runtime.
+
+Routing
+-------
+``shard_fn(tys, args) -> i32[rows]`` maps each emitted event to a
+shard.  The default routes by ``arg[0]`` — the entity index of
+entity-parallel types (``@prog.entity_handler`` puts the entity id
+there) and the conventional routing slot of emitting types (PHOLD's
+destination LP, the serving scenario's request id) — reduced mod
+``shards``.  Any deterministic routing is CORRECT (parity never depends
+on the partition, only load balance does); results of a custom
+``shard_fn`` are reduced mod ``shards`` so no row can be lost to an
+out-of-range destination.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import DeviceEngine
+from repro.core.events import ARG_WIDTH
+from repro.core.queue import (
+    DeviceQueue,
+    Tiered3DeviceQueue,
+    _prefix_rank,
+    _small_lex_perm,
+    tiered3_queue_fill_rows_tagged,
+    tiered3_queue_from_host,
+    tiered3_queue_has_pending,
+    tiered3_queue_next_time,
+    tiered3_queue_peek_front,
+    tiered3_queue_pop_prefix,
+    tiered3_queue_to_flat,
+    window_prefix_mask,
+)
+
+__all__ = ["ShardedDeviceEngine", "ShardedQueue", "sharded_queue_to_flat"]
+
+
+class ShardedQueue(NamedTuple):
+    """The sharded pending set (a JAX pytree): N per-shard tiered3
+    queues plus the GLOBAL logical counters.
+
+    The global counters carry the reference overflow/seq semantics —
+    ``size`` counts logical pushes including ghosts, ``next_seq`` is
+    the one seq counter all shards share, ``dropped`` the global ghost
+    count — while each shard's local ``size`` tracks only its real
+    occupancy (shard-local ``dropped`` stays 0; see
+    :func:`~repro.core.queue.tiered3_queue_fill_rows_tagged`).  The
+    logical capacity is the single-queue ``capacity`` (each shard can
+    physically hold all of it, so routing skew never causes drops the
+    single queue would not have had).
+    """
+
+    shards: tuple[Tiered3DeviceQueue, ...]
+    size: jnp.ndarray      # i32 scalar, global logical pushes (+ghosts)
+    next_seq: jnp.ndarray  # i32 scalar, global seq counter
+    dropped: jnp.ndarray   # i32 scalar, global overflow drops
+
+    @property
+    def num_shards(self) -> int:
+        return len(self.shards)
+
+    @property
+    def capacity(self) -> int:
+        return self.shards[0].capacity
+
+    def shard(self, i: int) -> Tiered3DeviceQueue:
+        return self.shards[i]
+
+
+def sharded_queue_to_flat(sq: ShardedQueue) -> DeviceQueue:
+    """Canonical flat view of a sharded queue (host-side, for tests).
+
+    Gathers every shard's occupied slots, sorts by the global
+    ``(time, seq)`` key, and lays them out as one canonical
+    :class:`~repro.core.queue.DeviceQueue` carrying the GLOBAL
+    counters — directly comparable to the single-queue flat views.
+    """
+    cols = []
+    for i in range(sq.num_shards):
+        flat = tiered3_queue_to_flat(sq.shard(i))
+        occ = np.asarray(flat.types) >= 0
+        cols.append((np.asarray(flat.times)[occ], np.asarray(flat.types)[occ],
+                     np.asarray(flat.args)[occ], np.asarray(flat.seqs)[occ]))
+    times = np.concatenate([c[0] for c in cols])
+    types = np.concatenate([c[1] for c in cols])
+    args = np.concatenate([c[2] for c in cols])
+    seqs = np.concatenate([c[3] for c in cols])
+    order = np.lexsort((seqs, times))
+    n = times.shape[0]
+    C = sq.capacity
+    assert n <= C, "sharded occupancy exceeded global logical capacity"
+    out_t = np.full((C,), np.inf, np.float32)
+    out_y = np.full((C,), -1, np.int32)
+    out_a = np.zeros((C, args.shape[1]), np.float32)
+    out_s = np.full((C,), 2**31 - 1, np.int32)
+    out_t[:n], out_y[:n], out_a[:n], out_s[:n] = (
+        times[order], types[order], args[order], seqs[order]
+    )
+    return DeviceQueue(
+        times=jnp.asarray(out_t), types=jnp.asarray(out_y),
+        args=jnp.asarray(out_a), seqs=jnp.asarray(out_s),
+        size=jnp.asarray(sq.size), next_seq=jnp.asarray(sq.next_seq),
+        dropped=jnp.asarray(sq.dropped),
+    )
+
+
+@dataclasses.dataclass
+class ShardedDeviceEngine(DeviceEngine):
+    """Multi-queue device engine, bit-identical to the single queue.
+
+    Preferred entry point: ``repro.api.SimProgram.build(
+    backend="device", shards=N)``.  Direct usage mirrors
+    :class:`~repro.core.engine.DeviceEngine`::
+
+        eng = ShardedDeviceEngine(registry, shards=4, capacity=65536,
+                                  max_batch_len=8)
+        queue = eng.initial_queue(events)     # -> ShardedQueue
+        state, queue, stats = eng.run(state0, queue)
+
+    All :class:`DeviceEngine` knobs apply per shard (each shard is a
+    full tiered3 queue with the same ``front_cap``/``stage_cap``/
+    ``num_runs`` geometry); ``queue_mode`` must remain ``"tiered3"``
+    (the per-shard pending-set implementation this engine is built
+    on).  ``shard_fn`` customizes event routing (module docstring) —
+    it must be a pure jnp function of ``(tys, args)``; its result is
+    reduced mod ``shards``.  The queue argument to :meth:`run` is
+    donated exactly as in the parent.
+    """
+
+    shards: int = 2
+    shard_fn: Callable | None = None
+
+    def __post_init__(self, use_vectorized_queue):
+        if self.queue_mode != "tiered3":
+            raise ValueError(
+                f"ShardedDeviceEngine requires queue_mode='tiered3' "
+                f"(got {self.queue_mode!r}): the per-shard pending sets "
+                "are tiered3 queues"
+            )
+        if self.shards < 1:
+            raise ValueError(f"shards must be >= 1, got {self.shards}")
+        super().__post_init__(use_vectorized_queue)
+
+    @classmethod
+    def from_program(cls, program, *, shards: int = 2,
+                     shard_fn: Callable | None = None,
+                     queue_mode: str = "tiered3",
+                     capacity: int | None = None,
+                     front_cap: int | None = None,
+                     stage_cap: int | None = None,
+                     num_runs: int | None = None,
+                     t_end: float = float("inf")) -> "ShardedDeviceEngine":
+        """Construct the sharded device backend from a frozen SimProgram
+        (cf. :meth:`DeviceEngine.from_program`; the entity→shard mapping
+        falls out of the entity-handler ``arg[0]`` convention unless a
+        ``shard_fn`` overrides it)."""
+        cfg = program.config
+        return cls(
+            program.device_registry(),
+            max_batch_len=cfg.max_batch_len,
+            capacity=cfg.capacity if capacity is None else capacity,
+            max_emit=cfg.max_emit,
+            t_end=t_end,
+            queue_mode=queue_mode,
+            front_cap=front_cap,
+            stage_cap=stage_cap,
+            num_runs=num_runs,
+            entity_handlers=program.device_entity_handlers() or None,
+            shards=shards,
+            shard_fn=shard_fn,
+        )
+
+    # -- routing ------------------------------------------------------------
+    def _shard_of(self, tys, args):
+        """Destination shard per row, always in ``[0, shards)``."""
+        if self.shard_fn is not None:
+            dest = jnp.asarray(self.shard_fn(tys, args), jnp.int32)
+        else:
+            dest = jnp.abs(args[:, 0].astype(jnp.int32))
+        return dest % jnp.int32(self.shards)
+
+    # -- queue construction -------------------------------------------------
+    def initial_queue(self, events) -> ShardedQueue:
+        """Partition the seed across shards under the GLOBAL seq and
+        overflow rules: event ``i`` keeps seq ``i`` and is a ghost iff
+        ``i >= capacity`` (the reference ``from_host`` semantics),
+        THEN the survivors are routed — so the seed is bit-equivalent
+        to the single queue's regardless of the partition."""
+        events = list(events)
+        n = len(events)
+        C = self.capacity
+        survivors = events[:C]
+        if survivors:
+            tys = jnp.asarray([ty for (_, ty, _) in survivors], jnp.int32)
+            args = np.zeros((len(survivors), ARG_WIDTH), np.float32)
+            for i, (_, _, arg) in enumerate(survivors):
+                if arg is not None:
+                    args[i] = np.asarray(arg, np.float32)
+            dest = np.asarray(self._shard_of(tys, jnp.asarray(args)))
+        else:
+            dest = np.zeros((0,), np.int32)
+        shard_qs = []
+        for s in range(self.shards):
+            mine = np.flatnonzero(dest == s)
+            shard_qs.append(tiered3_queue_from_host(
+                [survivors[i] for i in mine], C,
+                front_cap=self.front_cap, stage_cap=self.stage_cap,
+                num_runs=self.num_runs, seqs=mine,
+            ))
+        return ShardedQueue(
+            shards=tuple(shard_qs),
+            size=jnp.int32(n),
+            next_seq=jnp.int32(n),
+            dropped=jnp.int32(n - len(survivors)),
+        )
+
+    # -- main loop ----------------------------------------------------------
+    def _run(self, state, queue, t_end, *, max_batches: int):
+        k = self.max_batch_len
+        N = self.shards
+        num_types = len(self.registry)
+        lookaheads = self._lookaheads
+
+        def cond(carry):
+            state, sq, stats = carry
+            del state
+            pending = jnp.any(jnp.stack(
+                [tiered3_queue_has_pending(q) for q in sq.shards]
+            ))
+            next_t = jnp.min(jnp.stack(
+                [tiered3_queue_next_time(q) for q in sq.shards]
+            ))
+            return (
+                pending
+                & (stats["batches"] < max_batches)
+                & (next_t <= t_end)
+            )
+
+        def body(carry):
+            state, sq, stats = carry
+
+            # 1. peek: each shard's earliest k events (bounded refill).
+            # Unrolled per shard — NOT a scan/vmap — so each shard's
+            # capacity-sized buffers thread the while-loop carry as
+            # separate in-place arrays (module docstring: scan's xs/ys
+            # slicing would copy O(N·capacity) per super-step).
+            peeked = [tiered3_queue_peek_front(q, k) for q in sq.shards]
+            qs = [p[0] for p in peeked]
+            cts = jnp.concatenate([p[1] for p in peeked])
+            ctys = jnp.concatenate([p[2] for p in peeked])
+            cargs = jnp.concatenate([p[3] for p in peeked])
+            cseqs = jnp.concatenate([p[4] for p in peeked])
+            csrc = jnp.repeat(jnp.arange(N, dtype=jnp.int32), k)
+
+            # 2. merge + exact global window (the horizon evaluation).
+            order = _small_lex_perm(cts, cseqs)[:k]
+            ts_c = cts[order]
+            tys_c = ctys[order]
+            args_c = cargs[order]
+            src_c = csrc[order]
+            valid = tys_c >= 0
+            la = lookaheads[jnp.clip(tys_c, 0, num_types - 1)]
+            wins = jnp.where(valid, ts_c + la, jnp.inf)
+            take = window_prefix_mask(ts_c, wins, valid, t_end)
+            length = jnp.sum(take).astype(jnp.int32)
+
+            ts = jnp.where(take, ts_c, 0.0)
+            tys = jnp.where(take, tys_c, 0)
+            args = jnp.where(take[:, None], args_c, 0.0)
+
+            # 3. pop each shard's taken prefix.
+            qs = [
+                tiered3_queue_pop_prefix(
+                    qs[i],
+                    jnp.sum(take & (src_c == i)).astype(jnp.int32),
+                    k,
+                )
+                for i in range(N)
+            ]
+
+            # 4. dispatch: the parent's composed-batch path, verbatim.
+            state, emits = self._dispatch_window(state, ts, tys, args,
+                                                 length)
+
+            # 5. global seq + overflow accounting (reference rule; the
+            # insert-time size is POST-extract, as in the single queue).
+            ty_r = emits[:, 1].astype(jnp.int32)
+            valid_r = ty_r >= 0
+            vrank = _prefix_rank(valid_r)
+            num_valid = jnp.sum(valid_r).astype(jnp.int32)
+            size_mid = sq.size - length
+            insert = valid_r & (size_mid + vrank < self.capacity)
+            num_insert = jnp.sum(insert).astype(jnp.int32)
+            seq_r = sq.next_seq + vrank
+
+            # 6. exchange: route rows; each shard absorbs its slice of
+            # the fixed R-row exchange block.
+            dest = self._shard_of(ty_r, emits[:, 2:])
+            qs = [
+                tiered3_queue_fill_rows_tagged(
+                    qs[i], emits, seq_r, insert & (dest == i)
+                )
+                for i in range(N)
+            ]
+
+            sq = ShardedQueue(
+                shards=tuple(qs),
+                size=size_mid + num_valid,
+                next_seq=sq.next_seq + num_valid,
+                dropped=sq.dropped + (num_valid - num_insert),
+            )
+            last_t = ts[jnp.maximum(length - 1, 0)]
+            stats = {
+                "batches": stats["batches"] + 1,
+                "events": stats["events"] + length,
+                "time": jnp.maximum(stats["time"], last_t),
+            }
+            return state, sq, stats
+
+        stats0 = {
+            "batches": jnp.int32(0),
+            "events": jnp.int32(0),
+            "time": jnp.float32(0.0),
+        }
+        return jax.lax.while_loop(cond, body, (state, queue, stats0))

@@ -20,6 +20,10 @@ Event alphabet (ids are registration order):
   lookahead is a TRUE lower bound on the type's emission delays — the
   contract the conservative window trusts; a delay below the lookahead
   would make the windowed backends diverge from sequential execution.
+  Every emission carries its REQUEST INDEX in ``arg[0]`` — the routing
+  slot the sharded engine partitions on (``shards=N`` spreads the
+  admission traffic across per-shard queues; the handlers ignore the
+  arg, so the sharded run stays bit-identical to every other backend).
 * ``ADMIT`` (1) — admit the longest-waiting request into the first free
   slot (counter-hashed decode budget); with no free slot it re-emits
   itself one decode tick later — the retry loop of
@@ -80,8 +84,11 @@ def build_admission_program(*, num_slots: int = 8, num_requests: int = 64,
     pins ``arrival_lookahead`` to exactly 0.25 (validated).  Decode
     budgets are ``1 + hash % max_decode`` ticks.  Build with
     ``prog.build(backend="device", queue_mode="tiered3",
-    capacity=...)`` for the large-pending-set regime, or any other
-    backend for bit-identical validation.
+    capacity=...)`` for the large-pending-set regime — add
+    ``shards=4`` for the multi-queue engine (emissions carry the
+    request index in ``arg[0]``, so the default routing spreads the
+    admission traffic across shards) — or any other backend for
+    bit-identical validation.
     """
     cfg = config or Config(max_batch_len=8, capacity=1024, max_emit=2)
     if cfg.max_emit < 2:
@@ -110,6 +117,9 @@ def build_admission_program(*, num_slots: int = 8, num_requests: int = 64,
         emits = emits.at[0, 0].set(gap).at[0, 1].set(
             jnp.where(more, _ARRIVE, -1.0))
         emits = emits.at[1, 0].set(arrival_lookahead).at[1, 1].set(_ADMIT)
+        # arg[0] = request index: the shard-routing slot (ignored here).
+        emits = emits.at[0, 2].set((k + 1).astype(jnp.float32))
+        emits = emits.at[1, 2].set(k.astype(jnp.float32))
         return state, emits
 
     @prog.handler("ADMIT", lookahead=1.0, emits=True)
@@ -133,6 +143,7 @@ def build_admission_program(*, num_slots: int = 8, num_requests: int = 64,
         emits = _blank()
         emits = emits.at[0, 0].set(1.0).at[0, 1].set(
             jnp.where(retry, _ADMIT, -1.0))
+        emits = emits.at[0, 2].set(arg[0])   # retry keeps its request id
         return state, emits
 
     @prog.handler("TICK", lookahead=1.0, emits=True)

@@ -1,0 +1,95 @@
+"""Shared cross-backend parity harness.
+
+One SimProgram definition must run unmodified on every runtime with
+bit-identical final state and identical normalized stats — the
+executable contract of `repro.api`.  This module is the ONE place that
+knows the backend matrix and the assertion set; parity suites
+(`test_simprogram_parity.py`, `test_serving_scenarios.py`,
+`test_sharded_engine.py`) pick backends from it instead of copying the
+assertions, and a new backend (e.g. the sharded device engine) joins
+every suite by registering one entry here.
+
+Groups:
+
+* ``ALL_BACKENDS`` — label -> ``SimProgram.build`` kwargs for every
+  runtime, including the sharded device engine at 2 and 4 shards.
+* ``BATCHED`` — the runtimes sharing the §III-B window rule, which
+  must therefore agree on the BATCH COUNT too.  The sharded engine
+  belongs here: each super-step reconstructs the exact single-queue
+  window (DESIGN.md §5.1), so even its batch grouping is identical.
+  ``unbatched``/``speculative`` group differently and stay out.
+"""
+
+import numpy as np
+
+ALL_BACKENDS = {
+    "host/conservative": dict(backend="host", scheduler="conservative"),
+    "host/speculative": dict(backend="host", scheduler="speculative"),
+    "host/unbatched": dict(backend="host", scheduler="unbatched"),
+    "device/tiered3": dict(backend="device", queue_mode="tiered3"),
+    "device/tiered": dict(backend="device", queue_mode="tiered"),
+    "device/flat": dict(backend="device", queue_mode="flat"),
+    "device/reference": dict(backend="device", queue_mode="reference"),
+    "device/tiered3-2shard": dict(backend="device", shards=2),
+    "device/tiered3-4shard": dict(backend="device", shards=4),
+}
+
+BATCHED = (
+    "host/conservative",
+    "device/tiered3",
+    "device/tiered",
+    "device/flat",
+    "device/reference",
+    "device/tiered3-2shard",
+    "device/tiered3-4shard",
+)
+
+
+def run_all(build_program, state0, *, backends=None, run_kw=None):
+    """Build the program per backend and run it; label -> RunResult.
+
+    ``build_program`` is a zero-arg callable returning a fresh
+    SimProgram (a program freezes on first build, so each backend gets
+    its own instance).  ``backends`` restricts/overrides the matrix
+    (label -> build kwargs); ``run_kw`` is forwarded to every run.
+    """
+    backends = ALL_BACKENDS if backends is None else backends
+    run_kw = run_kw or {}
+    return {
+        label: build_program().build(**kw).run(state0, **run_kw)
+        for label, kw in backends.items()
+    }
+
+
+def assert_parity(results, *, base="host/unbatched", batched=None,
+                  expect_dropped=0):
+    """Every backend agrees with ``base`` on final state (bit-exact,
+    every pytree leaf), executed-event count, ``dropped``, and
+    ``final_time`` (as f32 — the cross-backend grid contract); the
+    batched runtimes additionally agree on the batch count.
+
+    ``batched`` defaults to the ``BATCHED`` members present in
+    ``results``; ``expect_dropped=None`` skips the exact-drop check
+    (overflow scenarios assert equality only).
+    """
+    import jax
+
+    base_res = results[base]
+    for label, res in results.items():
+        for leaf_base, leaf in zip(
+            jax.tree_util.tree_leaves(base_res.state),
+            jax.tree_util.tree_leaves(res.state),
+        ):
+            np.testing.assert_array_equal(
+                np.asarray(leaf), np.asarray(leaf_base), err_msg=label
+            )
+        assert res.events == base_res.events, label
+        assert res.dropped == base_res.dropped, label
+        if expect_dropped is not None:
+            assert res.dropped == expect_dropped, label
+        assert np.float32(res.final_time) == np.float32(
+            base_res.final_time), label
+    if batched is None:
+        batched = [k for k in BATCHED if k in results]
+    batch_counts = {results[k].batches for k in batched}
+    assert len(batch_counts) <= 1, batch_counts

@@ -29,6 +29,7 @@ def _tol(dtype):
 # flash attention
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("causal", [True, False])
 @pytest.mark.parametrize(
@@ -68,6 +69,7 @@ def test_flash_attention_block_invariance():
                                    rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.slow
 @given(
     t_blocks=st.integers(1, 4),
     d=st.sampled_from([32, 64]),
@@ -93,6 +95,7 @@ def test_flash_attention_property(t_blocks, d, heads, causal):
 # decode attention
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize(
     "B,H,KV,S,D,bk",
@@ -135,6 +138,7 @@ def test_decode_attention_matches_flash_last_row():
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.slow
 @pytest.mark.parametrize(
     "B,H,T,K,chunk",
     [
@@ -208,6 +212,7 @@ def test_ops_decode_matches_model_reference():
 # mamba selective scan
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize(
     "B,T,I,N,chunk,bi",

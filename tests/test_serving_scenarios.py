@@ -2,8 +2,8 @@
 the serving control plane AND a cross-backend executable contract: one
 pure SimProgram definition must produce bit-identical admission
 counters on the host schedulers and the device engine — in particular
-under ``queue_mode="tiered3"``, the mode the ROADMAP's 64k+ serving
-scenarios depend on.
+under ``queue_mode="tiered3"`` and the sharded engine built on it,
+the modes the ROADMAP's 64k+ serving scenarios depend on.
 
 ``max_batch_len`` stays small here: the dense-codec switch dispatcher
 composes one branch per batch word (|types|^k), so compile time — not
@@ -13,35 +13,31 @@ the queue — bounds the batch length for multi-type device models.
 import numpy as np
 import pytest
 
+from _parity import ALL_BACKENDS, assert_parity, run_all
 from repro.core.program import Config
 from repro.serving.scenarios import build_admission_program, initial_state
 
 CFG = Config(max_batch_len=3, capacity=256, max_emit=2)
 
 
-def _run(**build_kw):
-    prog = build_admission_program(
+def _build():
+    return build_admission_program(
         num_slots=4, num_requests=24, max_decode=5, config=CFG
     )
-    r = prog.build(**build_kw).run(initial_state(4))
-    return (
-        {k: np.asarray(v).tolist() for k, v in r.state.items()},
-        r.events, r.final_time, r.dropped,
-    )
 
 
-def test_admission_parity_device_tiered3_vs_host():
-    """Same counters, event count, and final time on device tiered3,
-    host conservative, and the sequential baseline."""
-    base = _run(backend="device", queue_mode="tiered3")
-    assert base == _run(backend="host")
-    assert base == _run(backend="host", scheduler="unbatched")
-    state = base[0]
+def test_admission_parity_all_backends():
+    """Same counters, event count, and final time on every backend —
+    host schedulers, all four device queue modes, and the sharded
+    engine at 2 and 4 shards (emissions route by request id)."""
+    results = run_all(_build, initial_state(4))
+    assert_parity(results)
+    state = {k: np.asarray(v).tolist()
+             for k, v in results["device/tiered3"].state.items()}
     # The run really finished and really contended for slots.
     assert state["arrivals"] == state["admitted"] == state["served"] == 24
     assert state["waiting"] == 0 and state["slots"] == [0, 0, 0, 0]
     assert state["retries"] > 0
-    assert base[3] == 0  # no overflow drops
 
 
 def test_admission_large_capacity_tiered3():
@@ -63,8 +59,42 @@ def test_admission_large_capacity_tiered3():
     assert int(state["decoded"]) >= 300
 
 
+@pytest.mark.slow
+def test_admission_64k_capacity_4_shards_bit_identical():
+    """The acceptance run: the admission scenario at 64k capacity on
+    the sharded engine (4 shards) is bit-identical — state, events,
+    batches, dropped, final_time — to the single-shard tiered3 run."""
+    cfg = Config(max_batch_len=3, capacity=65536, max_emit=2)
+
+    def build():
+        return build_admission_program(
+            num_slots=48, num_requests=400, max_decode=6, config=cfg
+        )
+
+    single = build().build(
+        backend="device", queue_mode="tiered3").run(initial_state(48))
+    sharded = build().build(
+        backend="device", shards=4).run(initial_state(48))
+    for k, v in single.state.items():
+        np.testing.assert_array_equal(
+            np.asarray(v), np.asarray(sharded.state[k]), err_msg=k)
+    assert (single.events, single.batches, single.dropped) \
+        == (sharded.events, sharded.batches, sharded.dropped)
+    assert np.float32(single.final_time) == np.float32(sharded.final_time)
+    assert int(single.state["served"]) == 400
+    assert sharded.dropped == 0
+
+
 def test_admission_lookahead_contract_validated():
     with pytest.raises(ValueError, match="arrival_lookahead"):
         build_admission_program(arrival_lookahead=0.5)
     with pytest.raises(ValueError, match="max_emit"):
         build_admission_program(config=Config(max_emit=1))
+
+
+def test_sharded_backends_registered_in_harness():
+    """The sharded engine is part of the shared parity matrix (the
+    satellite contract: new backends register once, every suite
+    inherits them)."""
+    assert ALL_BACKENDS["device/tiered3-2shard"]["shards"] == 2
+    assert ALL_BACKENDS["device/tiered3-4shard"]["shards"] == 4

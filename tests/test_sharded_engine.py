@@ -1,0 +1,302 @@
+"""The sharded device engine's executable contract: bit-identical to
+the single-shard tiered3 engine (mirrors the differential structure of
+``test_device_queue_tiered3.py``, one level up).
+
+Every super-step of :class:`~repro.core.sharded.ShardedDeviceEngine`
+must reconstruct the exact single-queue §III-B window from the merged
+shard heads, keep one global seq/overflow discipline across shards,
+and route cross-shard emissions without perturbing order — so final
+state (including an order-sensitive checksum), executed-event counts,
+batch counts, ``dropped``, final time, AND the residual queue contents
+(times/types/args/seqs) must all match the single queue exactly.  The
+92%-occupancy churn drives the near-head / far-future / cross-shard
+re-emit mix that stresses every exchange and refill path at once.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from _parity import assert_parity, run_all
+from repro.core import DeviceEngine, EventRegistry, emits_events
+from repro.core.events import ARG_WIDTH
+from repro.core.queue import tiered3_queue_to_flat
+from repro.core.sharded import (
+    ShardedDeviceEngine,
+    ShardedQueue,
+    sharded_queue_to_flat,
+)
+
+EMIT_W = 2 + ARG_WIDTH
+
+
+def _mix(t, src):
+    """Counter hash of (time, entity) on the 0.5 grid (cf. phold)."""
+    t2 = (t * 2.0).astype(jnp.uint32)
+    h = (t2 * jnp.uint32(2654435761)
+         + src.astype(jnp.uint32) * jnp.uint32(40503) + jnp.uint32(12345))
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(0x5BD1E995)
+    return h ^ (h >> 15)
+
+
+def _churn_registry(num_entities: int, t_stop: float):
+    """Order-sensitive near-full churn: each event folds its hash into
+    a checksum (any order divergence corrupts it) and re-emits ONE row
+    whose delay alternates near-head (0.5 grid) / far-future by the
+    hash, routed to a hash-chosen entity — so re-emits continuously
+    cross shard boundaries while occupancy stays stationary."""
+    reg = EventRegistry()
+
+    @emits_events
+    def churn(state, t, arg):
+        src = arg[0].astype(jnp.int32)
+        h = _mix(t, src)
+        near = (h % jnp.uint32(3)) != 0
+        delay = jnp.where(
+            near,
+            0.5 + 0.5 * ((h >> 3) % jnp.uint32(4)).astype(jnp.float32),
+            1e5 + ((h >> 3) % jnp.uint32(8)).astype(jnp.float32),
+        )
+        dst = ((h >> 7) % jnp.uint32(num_entities)).astype(jnp.int32)
+        emit = jnp.zeros((1, EMIT_W), jnp.float32)
+        emit = (emit.at[0, 0].set(t + delay)
+                    .at[0, 1].set(jnp.where(t < t_stop, 0.0, -1.0))
+                    .at[0, 2].set(dst.astype(jnp.float32)))
+        return {
+            "count": state["count"] + 1,
+            "checksum": state["checksum"] * jnp.uint32(31) + h,
+        }, emit
+
+    reg.register("CHURN", churn, lookahead=0.5)
+    return reg.freeze()
+
+
+def _state0():
+    return {"count": jnp.int32(0), "checksum": jnp.uint32(1)}
+
+
+# One engine per static configuration: hypothesis re-feeds the SAME
+# compiled engines new seed values, so the soak costs one compile per
+# geometry, not per example.
+_ENGINES = {}
+
+
+def _engine(shards, *, capacity=48, max_len=4, num_entities=12,
+            t_stop=64.0, front_cap=6, stage_cap=5, num_runs=2):
+    key = (shards, capacity, max_len, num_entities, t_stop, front_cap,
+           stage_cap, num_runs)
+    if key not in _ENGINES:
+        reg = _churn_registry(num_entities, t_stop)
+        kw = dict(max_batch_len=max_len, capacity=capacity, max_emit=1,
+                  front_cap=front_cap, stage_cap=stage_cap,
+                  num_runs=num_runs)
+        if shards == 0:
+            _ENGINES[key] = DeviceEngine(reg, queue_mode="tiered3", **kw)
+        else:
+            _ENGINES[key] = ShardedDeviceEngine(reg, shards=shards, **kw)
+    return _ENGINES[key]
+
+
+def _seed_events(seed, capacity, num_entities, occupancy=0.92):
+    """~92% of capacity seed events on the 0.5 grid, entities assigned
+    pseudo-randomly so every shard starts loaded."""
+    rng = np.random.default_rng(seed)
+    n = int(capacity * occupancy)
+    events = []
+    for i in range(n):
+        t = 0.5 * int(rng.integers(0, 2 * n))
+        e = int(rng.integers(0, num_entities))
+        events.append((t, 0, np.asarray([e, 0, 0, 0], np.float32)))
+    return events
+
+
+def _run_churn_differential(seed, shards, max_batches=48):
+    single = _engine(0)
+    sharded = _engine(shards)
+    events = _seed_events(seed, single.capacity, 12)
+
+    s0, q0, st0 = single.run(_state0(), single.initial_queue(events),
+                             max_batches=max_batches)
+    s1, q1, st1 = sharded.run(_state0(), sharded.initial_queue(events),
+                              max_batches=max_batches)
+
+    msg = f"seed {seed} shards {shards}"
+    assert int(s0["count"]) == int(s1["count"]), msg
+    assert int(s0["checksum"]) == int(s1["checksum"]), msg
+    for k in ("batches", "events", "dropped"):
+        assert int(st0[k]) == int(st1[k]), (msg, k)
+    assert float(st0["time"]) == float(st1["time"]), msg
+    # Residual pending sets must match bit-exactly, global counters
+    # included — the mid-run exchange state is part of the contract.
+    fa = tiered3_queue_to_flat(q0)
+    fb = sharded_queue_to_flat(q1)
+    for field in ("times", "types", "args", "seqs"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(fa, field)), np.asarray(getattr(fb, field)),
+            err_msg=f"{msg}: {field}")
+    for field in ("size", "next_seq", "dropped"):
+        assert int(getattr(fa, field)) == int(getattr(fb, field)), \
+            (msg, field)
+    assert int(st0["batches"]) > 0 and int(st0["events"]) > 0
+
+
+@pytest.mark.parametrize("seed,shards", [
+    (0, 2), (1, 3), (2, 4), (3, 2),
+])
+def test_near_full_churn_fixed_cases(seed, shards):
+    """Bare-env coverage of the 92%-occupancy cross-shard churn (the
+    hypothesis property below widens the same driver)."""
+    _run_churn_differential(seed, shards)
+
+
+@given(seed=st.integers(0, 2**16), shards=st.sampled_from([2, 3, 4]))
+@settings(max_examples=8, deadline=None)
+def test_property_near_full_churn(seed, shards):
+    """For ANY seed stream and shard count, the sharded engine stays
+    bit-identical to the single tiered3 queue under sustained
+    near-head/far-future/cross-shard re-emit pressure."""
+    _run_churn_differential(seed, shards)
+
+
+def test_seed_overflow_global_rule():
+    """Seeding past capacity must apply the single-queue overflow rule
+    BEFORE partitioning: same survivors, same global counters."""
+    single = _engine(0, capacity=16, t_stop=1e9)
+    sharded = _engine(3, capacity=16, t_stop=1e9)
+    events = _seed_events(7, 16, 12, occupancy=1.5)  # 24 events, 8 ghost
+    q0 = single.initial_queue(events)
+    q1 = sharded.initial_queue(events)
+    assert int(q1.dropped) == int(q0.dropped) == len(events) - 16
+    assert int(q1.size) == int(q0.size) == len(events)
+    assert int(q1.next_seq) == int(q0.next_seq) == len(events)
+    fa, fb = tiered3_queue_to_flat(q0), sharded_queue_to_flat(q1)
+    for field in ("times", "types", "args", "seqs"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(fa, field)), np.asarray(getattr(fb, field)),
+            err_msg=field)
+
+
+def test_emit_overflow_ghosts_match_single_queue():
+    """A spawning cascade overflowing a tiny sharded queue must drop
+    the SAME events as the single queue (global ghost rule at the
+    exchange boundary), and the run must terminate."""
+    def make_reg():
+        reg = EventRegistry()
+
+        @emits_events
+        def spawner(state, t, arg):
+            emit = jnp.zeros((2, EMIT_W), jnp.float32)
+            emit = emit.at[:, 0].set(t + 1.0).at[:, 1].set(0.0)
+            emit = emit.at[0, 2].set(arg[0] + 1.0)
+            emit = emit.at[1, 2].set(arg[0] + 2.0)
+            return state + 1, emit
+
+        reg.register("S", spawner, lookahead=1.0)
+        return reg.freeze()
+
+    outcomes = {}
+    for label, build in {
+        "single": lambda: DeviceEngine(
+            make_reg(), max_batch_len=2, capacity=5, max_emit=2,
+            queue_mode="tiered3", front_cap=2, stage_cap=5, num_runs=2),
+        "sh2": lambda: ShardedDeviceEngine(
+            make_reg(), max_batch_len=2, capacity=5, max_emit=2,
+            front_cap=2, stage_cap=5, num_runs=2, shards=2),
+        "sh3": lambda: ShardedDeviceEngine(
+            make_reg(), max_batch_len=2, capacity=5, max_emit=2,
+            front_cap=2, stage_cap=5, num_runs=2, shards=3),
+    }.items():
+        eng = build()
+        q = eng.initial_queue([(0.0, 0, [0.0, 0, 0, 0]),
+                               (0.0, 0, [1.0, 0, 0, 0])])
+        s, q, stats = eng.run(jnp.int32(0), q, max_batches=7)
+        flat = (sharded_queue_to_flat(q) if isinstance(q, ShardedQueue)
+                else tiered3_queue_to_flat(q))
+        outcomes[label] = (
+            int(s), int(stats["dropped"]), int(q.size), int(q.next_seq),
+            int(stats["batches"]), np.asarray(flat.times).tolist(),
+            np.asarray(flat.seqs).tolist(),
+        )
+    assert outcomes["single"] == outcomes["sh2"] == outcomes["sh3"]
+    assert outcomes["single"][1] > 0  # it really overflowed
+
+
+def test_front_smaller_than_pending_set_terminates():
+    """Shard fronts far smaller than the pending set: every event still
+    executes exactly once across refills and exchanges."""
+    reg = EventRegistry()
+    reg.register("N", lambda s, t, a: s + 1, lookahead=np.inf)
+    eng = ShardedDeviceEngine(reg, max_batch_len=4, capacity=64,
+                              front_cap=4, stage_cap=4, num_runs=2,
+                              shards=3)
+    events = [(float(t), 0, np.asarray([t % 7, 0, 0, 0], np.float32))
+              for t in range(50)]
+    s, q, stats = eng.run(jnp.int32(0), eng.initial_queue(events))
+    assert int(s) == 50
+    assert int(stats["events"]) == 50
+    assert int(q.size) == 0
+
+
+def test_custom_shard_fn_and_validation():
+    """A custom routing function changes the partition but NOT the
+    results (parity is partition-independent); invalid configs raise."""
+    reg = _churn_registry(8, 32.0)
+    events = _seed_events(5, 32, 8, occupancy=0.5)
+    base = ShardedDeviceEngine(
+        reg, max_batch_len=4, capacity=32, max_emit=1, shards=2)
+    skewed = ShardedDeviceEngine(
+        reg, max_batch_len=4, capacity=32, max_emit=1, shards=2,
+        shard_fn=lambda tys, args: jnp.full(
+            tys.shape, 7, jnp.int32))  # out-of-range: reduced mod shards
+    s0, _, st0 = base.run(_state0(), base.initial_queue(events),
+                          max_batches=24)
+    s1, _, st1 = skewed.run(_state0(), skewed.initial_queue(events),
+                            max_batches=24)
+    assert int(s0["checksum"]) == int(s1["checksum"])
+    assert int(st0["batches"]) == int(st1["batches"])
+
+    with pytest.raises(ValueError, match="tiered3"):
+        ShardedDeviceEngine(_churn_registry(4, 8.0), queue_mode="flat")
+    with pytest.raises(ValueError, match="shards"):
+        ShardedDeviceEngine(_churn_registry(4, 8.0), shards=0)
+
+
+def test_build_knob_validation():
+    """`shards` is a device knob, gated exactly like the others."""
+    import sys
+    from pathlib import Path
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "examples"))
+    import phold
+
+    prog = phold.build_program(num_lps=3, t_stop=4.0)
+    with pytest.raises(ValueError, match="shards"):
+        prog.build(backend="host", shards=2)
+    prog2 = phold.build_program(num_lps=3, t_stop=4.0)
+    with pytest.raises(ValueError, match="tiered3"):
+        prog2.build(backend="device", shards=2, queue_mode="flat")
+    prog3 = phold.build_program(num_lps=3, t_stop=4.0)
+    with pytest.raises(ValueError, match="shard_fn"):
+        prog3.build(backend="device", shard_fn=lambda tys, args: tys)
+
+
+def test_phold_parity_through_harness():
+    """The shared parity harness exercises the sharded entries on the
+    device-only matrix (full-matrix runs live in
+    test_simprogram_parity.py; this pins the harness wiring itself)."""
+    import sys
+    from pathlib import Path
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "examples"))
+    import phold
+
+    backends = {
+        "host/unbatched": dict(backend="host", scheduler="unbatched"),
+        "device/tiered3": dict(backend="device"),
+        "device/tiered3-2shard": dict(backend="device", shards=2),
+    }
+    results = run_all(
+        lambda: phold.build_program(num_lps=4, t_stop=10.0),
+        phold.initial_state(4), backends=backends,
+    )
+    assert_parity(results)

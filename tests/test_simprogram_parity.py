@@ -1,10 +1,12 @@
 """Cross-backend parity: the executable contract of `repro.api`.
 
 One SimProgram definition must run unmodified on every runtime —
-host (conservative / speculative / unbatched) and device (tiered /
-flat / reference queue modes) — with bit-identical final state and
-identical normalized stats (events, dropped, final_time).  The
-scenarios come from the in-repo examples, imported directly so the
+host (conservative / speculative / unbatched) and device (tiered3 /
+tiered / flat / reference queue modes, plus the sharded engine at 2
+and 4 shards) — with bit-identical final state and identical
+normalized stats (events, dropped, final_time).  The backend matrix
+and the assertion set live in the shared harness (``tests/_parity.py``);
+the scenarios come from the in-repo examples, imported directly so the
 shipped example models ARE the tested models.
 """
 
@@ -15,72 +17,32 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _parity import ALL_BACKENDS, assert_parity, run_all
 from repro import poc
-from repro.api import Config, SimProgram
+from repro.api import Config
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "examples"))
 
 import mmc_network  # noqa: E402
 import phold  # noqa: E402
 
-ALL_BACKENDS = {
-    "host/conservative": dict(backend="host", scheduler="conservative"),
-    "host/speculative": dict(backend="host", scheduler="speculative"),
-    "host/unbatched": dict(backend="host", scheduler="unbatched"),
-    "device/tiered": dict(backend="device", queue_mode="tiered"),
-    "device/flat": dict(backend="device", queue_mode="flat"),
-    "device/reference": dict(backend="device", queue_mode="reference"),
-}
-
-# Batched runtimes share the §III-B extraction rule, so they must agree
-# on the batch count too (unbatched/speculative group differently).
-BATCHED = ("host/conservative", "device/tiered", "device/flat",
-           "device/reference")
-
-
-def _run_everywhere(build_program, state0):
-    results = {}
-    for label, kw in ALL_BACKENDS.items():
-        results[label] = build_program().build(**kw).run(state0)
-    return results
-
-
-def _assert_parity(results):
-    import jax
-
-    base = results["host/unbatched"]
-    for label, res in results.items():
-        for leaf_base, leaf in zip(
-            jax.tree_util.tree_leaves(base.state),
-            jax.tree_util.tree_leaves(res.state),
-        ):
-            np.testing.assert_array_equal(
-                np.asarray(leaf), np.asarray(leaf_base), err_msg=label
-            )
-        assert res.events == base.events, label
-        assert res.dropped == base.dropped == 0, label
-        assert np.float32(res.final_time) == np.float32(base.final_time), \
-            label
-    batch_counts = {results[k].batches for k in BATCHED}
-    assert len(batch_counts) == 1, batch_counts
-
 
 def test_phold_parity():
-    results = _run_everywhere(
+    results = run_all(
         lambda: phold.build_program(num_lps=5, t_stop=12.0),
         phold.initial_state(5),
     )
-    _assert_parity(results)
+    assert_parity(results)
     # the scenario actually exercised emission scheduling
     assert results["host/unbatched"].events > 20
 
 
 def test_mmc_network_parity():
-    results = _run_everywhere(
+    results = run_all(
         lambda: mmc_network.build_program(num_stations=3, t_open=12.0),
         mmc_network.initial_state(3),
     )
-    _assert_parity(results)
+    assert_parity(results)
     st = results["device/tiered"].state
     # TALLY (entity-parallel) events really ran
     assert int(np.asarray(st["samples"]).sum()) > 0
@@ -103,9 +65,9 @@ def test_poc_parity_including_eager_composer():
         return prog
 
     oracle = poc.reference_final_sum(types, 64)
-    results = _run_everywhere(build, poc.initial_state())
-    _assert_parity(results)
-    assert int(results["device/tiered"].state) == oracle
+    results = run_all(build, poc.initial_state())
+    assert_parity(results)
+    assert int(results["device/tiered3"].state) == oracle
 
     eager = build().build(
         backend="host", scheduler="conservative", composer="eager",
@@ -119,14 +81,17 @@ def test_poc_parity_including_eager_composer():
 def test_until_horizon_identical_across_backends():
     """`until` caps the extraction window itself: exactly the events
     with timestamp <= until execute, on every backend — including the
-    speculative scheduler, whose slack may not cross the horizon."""
-    states, events = [], []
-    for label, kw in ALL_BACKENDS.items():
-        prog = phold.build_program(num_lps=4, t_stop=20.0)
-        res = prog.build(**kw).run(phold.initial_state(4), until=7.5)
-        states.append(int(res.state["checksum"]))
-        events.append(res.events)
-        assert res.final_time <= 7.5, label
+    speculative scheduler, whose slack may not cross the horizon, and
+    the sharded engine, whose merged super-step window carries the same
+    cap."""
+    results = run_all(
+        lambda: phold.build_program(num_lps=4, t_stop=20.0),
+        phold.initial_state(4),
+        run_kw=dict(until=7.5),
+    )
+    states = [int(res.state["checksum"]) for res in results.values()]
+    events = [res.events for res in results.values()]
+    assert all(res.final_time <= 7.5 for res in results.values())
     assert len(set(states)) == 1
     assert len(set(events)) == 1
 
@@ -142,3 +107,20 @@ def test_rerunnable_handle(label):
     assert int(r1.state["checksum"]) == int(r2.state["checksum"])
     assert (r1.events, r1.batches, r1.dropped) \
         == (r2.events, r2.batches, r2.dropped)
+
+
+def test_device_default_queue_mode_is_tiered3():
+    """The ROADMAP promotion, pinned: a bare device build runs the
+    tiered3 queue (both through the API and the engine default), and
+    `tiered` stays selectable."""
+    from repro.core.engine import DeviceEngine
+
+    prog = phold.build_program(num_lps=3, t_stop=4.0)
+    sim = prog.build(backend="device")
+    assert sim.variant == "tiered3"
+    assert sim.engine.queue_mode == "tiered3"
+    assert DeviceEngine.__dataclass_fields__["queue_mode"].default \
+        == "tiered3"
+    prog2 = phold.build_program(num_lps=3, t_stop=4.0)
+    assert prog2.build(backend="device", queue_mode="tiered").variant \
+        == "tiered"
