@@ -4,9 +4,18 @@ Closed forms, checked exhaustively for small alphabets.  Reproduces the
 paper's |Σ|=5, n=5 example (58 % redundant; the paper's prose quotes
 "9331", which its own formula shows is the total-including-ε — the
 formula value is 5425 = 58.1 % of 9330, matching the quoted percentage).
+
+``run_measured`` complements the closed forms with OBSERVED word
+frequencies: the per-word histogram the device engine now records in
+``RunResult.word_counts`` (the profile input to fused dispatch,
+DESIGN.md §7), measured on the Fig-3 PoC workload across p_s — how
+concentrated the word distribution actually is, i.e. how few hot words
+a top-W fused dispatcher needs to cover most batches.
 """
 
 from __future__ import annotations
+
+import numpy as np
 
 from repro.core.codec import (
     DenseCodec,
@@ -33,6 +42,45 @@ def run(quick: bool = False):
     return rows
 
 
+def run_measured(quick: bool = False):
+    """Observed word histograms from device runs of the PoC workload:
+    per p_s, the number of distinct words seen, and the share of
+    batches the top-1 / top-4 words cover (``RunResult.word_counts``
+    ranked by :func:`repro.core.composer.hot_words_from_counts`)."""
+    from repro import poc
+    from repro.core.composer import hot_words_from_counts
+    from repro.core.program import Config
+
+    n = 4
+    num_events = 64 if quick else 256
+    ps_values = (0.25,) if quick else (0.05, 0.25, 0.5)
+    rows = []
+    for p_s in ps_values:
+        rng = np.random.default_rng(0)
+        types = [int(x) for x in (rng.random(num_events) < p_s)]
+        prog = poc.build_program(
+            iters=16, config=Config(max_batch_len=n,
+                                    capacity=num_events + 8))
+        for t, ty in enumerate(types):
+            prog.schedule(float(t), ("Increment", "Set")[ty])
+        sim = prog.build(backend="device")
+        r = sim.run(poc.initial_state())
+        wc = r.word_counts
+        total = int(wc.sum())
+        assert total == r.batches
+        ranked = np.sort(wc[wc > 0])[::-1]
+        hot = hot_words_from_counts(wc, sim.engine.codec, 4)
+        rows.append({
+            "p_s": p_s, "n": n, "batches": total,
+            "possible_words": int(wc.shape[0]),
+            "observed_words": int((wc > 0).sum()),
+            "top1_share": float(ranked[0] / total),
+            "top4_share": float(ranked[:4].sum() / total),
+            "top4_words": [list(w) for w in hot],
+        })
+    return rows
+
+
 def main(quick: bool = False):
     rows = run(quick=quick)
     print("types,n,paper_batches,redundant,redundant_pct,dense_batches")
@@ -40,6 +88,12 @@ def main(quick: bool = False):
         print(f"{r['types']},{r['n']},{r['paper_codec_batches']},"
               f"{r['redundant']},{r['redundant_pct']:.1f},"
               f"{r['dense_codec_batches']}")
+    meas = run_measured(quick=quick)
+    print("p_s,n,batches,observed/possible_words,top1_share,top4_share")
+    for m in meas:
+        print(f"{m['p_s']},{m['n']},{m['batches']},"
+              f"{m['observed_words']}/{m['possible_words']},"
+              f"{m['top1_share']:.2f},{m['top4_share']:.2f}")
     return rows
 
 

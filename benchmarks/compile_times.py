@@ -88,6 +88,48 @@ def run_codec_comparison(quick: bool = False):
     return out
 
 
+def run_fused_compile_scaling(quick: bool = False):
+    """Compile-cost guard for fused dispatch (DESIGN.md §7): engine
+    compile time as a function of the hot-set size W must grow
+    LINEARLY in W (each hot word adds one straight-line branch) on top
+    of the constant masked fallback — not with the |Σ|^n full-switch
+    word count.  Reports seconds per W and the scaling ratio vs the
+    hot-word ratio; ``linear_ok`` flags time growing no faster than
+    2× the W growth (the slack absorbs constant per-compile overhead,
+    which makes the measured ratio UNDERestimate linearity)."""
+    import numpy as np
+
+    from repro.core.codec import DenseCodec as _DC
+    from repro.core.engine import DeviceEngine
+
+    nt, n = (3, 3)
+    codec = _DC(nt, n)
+    ws = (2, 8) if quick else (2, 8, 32)
+    reg_words = [tuple(codec.decode(c)) for c in range(codec.num_batches)]
+    rows = []
+    for w in ws:
+        reg = _registry(nt)
+        eng = DeviceEngine(reg, max_batch_len=n, capacity=128,
+                           dispatch_mode="fused",
+                           hot_words=reg_words[:w])
+        queue = eng.initial_queue(
+            [(float(t), t % nt, None) for t in range(32)])
+        t0 = time.perf_counter()
+        eng.run(jnp.uint32(0), queue)  # first call = trace + compile
+        rows.append({"hot_words": w,
+                     "seconds": time.perf_counter() - t0})
+    t_lo, t_hi = rows[0]["seconds"], rows[-1]["seconds"]
+    w_lo, w_hi = rows[0]["hot_words"], rows[-1]["hot_words"]
+    time_ratio = t_hi / t_lo
+    w_ratio = w_hi / w_lo
+    return {
+        "types": nt, "n": n, "rows": rows,
+        "time_ratio": time_ratio, "hot_word_ratio": w_ratio,
+        "seconds_per_hot_word": (t_hi - t_lo) / (w_hi - w_lo),
+        "linear_ok": bool(time_ratio <= 2.0 * w_ratio),
+    }
+
+
 def run_lazy_fraction(quick: bool = False):
     """Lazy composition on a realistic workload: how many of the Σ*
     programs does a 1000-event run actually touch?"""
@@ -128,6 +170,17 @@ def main(quick: bool = False):
     lz = run_lazy_fraction(quick=quick)
     print(f"lazy: {lz['compiled_programs']}/{lz['possible_programs']} "
           f"programs compiled ({lz['fraction']:.1%}) at n={lz['n']}")
+    fs = run_fused_compile_scaling(quick=quick)
+    ws = " ".join(f"W={r['hot_words']}:{r['seconds']:.2f}s"
+                  for r in fs["rows"])
+    print(f"fused dispatch compile scaling ({fs['types']} types, "
+          f"n={fs['n']}): {ws} -> time x{fs['time_ratio']:.2f} for "
+          f"hot-words x{fs['hot_word_ratio']:.0f} "
+          f"({fs['seconds_per_hot_word'] * 1e3:.0f}ms/word, "
+          f"linear_ok={fs['linear_ok']})")
+    if not fs["linear_ok"]:
+        raise SystemExit(
+            "fused dispatch compile cost grew superlinearly in W")
     return rows
 
 

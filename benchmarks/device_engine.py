@@ -38,6 +38,18 @@ Two measurements:
   against the recorded baseline, failing (exit 1) on a >R× regression
   — the CI perf gate.
 
+* ``fused_dispatch`` (``--fused-only``) — the composition-specialized
+  dispatch (DESIGN.md §7): whole-run per-batch cost AND a chained
+  per-dispatch microbenchmark on the hottest observed word (profiled
+  via ``RunResult.word_counts``) for all three dispatch modes, on the
+  PoC model and the serving admission scenario.  The claim the section
+  records is *hot-word fused dispatch <= the generic masked path* —
+  the bounded W+1-way switch plus straight-line super-procedures must
+  not cost more than the per-lane type switches they replace.
+  ``--fused-only --check-baseline R`` gates the fused/masked
+  per-dispatch ratio against the recorded baseline (same
+  machine-independence reasoning as the near-full gate).
+
 * ``shards_sweep`` (``--shards-only``) — the sharded engine
   (DESIGN.md §5.1) against the bit-identical single tiered3 queue on
   the 92%-occupancy ROUTED churn (re-emits hop entities, so a constant
@@ -175,6 +187,32 @@ def _bench_op_loop(step, init, iters):
         jax.block_until_ready(out)
         best = min(best, (time.perf_counter() - t0) / (iters * launches))
     return best * 1e6
+
+
+def _bench_ops_interleaved(steps, init, iters, rounds=7):
+    """_bench_op_loop over several candidate step fns at once, timed
+    round-robin (one sample each per round) so host-load drift hits
+    every candidate equally — the gates compare the RATIOS
+    (DESIGN.md §6.4), and sequential blocks would let a load spike
+    land entirely on one candidate."""
+    looped = {
+        name: jax.jit(lambda init, f=f: jax.lax.fori_loop(
+            0, iters, lambda i, c: f(c), init))
+        for name, f in steps.items()
+    }
+    for fn in looped.values():
+        jax.block_until_ready(fn(init))
+    launches = max(1, -(-1024 // iters))
+    best = {name: float("inf") for name in steps}
+    for _ in range(rounds):
+        for name, fn in looped.items():
+            t0 = time.perf_counter()
+            for _ in range(launches):
+                out = fn(init)
+            jax.block_until_ready(out)
+            best[name] = min(
+                best[name], (time.perf_counter() - t0) / (iters * launches))
+    return {name: v * 1e6 for name, v in best.items()}
 
 
 def _time_engines_interleaved(runs, max_batches, repeats=5):
@@ -593,6 +631,215 @@ def shards_sweep(quick: bool = False, repeats: int = 5):
     }
 
 
+def _fused_workload_builders(quick: bool):
+    """label -> (build(**kw) -> CompiledSim, state0_fn) for the two
+    fused-dispatch workloads: the PoC model (2 types, the paper's
+    motivating example) and the serving admission scenario (5 types —
+    a word space where the default hot set really is a subset)."""
+    from repro.core.program import Config
+    from repro.serving.scenarios import build_admission_program
+    from repro.serving.scenarios import initial_state as admission_state
+
+    num_events = 192 if quick else 768
+    rng = np.random.default_rng(0)
+    types = (rng.random(num_events) < 0.5).astype(int)
+
+    def build_poc(**kw):
+        # p_set = 0.5 and max_batch_len = 6: most windows contain a
+        # Set, and in a straight-line branch (switch/fused) everything
+        # before the last Set is dead code and everything after it
+        # runs on a compile-time constant — the paper's §I motivating
+        # optimization.  The masked per-lane path executes every
+        # Increment loop live, so the hot-word comparison measures
+        # exactly the cross-event scope fused dispatch preserves.
+        prog = poc.build_program(
+            iters=32,
+            config=Config(max_batch_len=6, capacity=num_events + 8),
+        )
+        for t, ty in enumerate(types):
+            prog.schedule(float(t), ("Increment", "Set")[int(ty)])
+        return prog.build(backend="device", **kw)
+
+    num_requests = 24 if quick else 96
+
+    def build_serving(**kw):
+        prog = build_admission_program(
+            num_slots=8, num_requests=num_requests, max_decode=5,
+            config=Config(max_batch_len=3, capacity=1024, max_emit=2),
+        )
+        return prog.build(backend="device", **kw)
+
+    return {
+        "poc": (build_poc, poc.initial_state),
+        "serving": (build_serving, lambda: admission_state(8)),
+    }
+
+
+def _time_sims_interleaved(sims, state0_fn, repeats):
+    """The `_time_engines_interleaved` protocol at the CompiledSim
+    level (dict states, re-runnable handles): label -> (median µs per
+    batch, samples)."""
+    for sim in sims.values():
+        for _ in range(2):  # compile + allocator warm-up
+            jax.block_until_ready(sim.run(state0_fn()).state)
+    samples = {label: [] for label in sims}
+    for _ in range(max(1, repeats)):
+        for label, sim in sims.items():
+            s0 = state0_fn()
+            t0 = time.perf_counter()
+            r = sim.run(s0)
+            jax.block_until_ready(r.state)
+            samples[label].append(
+                (time.perf_counter() - t0) / r.batches * 1e6)
+    return {label: (float(np.median(v)), v)
+            for label, v in samples.items()}
+
+
+def fused_dispatch(quick: bool = False, repeats: int = 5):
+    """Composition-specialized dispatch vs the masked and full-switch
+    paths — whole-run and per-dispatch (see module docstring)."""
+    from repro.core.composer import hot_words_from_counts
+
+    out = {}
+    for wl, (build, state0_fn) in _fused_workload_builders(quick).items():
+        sims = {mode: build(dispatch_mode=mode)
+                for mode in ("switch", "masked")}
+
+        # Profile pass on the generic modes, then specialize: the
+        # fused sim gets the top-W PROFILED words (the intended
+        # profile -> hot_words workflow), not the default dense-code
+        # prefix — the observed hot words need not be the short ones.
+        profiles = {m: sims[m].run(state0_fn()) for m in sims}
+        base = profiles["switch"]
+        hot = hot_words_from_counts(base.word_counts,
+                                    sims["switch"].engine.codec, 8)
+        sims["fused"] = build(dispatch_mode="fused", hot_words=hot)
+        profiles["fused"] = sims["fused"].run(state0_fn())
+        for m, r in profiles.items():
+            np.testing.assert_array_equal(r.word_counts,
+                                          base.word_counts, err_msg=m)
+        hot_code = int(np.argmax(base.word_counts))
+
+        timed = _time_sims_interleaved(sims, state0_fn, repeats)
+        per_batch = {m: t[0] for m, t in timed.items()}
+
+        # Per-dispatch microbenchmark on the hottest word, chained on
+        # the state (the same _bench_op_loop shape as the per-op split).
+        eng = sims["switch"].engine
+        word = tuple(eng.codec.decode(hot_code))
+        k = eng.max_batch_len
+        tys_np = np.zeros((k,), np.int32)
+        tys_np[: len(word)] = word
+        ts = jnp.asarray(np.arange(k, dtype=np.float32))
+        tys = jnp.asarray(tys_np)
+        args = jnp.zeros((k, ARG_WIDTH), jnp.float32)
+        length = jnp.int32(len(word))
+        code = jnp.int32(hot_code)
+        s0 = state0_fn()
+        eng_f = sims["fused"].engine
+        eng_m = sims["masked"].engine
+        # The window rides in the loop carry: closed-over arrays embed
+        # as jaxpr constants, XLA folds the dispatch switch on a
+        # constant index, and the "dispatch" loop would time only the
+        # branch body.
+        def _carried(fn):
+            def step(c):
+                s, code, ts, tys, args, length = c
+                return ((fn(s, code, ts, tys, args, length),)
+                        + c[1:])
+            return step
+
+        op_us = _bench_ops_interleaved({
+            "switch": _carried(
+                lambda s, c, ts, tys, args, n:
+                eng.dispatch(c, s, ts, tys, args)[0]),
+            "masked": _carried(
+                lambda s, c, ts, tys, args, n:
+                eng_m._dispatch_masked(s, ts, tys, args, n)[0]),
+            "fused": _carried(
+                lambda s, c, ts, tys, args, n:
+                eng_f._dispatch_fused(c, s, ts, tys, args, n)[0]),
+        }, (s0, code, ts, tys, args, length), 256)
+
+        out[wl] = {
+            "batches": base.batches,
+            "events": base.events,
+            "hot_word": list(word),
+            "hot_word_share": float(
+                base.word_counts[hot_code] / base.word_counts.sum()),
+            "num_hot_words": eng_f._dispatch_fused.num_hot,
+            "num_batch_words": eng.codec.num_batches,
+            "repeats": repeats,
+            "per_batch_us": per_batch,
+            "per_batch_samples_us": {m: t[1] for m, t in timed.items()},
+            "run_fused_over_masked":
+                per_batch["fused"] / per_batch["masked"],
+            "dispatch_op_us": op_us,
+            "dispatch_fused_over_masked": op_us["fused"] / op_us["masked"],
+        }
+    return {
+        "description": "dispatch modes on identical workloads: full "
+                       "switch over all words / generic per-lane masked "
+                       "path / top-W fused super-procedures with masked "
+                       "fallback; dispatch_op_us times the hottest "
+                       "profiled word per dispatch call",
+        "workloads": out,
+    }
+
+
+def _print_fused(fd):
+    for wl, row in fd["workloads"].items():
+        pb = row["per_batch_us"]
+        op = row["dispatch_op_us"]
+        print(f"  fused dispatch [{wl}] hot={row['hot_word']} "
+              f"({row['num_hot_words']}/{row['num_batch_words']} words "
+              f"hot): per-batch switch={pb['switch']:.1f}us "
+              f"masked={pb['masked']:.1f}us fused={pb['fused']:.1f}us | "
+              f"per-dispatch switch={op['switch']:.2f}us "
+              f"masked={op['masked']:.2f}us fused={op['fused']:.2f}us "
+              f"(fused/masked {row['dispatch_fused_over_masked']:.2f}x)")
+
+
+def _merge_fused_into_json(fd):
+    payload = json.loads(JSON_PATH.read_text()) if JSON_PATH.exists() \
+        else {}
+    payload["fused_dispatch"] = fd
+    JSON_PATH.write_text(json.dumps(payload, indent=2) + "\n")
+
+
+def _check_fused_baseline(fd, max_ratio: float) -> int:
+    """CI perf gate for the dispatch specialization: per workload, the
+    fused/masked per-dispatch ratio — host speed cancels, a fused-path
+    regression does not — must stay within ``max_ratio``× the recorded
+    ratio.  Returns a process exit code."""
+    if not JSON_PATH.exists():
+        print(f"baseline check: no {JSON_PATH.name}; nothing to compare")
+        return 1
+    base = json.loads(JSON_PATH.read_text()).get("fused_dispatch")
+    if not base:
+        print("baseline check: no recorded fused_dispatch section")
+        return 1
+    code = 0
+    for wl, row in fd["workloads"].items():
+        rec = base.get("workloads", {}).get(wl)
+        if not rec:
+            print(f"baseline check [{wl}]: not in recorded baseline; "
+                  "skipping")
+            continue
+        recorded = rec["dispatch_fused_over_masked"]
+        fresh = row["dispatch_fused_over_masked"]
+        limit = recorded * max_ratio
+        print(f"baseline check [{wl}]: fresh fused/masked {fresh:.2f}x "
+              f"vs recorded {recorded:.2f}x (limit {limit:.2f}x)")
+        if fresh > limit:
+            print(f"baseline check [{wl}]: FAIL — fused dispatch "
+                  f"regressed {fresh / recorded:.2f}x vs baseline")
+            code = 1
+    if code == 0:
+        print("baseline check: OK")
+    return code
+
+
 def _print_shards(sh):
     for cap, row in sh["capacities"].items():
         parts = " ".join(
@@ -701,8 +948,10 @@ def main(quick: bool = False, out: str | None = None, repeats: int = 5):
     sched = scheduling_overhead(quick=quick, repeats=repeats)
     sched["near_full"] = near_full(quick=quick, repeats=repeats)
     sched["shards_sweep"] = shards_sweep(quick=quick, repeats=repeats)
+    fd = fused_dispatch(quick=quick, repeats=repeats)
     r = run(quick=quick)
-    payload = {"host_vs_device": r, "scheduling_overhead": sched}
+    payload = {"host_vs_device": r, "scheduling_overhead": sched,
+               "fused_dispatch": fd}
     if out:
         Path(out).write_text(json.dumps(payload, indent=2) + "\n")
         print("wrote", out)
@@ -711,7 +960,12 @@ def main(quick: bool = False, out: str | None = None, repeats: int = 5):
         # recorded full-run perf baseline future PRs track.
         print("quick mode: not overwriting", JSON_PATH.name)
     else:
-        JSON_PATH.write_text(json.dumps(payload, indent=2) + "\n")
+        # Merge, don't overwrite: sections recorded by other suites
+        # (e.g. serving_fusion) live in the same file.
+        recorded = json.loads(JSON_PATH.read_text()) \
+            if JSON_PATH.exists() else {}
+        recorded.update(payload)
+        JSON_PATH.write_text(json.dumps(recorded, indent=2) + "\n")
     print("events,host_us_per_event,device_us_per_event,device_speedup")
     print(f"{r['events']},{r['host_us_per_event']:.1f},"
           f"{r['device_us_per_event']:.1f},{r['device_speedup']:.2f}")
@@ -736,6 +990,7 @@ def main(quick: bool = False, out: str | None = None, repeats: int = 5):
               f"tiered3={r3:.2f}x")
     _print_near_full(sched["near_full"])
     _print_shards(sched["shards_sweep"])
+    _print_fused(fd)
     if not quick:
         print(f"wrote {JSON_PATH}")
     r = dict(r)
@@ -755,16 +1010,21 @@ if __name__ == "__main__":
                     help="run just the sharded-engine sweep (shards "
                          "1/2/4, interleaved rounds) and merge it into "
                          "the recorded JSON baseline")
+    ap.add_argument("--fused-only", action="store_true",
+                    help="run just the dispatch-specialization "
+                         "comparison (switch/masked/fused) and merge it "
+                         "into the recorded JSON baseline")
     ap.add_argument("--repeats", type=int, default=5,
                     help="whole-run timing samples per measurement; the "
                          "recorded value is the median (raw samples are "
                          "kept alongside)")
     ap.add_argument("--check-baseline", type=float, default=None,
                     metavar="RATIO",
-                    help="with --near-full-only: compare the fresh "
-                         "tiered3 near-full median against the recorded "
-                         "baseline instead of merging; exit 1 if it "
-                         "exceeds RATIO x the baseline (CI perf gate)")
+                    help="with --near-full-only / --fused-only: compare "
+                         "the fresh medians (tiered3 near-full ratio / "
+                         "fused-over-masked dispatch ratio) against the "
+                         "recorded baseline instead of merging; exit 1 "
+                         "on a >RATIO x regression (CI perf gate)")
     ap.add_argument("--out", default=None,
                     help="also write results to this path (CI artifact)")
     args = ap.parse_args()
@@ -779,6 +1039,20 @@ if __name__ == "__main__":
         else:
             _merge_shards_into_json(sh)
             print("merged shards_sweep into", JSON_PATH.name)
+    elif args.fused_only:
+        fd = fused_dispatch(quick=args.quick, repeats=args.repeats)
+        _print_fused(fd)
+        if args.out:
+            Path(args.out).write_text(json.dumps({"fused_dispatch": fd},
+                                                 indent=2) + "\n")
+        if args.check_baseline is not None:
+            raise SystemExit(_check_fused_baseline(
+                fd, args.check_baseline))
+        if args.quick:
+            print("quick mode: not merging into", JSON_PATH.name)
+        else:
+            _merge_fused_into_json(fd)
+            print("merged fused_dispatch into", JSON_PATH.name)
     elif args.near_full_only:
         # The gate reads only the anchor — skip the capacity sweep.
         nf = near_full(quick=args.quick, repeats=args.repeats,

@@ -9,17 +9,28 @@ measured/s_max.
 Compilation is excluded from the timed region (the paper's measurements
 are post-compilation runtimes; compile cost is the subject of the
 separate compile_times benchmark).
+
+``--device`` runs the same grid on the on-device engine instead of the
+host scheduler, with ``--dispatch-mode`` selecting the dispatch path
+(DESIGN.md §7) — ``both`` (default) runs masked AND fused on identical
+event streams, so the recorded rows are a direct fused-vs-masked
+comparison on the Fig-3 workload.  Results merge into
+``BENCH_device_engine.json`` under ``poc_speedup_device``.
 """
 
 from __future__ import annotations
 
+import json
 import time
+from pathlib import Path
 
 import jax
 import numpy as np
 
 from repro import poc
 from repro.core import Simulator
+
+JSON_PATH = Path(__file__).resolve().parents[1] / "BENCH_device_engine.json"
 
 # Paper values: 1e6-iteration Increment loops, so handler compute
 # dominates per-event dispatch (~60us here) and the measured speedup is
@@ -80,6 +91,101 @@ def run(quick: bool = False):
     return rows
 
 
+def run_device(quick: bool = False, dispatch_modes=("masked", "fused"),
+               repeats: int = 3):
+    """The Fig-3 grid on the on-device engine, per dispatch mode.
+
+    Speedup is batched (max_batch_len = n) over unbatched
+    (max_batch_len = 1) with the SAME dispatch mode on the SAME event
+    stream, so the batching win is isolated from the dispatch-path
+    choice; across modes the batched runtimes themselves compare fused
+    vs masked on identical workloads (``fused_over_masked_runtime``).
+    """
+    from repro.core.program import Config
+
+    # Smaller than the host Fig-3 grid on purpose: the unbatched
+    # (n = 1) leg pays one device dispatch per event, so the full host
+    # sizes would run for hours; the fused-vs-masked ratio this grid
+    # exists for is size-stable well below that.
+    iters = 20_000 if quick else 50_000
+    lengths = (2, 4) if quick else (2, 4, 8)
+    ps_values = (0.25, 0.5) if quick else (0.05, 0.5)
+    num_events = 64
+
+    def build(types, n, mode):
+        prog = poc.build_program(
+            iters=iters,
+            config=Config(max_batch_len=n, capacity=num_events + 8),
+        )
+        for t, ty in enumerate(types):
+            prog.schedule(float(t), ("Increment", "Set")[int(ty)])
+        return prog.build(backend="device", dispatch_mode=mode)
+
+    def timed(sim, state0):
+        sim.run(state0)  # compile
+        best = float("inf")
+        for _ in range(max(1, repeats)):
+            t0 = time.perf_counter()
+            r = sim.run(state0)
+            jax.block_until_ready(r.state)
+            best = min(best, time.perf_counter() - t0)
+        return best, r
+
+    rows = []
+    for p_s in ps_values:
+        rng = np.random.default_rng(SEEDS[0])
+        types = [int(x) for x in (rng.random(num_events) < p_s)]
+        oracle = poc.reference_final_sum(types, iters)
+        for n in lengths:
+            batched_t = {}
+            for mode in dispatch_modes:
+                t1, r1 = timed(build(types, 1, mode),
+                               poc.initial_state())
+                tn, rn = timed(build(types, n, mode),
+                               poc.initial_state())
+                assert int(r1.state) == int(rn.state) == oracle
+                batched_t[mode] = tn
+                smax = poc.s_max(n, 1.0 - p_s)
+                rows.append({
+                    "dispatch_mode": mode, "p_s": p_s, "n": n,
+                    "speedup": t1 / tn, "s_max": smax,
+                    "fraction_of_bound": (t1 / tn) / smax,
+                    "batched_seconds": tn,
+                })
+            if "masked" in batched_t and "fused" in batched_t:
+                rows[-1]["fused_over_masked_runtime"] = (
+                    batched_t["fused"] / batched_t["masked"])
+    ratios = [r["fused_over_masked_runtime"] for r in rows
+              if "fused_over_masked_runtime" in r]
+    return {
+        "iters": iters,
+        "num_events": num_events,
+        "repeats": repeats,
+        "rows": rows,
+        "median_fused_over_masked_runtime":
+            float(np.median(ratios)) if ratios else None,
+    }
+
+
+def _merge_device_into_json(dev):
+    payload = json.loads(JSON_PATH.read_text()) if JSON_PATH.exists() \
+        else {}
+    payload["poc_speedup_device"] = dev
+    JSON_PATH.write_text(json.dumps(payload, indent=2) + "\n")
+
+
+def _print_device(dev):
+    print("dispatch_mode,p_s,n,measured_speedup,s_max,fused_over_masked")
+    for r in dev["rows"]:
+        fm = r.get("fused_over_masked_runtime")
+        tail = f"{fm:.3f}" if fm is not None else "-"
+        print(f"{r['dispatch_mode']},{r['p_s']},{r['n']},"
+              f"{r['speedup']:.3f},{r['s_max']:.3f},{tail}")
+    med = dev["median_fused_over_masked_runtime"]
+    if med is not None:
+        print(f"median fused/masked batched runtime: {med:.3f}x")
+
+
 def main(quick: bool = False):
     rows = run(quick=quick)
     print("p_s,n,measured_speedup,s_max,fraction_of_bound")
@@ -90,4 +196,33 @@ def main(quick: bool = False):
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--device", action="store_true",
+                    help="run the grid on the on-device engine instead "
+                         "of the host scheduler")
+    ap.add_argument("--dispatch-mode", default="both",
+                    choices=["switch", "masked", "fused", "both"],
+                    help="device dispatch path; 'both' = masked AND "
+                         "fused on identical streams (the recorded "
+                         "comparison)")
+    ap.add_argument("--out", default=None,
+                    help="also write device results to this path")
+    args = ap.parse_args()
+    if args.device:
+        modes = (("masked", "fused") if args.dispatch_mode == "both"
+                 else (args.dispatch_mode,))
+        dev = run_device(quick=args.quick, dispatch_modes=modes)
+        _print_device(dev)
+        if args.out:
+            Path(args.out).write_text(
+                json.dumps({"poc_speedup_device": dev}, indent=2) + "\n")
+        if args.quick:
+            print("quick mode: not merging into", JSON_PATH.name)
+        else:
+            _merge_device_into_json(dev)
+            print("merged poc_speedup_device into", JSON_PATH.name)
+    else:
+        main(quick=args.quick)

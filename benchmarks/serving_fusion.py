@@ -9,7 +9,9 @@ Fig 3.
 
 from __future__ import annotations
 
+import json
 import time
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -17,6 +19,8 @@ import jax.numpy as jnp
 from repro.configs import get_config
 from repro.models import LM
 from repro.serving.engine import ServingEngine
+
+JSON_PATH = Path(__file__).resolve().parents[1] / "BENCH_device_engine.json"
 
 
 def run(quick: bool = False):
@@ -55,13 +59,43 @@ def run(quick: bool = False):
             for k, v in sorted(results.items())]
 
 
-def main(quick: bool = False):
+def _merge_into_json(rows):
+    """Record the fusion curve next to the engine perf trajectory in
+    BENCH_device_engine.json (the one perf file future PRs track)."""
+    payload = json.loads(JSON_PATH.read_text()) if JSON_PATH.exists() \
+        else {}
+    payload["serving_fusion"] = {
+        "description": "fused k-step decode program vs k single-step "
+                       "dispatches (reduced stablelm config); the "
+                       "serving analogue of Fig 3",
+        "rows": rows,
+    }
+    JSON_PATH.write_text(json.dumps(payload, indent=2) + "\n")
+
+
+def main(quick: bool = False, out: str | None = None):
     rows = run(quick=quick)
     print("fused_k,us_per_decode_event,speedup_vs_single")
     for r in rows:
         print(f"{r['k']},{r['us_per_event']:.1f},{r['speedup_vs_k1']:.2f}")
+    if out:
+        Path(out).write_text(
+            json.dumps({"serving_fusion": rows}, indent=2) + "\n")
+        print("wrote", out)
+    if quick:
+        print("quick mode: not merging into", JSON_PATH.name)
+    else:
+        _merge_into_json(rows)
+        print("merged serving_fusion into", JSON_PATH.name)
     return rows
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default=None,
+                    help="also write results to this path (CI artifact)")
+    args = ap.parse_args()
+    main(quick=args.quick, out=args.out)

@@ -22,6 +22,27 @@ Three composition strategies:
   program containing ``lax.switch`` over every composed batch, used by
   the fully on-device scheduler (no host round-trip per batch).
 
+On-device dispatch additionally comes in two specialized shapes
+(DESIGN.md §7, selected by ``DeviceEngine(dispatch_mode=...)``):
+
+* :func:`build_masked_dispatcher` — the generic per-handler-scope
+  baseline: one masked per-lane ``lax.switch`` over the T event types
+  (plus a no-op leg) per window lane.  Compile cost is O(T · max_len)
+  regardless of the batch-word count, but XLA sees each handler alone —
+  no cross-event scope.
+* :func:`build_fused_dispatcher` — the two-level composition-
+  specialized path: the top-W *hot* batch words are AOT-composed into
+  straight-line "super-procedures" (no masks, no per-type legs —
+  handlers inlined back-to-back exactly like the full switch's
+  branches, so XLA fuses/DCEs across event boundaries), reached
+  through a bounded ``lax.switch`` over W+1 branches via a
+  code→slot lookup table; every other word falls back to the masked
+  path.  Compile cost is W-linear (guarded by
+  ``benchmarks/compile_times.py``), and because hot branches, full-
+  switch branches, and the masked path all execute the identical
+  handler sequence, all three modes are bit-identical
+  (``tests/_parity.py``).
+
 Handlers follow the conventions of :mod:`repro.core.events`.  Emitted
 events are buffered and returned to the caller *after* the whole batch
 has run — the paper's §IV.D "postponing the scheduling of all new events
@@ -39,6 +60,7 @@ from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.events import ARG_WIDTH, EventRegistry, normalize_handler_result
 from repro.core.codec import DenseCodec, PaperCodec, make_codec
@@ -88,6 +110,11 @@ class _ComposerBase:
         self._words: dict[int, tuple[int, ...]] = {}
         self.compile_seconds: dict[int, float] = {}
         self.trace_count = 0
+        # Per-word execution histogram (code -> dispatch count): the
+        # host-side profiling source for hot-word selection
+        # (:func:`hot_words_from_counts`); the device engine keeps the
+        # equivalent histogram in its run stats (``word_counts``).
+        self.execute_counts: dict[int, int] = {}
 
     def word_for(self, code: int) -> tuple[int, ...]:
         if code not in self._words:
@@ -113,6 +140,7 @@ class _ComposerBase:
 
     def execute(self, code: int, state, ts, args):
         """Run batch ``code``; returns (state, emitted_events)."""
+        self.execute_counts[code] = self.execute_counts.get(code, 0) + 1
         return self.program(code)(state, ts, args)
 
     @property
@@ -167,6 +195,7 @@ class EagerComposer(_ComposerBase):
         return compiled
 
     def execute(self, code, state, ts, args):
+        self.execute_counts[code] = self.execute_counts.get(code, 0) + 1
         prog = self._programs[code]
         if self.aot:
             return prog(state, list(ts), list(args))
@@ -179,8 +208,65 @@ class LazyComposer(_ComposerBase):
 
 
 # ---------------------------------------------------------------------------
-# On-device dispatcher (TPU-native runtime, DESIGN.md §2)
+# On-device dispatchers (TPU-native runtime, DESIGN.md §2 and §7)
 # ---------------------------------------------------------------------------
+
+def _emit_layout(max_len: int, max_emit: int):
+    """Shared on-device emit-block layout: ``emits`` is
+    ``f32[max_len * max_emit, 2 + ARG_WIDTH]`` rows of
+    ``(time, type, arg...)``, event ``i`` owning rows
+    ``[i*max_emit, (i+1)*max_emit)``; ``type == -1`` marks empty slots.
+    Every dispatcher flavor writes this exact layout, which is what
+    makes them interchangeable (and bit-comparable) to the engine."""
+    emit_rows = max_len * max_emit
+    emit_width = 2 + ARG_WIDTH
+
+    def empty_emits():
+        e = jnp.zeros((emit_rows, emit_width), jnp.float32)
+        return e.at[:, 1].set(-1.0)
+
+    return emit_rows, emit_width, empty_emits
+
+
+def make_word_branch(registry: EventRegistry, word: Sequence[int], *,
+                     max_emit: int, emit_width: int,
+                     empty_emits: Callable) -> Callable:
+    """The composed straight-line program of one batch word: handlers
+    applied back-to-back with no masks or per-type legs, each emitting
+    into its own fixed row block — the paper's contiguous batch
+    procedure.  Used verbatim as a full-switch branch AND as a fused
+    hot-word super-procedure."""
+    types = [registry[t] for t in word]
+
+    def branch(state, ts, args):
+        emits = empty_emits()
+        for i, et in enumerate(types):
+            result = et.handler(state, ts[i], args[i])
+            if et.returns_events:
+                state, new = result
+                new = jnp.asarray(new, jnp.float32)
+                if new.shape != (max_emit, emit_width):
+                    raise ValueError(
+                        f"on-device handler {et.name} must emit "
+                        f"f32[{max_emit}, {emit_width}], got {new.shape}"
+                    )
+                emits = jax.lax.dynamic_update_slice(
+                    emits, new, (i * max_emit, 0)
+                )
+            else:
+                state = result
+        return state, emits
+
+    return branch
+
+
+def _require_dense(codec, what: str):
+    if not isinstance(codec, DenseCodec):
+        raise TypeError(
+            f"{what} requires the DenseCodec (contiguous ids); "
+            "the PaperCodec's redundant ids would blow up the switch."
+        )
+
 
 def build_switch_dispatcher(
     registry: EventRegistry,
@@ -210,49 +296,19 @@ def build_switch_dispatcher(
     batch body as a contiguous fragment — the paper's cross-event scope —
     while the simulation main loop never leaves the device.
     """
-    if not isinstance(codec, DenseCodec):
-        raise TypeError(
-            "on-device dispatch requires the DenseCodec (contiguous ids); "
-            "the PaperCodec's redundant ids would blow up the switch."
-        )
+    _require_dense(codec, "on-device dispatch")
     if not registry.frozen:
         registry.freeze()
     max_len = codec.max_len
-    emit_rows = max_len * max_emit
-    emit_width = 2 + ARG_WIDTH
-
-    def _empty_emits():
-        e = jnp.zeros((emit_rows, emit_width), jnp.float32)
-        return e.at[:, 1].set(-1.0)
-
-    def make_branch(word):
-        types = [registry[t] for t in word]
-
-        def branch(state, ts, args):
-            emits = _empty_emits()
-            for i, et in enumerate(types):
-                result = et.handler(state, ts[i], args[i])
-                if et.returns_events:
-                    state, new = result
-                    new = jnp.asarray(new, jnp.float32)
-                    if new.shape != (max_emit, emit_width):
-                        raise ValueError(
-                            f"on-device handler {et.name} must emit "
-                            f"f32[{max_emit}, {emit_width}], got {new.shape}"
-                        )
-                    emits = jax.lax.dynamic_update_slice(
-                        emits, new, (i * max_emit, 0)
-                    )
-                else:
-                    state = result
-            return state, emits
-
-        return branch
+    emit_rows, emit_width, _empty_emits = _emit_layout(max_len, max_emit)
 
     branches = []
     for code, word in codec.enumerate_words():
         del code
-        branches.append(make_branch(word))
+        branches.append(make_word_branch(
+            registry, word, max_emit=max_emit, emit_width=emit_width,
+            empty_emits=_empty_emits,
+        ))
 
     def dispatch(code, state, ts, types, args):
         del types  # engine bookkeeping only; the word is baked per branch
@@ -267,3 +323,197 @@ def build_switch_dispatcher(
     # the bulk scatter insert) that need a no-emission block.
     dispatch.empty_emits = _empty_emits
     return dispatch
+
+
+def build_masked_dispatcher(
+    registry: EventRegistry,
+    codec: DenseCodec,
+    *,
+    max_emit: int = 2,
+):
+    """The generic masked window path: per-handler compiler scope.
+
+    ``dispatch(state, ts, types, args, length) -> (state, emits)``
+    applies, for each lane ``i < max_len``, a masked ``lax.switch`` over
+    the T registered handlers plus a no-op leg (selected for padding
+    lanes ``i >= length``).  Emitting handlers write their rows at
+    ``i * max_emit`` — byte-identical emit layout to the composed word
+    branches, and the handler sequence for any window is identical too,
+    so this path is bit-equivalent to the full switch while compiling
+    only O(T · max_len) handler bodies instead of Σ Tᵏ.
+
+    This is the XLA analog of the paper's per-handler dispatch baseline
+    (each handler is optimized alone; no cross-event scope) and the
+    fallback leg of :func:`build_fused_dispatcher`.
+    """
+    _require_dense(codec, "on-device dispatch")
+    if not registry.frozen:
+        registry.freeze()
+    max_len = codec.max_len
+    num_types = len(registry)
+    emit_rows, emit_width, _empty_emits = _emit_layout(max_len, max_emit)
+
+    def make_lane_legs(i):
+        def make_leg(et):
+            def leg(state, emits, ts, args):
+                result = et.handler(state, ts[i], args[i])
+                if et.returns_events:
+                    state, new = result
+                    new = jnp.asarray(new, jnp.float32)
+                    if new.shape != (max_emit, emit_width):
+                        raise ValueError(
+                            f"on-device handler {et.name} must emit "
+                            f"f32[{max_emit}, {emit_width}], got {new.shape}"
+                        )
+                    emits = jax.lax.dynamic_update_slice(
+                        emits, new, (i * max_emit, 0)
+                    )
+                else:
+                    state = result
+                return state, emits
+
+            return leg
+
+        def noop(state, emits, ts, args):
+            del ts, args
+            return state, emits
+
+        return [make_leg(registry[t]) for t in range(num_types)] + [noop]
+
+    lane_legs = [make_lane_legs(i) for i in range(max_len)]
+
+    def dispatch(state, ts, types, args, length):
+        emits = _empty_emits()
+        for i in range(max_len):
+            idx = jnp.where(
+                jnp.int32(i) < length,
+                jnp.clip(types[i], 0, num_types - 1),
+                jnp.int32(num_types),
+            )
+            state, emits = jax.lax.switch(
+                idx, lane_legs[i], state, emits, ts, args
+            )
+        return state, emits
+
+    dispatch.num_batches = codec.num_batches
+    dispatch.max_len = max_len
+    dispatch.max_emit = max_emit
+    dispatch.emit_rows = emit_rows
+    dispatch.emit_width = emit_width
+    dispatch.empty_emits = _empty_emits
+    return dispatch
+
+
+def build_fused_dispatcher(
+    registry: EventRegistry,
+    codec: DenseCodec,
+    hot_words: Sequence[Sequence[int]],
+    *,
+    max_emit: int = 2,
+):
+    """Two-level composition-specialized dispatch (DESIGN.md §7).
+
+    The W declared/profiled *hot* batch words are composed into
+    straight-line super-procedures (:func:`make_word_branch` — the same
+    fused bodies the full switch uses, so XLA optimizes across event
+    boundaries, the paper's §III scope win) and reached through a
+    bounded ``lax.switch`` over W+1 branches: an ``i32[num_batches]``
+    lookup table maps each Horner code to its hot slot, with slot W —
+    every non-hot word — falling back to the generic masked path
+    (:func:`build_masked_dispatcher`).
+
+    ``dispatch(code, state, ts, types, args, length) -> (state, emits)``.
+    Compile cost is W-linear plus the constant masked fallback
+    (``benchmarks/compile_times.py`` guards this); results are
+    bit-identical to both other modes for every window, hot or not.
+
+    Attributes: ``hot_words`` (the deduplicated tuple actually baked
+    in), ``num_hot``, ``hot_slot_table`` (the numpy code→slot table;
+    slot ``num_hot`` = fallback), plus the shared layout attrs.
+    """
+    _require_dense(codec, "fused dispatch")
+    if not registry.frozen:
+        registry.freeze()
+    max_len = codec.max_len
+    num_types = len(registry)
+    emit_rows, emit_width, _empty_emits = _emit_layout(max_len, max_emit)
+
+    seen: dict[tuple[int, ...], None] = {}
+    for w in hot_words:
+        word = tuple(int(t) for t in w)
+        if not 1 <= len(word) <= max_len:
+            raise ValueError(
+                f"hot word {word} has length {len(word)}; expected "
+                f"1..{max_len} (= max_batch_len)"
+            )
+        for t in word:
+            if not 0 <= t < num_types:
+                raise ValueError(
+                    f"hot word {word} names type id {t}; registry has "
+                    f"{num_types} types"
+                )
+        seen.setdefault(word, None)
+    hot = tuple(seen)
+
+    fallback = build_masked_dispatcher(registry, codec, max_emit=max_emit)
+
+    def make_hot(word):
+        branch = make_word_branch(
+            registry, word, max_emit=max_emit, emit_width=emit_width,
+            empty_emits=_empty_emits,
+        )
+
+        def hot_branch(state, ts, types, args, length):
+            del types, length  # the word (and its length) is baked in
+            return branch(state, ts, args)
+
+        return hot_branch
+
+    def fallback_branch(state, ts, types, args, length):
+        return fallback(state, ts, types, args, length)
+
+    branches = [make_hot(w) for w in hot] + [fallback_branch]
+
+    table = np.full((codec.num_batches,), len(hot), np.int32)
+    for slot, word in enumerate(hot):
+        table[codec.encode(list(word))] = slot
+    table_j = jnp.asarray(table)
+
+    def dispatch(code, state, ts, types, args, length):
+        slot = table_j[jnp.clip(code, 0, codec.num_batches - 1)]
+        return jax.lax.switch(slot, branches, state, ts, types, args,
+                              length)
+
+    dispatch.hot_words = hot
+    dispatch.num_hot = len(hot)
+    dispatch.hot_slot_table = table
+    dispatch.num_batches = codec.num_batches
+    dispatch.max_len = max_len
+    dispatch.max_emit = max_emit
+    dispatch.emit_rows = emit_rows
+    dispatch.emit_width = emit_width
+    dispatch.empty_emits = _empty_emits
+    return dispatch
+
+
+def hot_words_from_counts(counts, codec, top_w: int):
+    """Top-W batch words by observed frequency — the profile half of
+    "profile or statically declare".
+
+    ``counts`` is either the device engine's per-word histogram
+    (``RunResult.word_counts`` / run stats ``word_counts``, an array
+    over dense codes) or a host composer's ``execute_counts`` dict.
+    Returns a list of word tuples suitable for
+    ``DeviceEngine(hot_words=...)`` / ``build(..., hot_words=...)``;
+    ties break toward the smaller code so the selection is
+    deterministic.  Words never observed are never selected.
+    """
+    if hasattr(counts, "items"):
+        pairs = list(counts.items())
+    else:
+        pairs = list(enumerate(np.asarray(counts).reshape(-1).tolist()))
+    ranked = sorted(
+        ((int(n), int(code)) for code, n in pairs if int(n) > 0),
+        key=lambda p: (-p[0], p[1]),
+    )
+    return [tuple(codec.decode(code)) for _, code in ranked[:int(top_w)]]

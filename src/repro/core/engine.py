@@ -73,6 +73,8 @@ from repro.core.codec import DenseCodec, PaperCodec, make_codec
 from repro.core.composer import (
     EagerComposer,
     LazyComposer,
+    build_fused_dispatcher,
+    build_masked_dispatcher,
     build_switch_dispatcher,
 )
 from repro.core.events import EventRegistry
@@ -174,6 +176,14 @@ class Simulator:
 # On-device engine
 # ---------------------------------------------------------------------------
 
+# Default hot-set width for dispatch_mode="fused" without declared
+# hot_words, and the num_batches ceiling for carrying the per-word
+# batch-count histogram in the run stats (beyond it the i32[num_batches]
+# carry would dominate the loop state for pathological alphabets).
+_DEFAULT_HOT_W = 32
+_WORD_COUNT_LIMIT = 4096
+
+
 @dataclasses.dataclass
 class DeviceEngine:
     """Builder for the single-program on-device simulation.
@@ -207,6 +217,28 @@ class DeviceEngine:
     scale with ``max_batch_len`` and ``max_emit`` and are clamped to
     valid ranges.
 
+    ``dispatch_mode`` selects how an extracted window reaches its
+    handlers (DESIGN.md §7; all three are bit-identical):
+
+    * ``"switch"`` (default) — one ``lax.switch`` over ALL composed
+      batch words; maximal cross-event scope, compile cost Σ Tᵏ.
+    * ``"masked"`` — the generic per-lane masked path (per-handler
+      scope; O(T·max_batch_len) compile, no cross-event optimization).
+    * ``"fused"`` — two-level: the top-W *hot* words (``hot_words``,
+      or a profiled histogram via
+      :func:`repro.core.composer.hot_words_from_counts`; default: the
+      first ``32`` dense codes) run as straight-line super-procedures
+      behind a bounded W+1-way switch, everything else falls back to
+      the masked path.  W-linear compile, hot windows keep the full
+      cross-event scope.
+
+    ``queue_kernels`` selects the tiered3 front-tier hot-loop
+    implementation: ``"xla"`` (default — the all-pairs-rank + gather
+    shapes tuned for XLA:CPU) or ``"pallas"`` (Pallas kernels in
+    ``repro.kernels.queue_front`` keeping the window extract and the
+    front counting-merge in VMEM; interpret mode off-TPU, bit-identical
+    output, requires ``queue_mode="tiered3"``).
+
     ``entity_handlers`` maps a type_id to an entity-local handler
     ``(entity_state, t, arg) -> entity_state`` over slices of the state
     pytree (leading axis = entity).  When an extracted window is a
@@ -227,6 +259,9 @@ class DeviceEngine:
     front_cap: int | None = None
     stage_cap: int | None = None
     num_runs: int | None = None
+    dispatch_mode: str = "switch"
+    hot_words: Any = None
+    queue_kernels: str = "xla"
     entity_handlers: Mapping[int, Callable] | None = None
     # Removed 2024-era flag; kept as an InitVar so old call sites get a
     # pointer at queue_mode instead of a generic unexpected-kwarg error.
@@ -248,6 +283,27 @@ class DeviceEngine:
                 f"unknown queue_mode {self.queue_mode!r}; expected "
                 "'tiered', 'tiered3', 'flat', or 'reference'"
             )
+        if self.dispatch_mode not in ("switch", "masked", "fused"):
+            raise ValueError(
+                f"unknown dispatch_mode {self.dispatch_mode!r}; expected "
+                "'switch', 'masked', or 'fused'"
+            )
+        if self.hot_words is not None and self.dispatch_mode != "fused":
+            raise ValueError(
+                "hot_words only applies to dispatch_mode='fused' "
+                f"(got dispatch_mode={self.dispatch_mode!r})"
+            )
+        if self.queue_kernels not in ("xla", "pallas"):
+            raise ValueError(
+                f"unknown queue_kernels {self.queue_kernels!r}; expected "
+                "'xla' or 'pallas'"
+            )
+        if self.queue_kernels == "pallas" and self.queue_mode != "tiered3":
+            raise ValueError(
+                "queue_kernels='pallas' requires queue_mode='tiered3' "
+                f"(got {self.queue_mode!r}): the Pallas kernels implement "
+                "the tiered3 front-tier hot loops"
+            )
         # Tier sizing: the rare O(capacity) paths (front refill, staging
         # flush) amortize over ~front_cap/max_batch_len resp.
         # ~stage_cap/emit_rows batches, so both tiers default to many
@@ -265,8 +321,42 @@ class DeviceEngine:
             self.num_runs = 8
         self.num_runs = max(self.num_runs, 1)
         self.codec = DenseCodec(len(self.registry), self.max_batch_len)
+        # The full-enumeration switch is always available (it is the
+        # "switch"-mode path and the attribute contract benchmarks
+        # probe); building it only constructs Python closures — nothing
+        # is traced until a mode actually dispatches through it.
         self.dispatch = build_switch_dispatcher(
             self.registry, self.codec, max_emit=self.max_emit
+        )
+        self._dispatch_masked = None
+        self._dispatch_fused = None
+        if self.dispatch_mode == "masked":
+            self._dispatch_masked = build_masked_dispatcher(
+                self.registry, self.codec, max_emit=self.max_emit
+            )
+        elif self.dispatch_mode == "fused":
+            hot = self.hot_words
+            if hot is None:
+                # No profile declared: bake the first W dense codes
+                # (shortest words first — deterministic, and small
+                # alphabets degenerate to the full switch).  Real
+                # deployments should pass profiled hot_words
+                # (composer.hot_words_from_counts over a prior run's
+                # ``word_counts``).
+                hot = [
+                    self.codec.decode(c)
+                    for c in range(min(self.codec.num_batches,
+                                       _DEFAULT_HOT_W))
+                ]
+            self._dispatch_fused = build_fused_dispatcher(
+                self.registry, self.codec, hot, max_emit=self.max_emit
+            )
+            self.hot_words = self._dispatch_fused.hot_words
+        # Per-word batch histogram in the run stats (hot-word profiling
+        # + benchmarks/batch_counts.py), gated so a pathological
+        # alphabet cannot blow up the while-loop carry.
+        self._track_word_counts = (
+            self.codec.num_batches <= _WORD_COUNT_LIMIT
         )
         self._lookaheads = self.registry.lookaheads()
         if self.entity_handlers:
@@ -308,6 +398,9 @@ class DeviceEngine:
                      front_cap: int | None = None,
                      stage_cap: int | None = None,
                      num_runs: int | None = None,
+                     dispatch_mode: str = "switch",
+                     hot_words=None,
+                     queue_kernels: str = "xla",
                      t_end: float = float("inf")) -> "DeviceEngine":
         """Construct the device backend from a frozen SimProgram.
 
@@ -330,6 +423,9 @@ class DeviceEngine:
             front_cap=front_cap,
             stage_cap=stage_cap,
             num_runs=num_runs,
+            dispatch_mode=dispatch_mode,
+            hot_words=hot_words,
+            queue_kernels=queue_kernels,
             entity_handlers=program.device_entity_handlers() or None,
         )
 
@@ -358,7 +454,8 @@ class DeviceEngine:
             )
         if self.queue_mode == "tiered3":
             return tiered3_queue_extract(
-                queue, self.max_batch_len, self._lookaheads, t_cap
+                queue, self.max_batch_len, self._lookaheads, t_cap,
+                kernels=self.queue_kernels,
             )
         if self.queue_mode == "flat":
             return device_queue_extract(
@@ -370,9 +467,20 @@ class DeviceEngine:
 
     # -- dispatch -------------------------------------------------------------
     def _dispatch_window(self, state, ts, tys, args, length):
-        """Dispatch one extracted window; returns (state, emits)."""
+        """Dispatch one extracted window; returns (state, emits).
+
+        The composed path is selected by ``dispatch_mode``; all three
+        execute the identical handler sequence for any window, so the
+        choice never changes results (parity-pinned).
+        """
         def switch_path(state):
+            if self.dispatch_mode == "masked":
+                return self._dispatch_masked(state, ts, tys, args, length)
             code = self.codec.encode_jnp(tys, length)
+            if self.dispatch_mode == "fused":
+                return self._dispatch_fused(
+                    code, state, ts, tys, args, length
+                )
             return self.dispatch(code, state, ts, tys, args)
 
         if not self._run_branches:
@@ -403,7 +511,9 @@ class DeviceEngine:
     def _run(self, state, queue, t_end, *, max_batches: int):
         inserts = {
             "tiered": tiered_queue_fill_rows,
-            "tiered3": tiered3_queue_fill_rows,
+            "tiered3": lambda q, rows: tiered3_queue_fill_rows(
+                q, rows, kernels=self.queue_kernels
+            ),
             "flat": device_queue_fill_rows,
             "reference": device_queue_push_rows,
         }
@@ -454,6 +564,11 @@ class DeviceEngine:
                 "events": stats["events"] + length,
                 "time": jnp.maximum(stats["time"], last_t),
             }
+            if self._track_word_counts:
+                # Per-word histogram (XLA CSEs the encode against the
+                # dispatch path's — same pure computation).
+                code = self.codec.encode_jnp(tys, length)
+                stats["word_counts"] = carry[2]["word_counts"].at[code].add(1)
             return state, queue, stats
 
         stats0 = {
@@ -461,6 +576,10 @@ class DeviceEngine:
             "events": jnp.int32(0),
             "time": jnp.float32(0.0),
         }
+        if self._track_word_counts:
+            stats0["word_counts"] = jnp.zeros(
+                (self.codec.num_batches,), jnp.int32
+            )
         return jax.lax.while_loop(cond, body, (state, queue, stats0))
 
     def run(self, state,
@@ -472,6 +591,10 @@ class DeviceEngine:
         recompiling (it is a traced argument): the extraction window is
         capped at it, so exactly the events with timestamp <= t_end
         execute and later ones stay queued.
+
+        Stats carry ``word_counts`` (i32[num_batches], batches per
+        Horner word — the fused-dispatch profiling source) whenever the
+        code space is small enough to track.
         """
         t_end = self.t_end if t_end is None else t_end
         state, queue, stats = self._run_jit(

@@ -202,6 +202,14 @@ class RunResult:
     thing on every backend (``dropped`` is always 0 on the host's
     unbounded heap; ``rollbacks`` is only nonzero under the speculative
     scheduler).  ``raw`` keeps the backend-native stats object.
+
+    ``word_counts`` (device backends, when the code space is small
+    enough to track) is the per-word batch histogram: entry ``c`` is
+    the number of executed batches whose Horner composition code was
+    ``c`` — the observable profiling source for
+    ``build(..., dispatch_mode="fused", hot_words=...)`` hot-word
+    selection (see :func:`repro.core.composer.hot_words_from_counts`);
+    ``None`` on host backends.
     """
 
     state: Any
@@ -211,6 +219,7 @@ class RunResult:
     final_time: float
     rollbacks: int = 0
     raw: Any = None
+    word_counts: Any = None
 
     @property
     def mean_batch_length(self) -> float:
@@ -389,6 +398,9 @@ class SimProgram:
               capacity: int | None = None,
               front_cap: int | None = None, stage_cap: int | None = None,
               num_runs: int | None = None,
+              dispatch_mode: str = "switch",
+              hot_words: Sequence | None = None,
+              queue_kernels: str = "xla",
               state_spec=None, arg_spec=None,
               check_causality: bool = False,
               window_slack: float = float("inf"),
@@ -403,7 +415,17 @@ class SimProgram:
         :class:`~repro.core.sharded.ShardedDeviceEngine`,
         bit-identical to the single queue (DESIGN.md §5.1) —
         entity-parallel types route by their entity index
-        (``arg[0]``) by default.  ``backend="host"`` honors
+        (``arg[0]``) by default.  ``dispatch_mode`` selects the window
+        dispatch path (``"switch"``: one switch over every composed
+        word; ``"masked"``: the generic per-lane path; ``"fused"``:
+        top-W hot-word super-procedures + masked fallback, DESIGN.md
+        §7) — all three bit-identical; ``hot_words`` declares the
+        fused hot set as sequences of type names or ids (default: the
+        first 32 dense codes; profile a run's
+        ``RunResult.word_counts`` for a real selection).
+        ``queue_kernels="pallas"`` swaps the tiered3 front-tier hot
+        loops for the Pallas kernels (interpret mode off-TPU).
+        ``backend="host"`` honors
         ``scheduler`` and ``composer`` (+ eager specs / causality /
         slack knobs).  Passing a knob that the selected backend does
         not read is an error, not a silent default — a mis-targeted
@@ -441,6 +463,14 @@ class SimProgram:
                 )
             if shard_fn is not None and shards is None:
                 raise ValueError("shard_fn requires shards=N")
+            if hot_words is not None:
+                # Type names are the API-level spelling; the engines
+                # take ids.
+                hot_words = [
+                    tuple(self.type_id(t) if isinstance(t, str) else int(t)
+                          for t in word)
+                    for word in hot_words
+                ]
             if shards is not None:
                 if queue_mode != "tiered3":
                     raise ValueError(
@@ -452,6 +482,8 @@ class SimProgram:
                     self, shards=shards, shard_fn=shard_fn,
                     capacity=capacity, front_cap=front_cap,
                     stage_cap=stage_cap, num_runs=num_runs,
+                    dispatch_mode=dispatch_mode, hot_words=hot_words,
+                    queue_kernels=queue_kernels,
                 )
                 return CompiledSim(
                     self, backend="device", engine=engine,
@@ -461,6 +493,8 @@ class SimProgram:
                 self, queue_mode=queue_mode, capacity=capacity,
                 front_cap=front_cap, stage_cap=stage_cap,
                 num_runs=num_runs,
+                dispatch_mode=dispatch_mode, hot_words=hot_words,
+                queue_kernels=queue_kernels,
             )
             return CompiledSim(self, backend="device", engine=engine,
                                variant=queue_mode)
@@ -473,6 +507,9 @@ class SimProgram:
                 "front_cap": front_cap is not None,
                 "stage_cap": stage_cap is not None,
                 "num_runs": num_runs is not None,
+                "dispatch_mode": dispatch_mode != "switch",
+                "hot_words": hot_words is not None,
+                "queue_kernels": queue_kernels != "xla",
             }
             bad = [k for k, hit in misdirected.items() if hit]
             if bad:
@@ -592,6 +629,7 @@ class CompiledSim:
                 else int(max_batches),
                 t_end=t_end,
             )
+            word_counts = stats.get("word_counts")
             return RunResult(
                 state=state,
                 events=int(stats["events"]),
@@ -599,6 +637,8 @@ class CompiledSim:
                 dropped=int(stats["dropped"]),
                 final_time=float(stats["time"]),
                 raw=stats,
+                word_counts=(None if word_counts is None
+                             else np.asarray(word_counts)),
             )
         queue = HostEventQueue()
         for (t, type_id, arg) in evs:

@@ -1083,7 +1083,8 @@ def _default_fill_accounting(q, rows):
     return seq_r, insert, counters
 
 
-def _tiered_fill_finish(q, rows, b_time, seq_r, insert, counters):
+def _tiered_fill_finish(q, rows, b_time, seq_r, insert, counters,
+                        kernels: str = "xla"):
     """Shared tail of BOTH tiered fill families (the ROADMAP-flagged
     factoring): partition the emit block against the tier boundary,
     counting-merge the near rows into the sorted front (evicting its
@@ -1101,6 +1102,11 @@ def _tiered_fill_finish(q, rows, b_time, seq_r, insert, counters):
     accounting exists exactly once.  Row seqs must exceed every queued
     seq (true for fresh emits under both the local and the global seq
     discipline) — the front-merge tie handling relies on it.
+
+    ``kernels="pallas"`` computes the front counting-merge with the
+    Pallas kernel (:func:`repro.kernels.queue_front.front_merge`) —
+    bit-identical output, VMEM-resident on TPU, interpret mode
+    elsewhere; the staging appends and counters stay in XLA.
     """
     R = rows.shape[0]
     F = q.front_cap
@@ -1117,46 +1123,58 @@ def _tiered_fill_finish(q, rows, b_time, seq_r, insert, counters):
 
     # --- front merge (output F + R wide: overflow becomes eviction) ---
     FE = F + R
-    perm = _small_lex_perm(
-        jnp.where(to_front, t_r, jnp.inf),
-        jnp.where(to_front, seq_r, _I32_MAX),
-    )
-    rt = jnp.where(to_front, t_r, jnp.inf)[perm]
-    rty = ty_r[perm]
-    rarg = arg_r[perm]
-    rseq = seq_r[perm]
-    rins = to_front[perm]
+    if kernels == "pallas":
+        from repro.kernels.queue_front import front_merge
 
-    # Same strict-total-order shortcut as device_queue_fill_rows: row
-    # seqs all exceed queued seqs, so position = searchsorted on time.
-    older = jnp.minimum(
-        jnp.searchsorted(q.f_times, rt, side="right").astype(jnp.int32),
-        q.front_n,
-    )
-    pos = jnp.where(rins, older + r_idx, FE + R)
-
-    # `pos` ascends over the lex-sorted rows: searchsorted rebuild.
-    i_idx = jnp.arange(FE, dtype=jnp.int32)
-    ins_before = jnp.searchsorted(pos, i_idx, side="left").astype(jnp.int32)
-    is_ins = (
-        jnp.searchsorted(pos, i_idx, side="right").astype(jnp.int32)
-        > ins_before
-    )
-    src = jnp.where(
-        is_ins, FE + jnp.clip(ins_before, 0, R - 1),
-        jnp.clip(i_idx - ins_before, 0, FE - 1),
-    )
-
-    def fmerge(col, rcol, fill):
-        ext = jnp.concatenate(
-            [col, jnp.full((R,) + col.shape[1:], fill, col.dtype), rcol]
+        merged_t, merged_y, merged_a, merged_s = front_merge(
+            q.f_times, q.f_types, q.f_args, q.f_seqs, q.front_n,
+            t_r, ty_r, arg_r, seq_r, to_front,
         )
-        return jnp.take(ext, src, axis=0)
+    else:
+        perm = _small_lex_perm(
+            jnp.where(to_front, t_r, jnp.inf),
+            jnp.where(to_front, seq_r, _I32_MAX),
+        )
+        rt = jnp.where(to_front, t_r, jnp.inf)[perm]
+        rty = ty_r[perm]
+        rarg = arg_r[perm]
+        rseq = seq_r[perm]
+        rins = to_front[perm]
 
-    merged_t = fmerge(q.f_times, rt, jnp.inf)
-    merged_y = fmerge(q.f_types, rty, -1)
-    merged_a = fmerge(q.f_args, rarg, 0.0)
-    merged_s = fmerge(q.f_seqs, rseq, 2**31 - 1)
+        # Same strict-total-order shortcut as device_queue_fill_rows:
+        # row seqs all exceed queued seqs, so position = searchsorted
+        # on time.
+        older = jnp.minimum(
+            jnp.searchsorted(q.f_times, rt, side="right").astype(jnp.int32),
+            q.front_n,
+        )
+        pos = jnp.where(rins, older + r_idx, FE + R)
+
+        # `pos` ascends over the lex-sorted rows: searchsorted rebuild.
+        i_idx = jnp.arange(FE, dtype=jnp.int32)
+        ins_before = jnp.searchsorted(
+            pos, i_idx, side="left"
+        ).astype(jnp.int32)
+        is_ins = (
+            jnp.searchsorted(pos, i_idx, side="right").astype(jnp.int32)
+            > ins_before
+        )
+        src = jnp.where(
+            is_ins, FE + jnp.clip(ins_before, 0, R - 1),
+            jnp.clip(i_idx - ins_before, 0, FE - 1),
+        )
+
+        def fmerge(col, rcol, fill):
+            ext = jnp.concatenate(
+                [col, jnp.full((R,) + col.shape[1:], fill, col.dtype),
+                 rcol]
+            )
+            return jnp.take(ext, src, axis=0)
+
+        merged_t = fmerge(q.f_times, rt, jnp.inf)
+        merged_y = fmerge(q.f_types, rty, -1)
+        merged_a = fmerge(q.f_args, rarg, 0.0)
+        merged_s = fmerge(q.f_seqs, rseq, 2**31 - 1)
 
     n_front = jnp.sum(to_front).astype(jnp.int32)
     occ_after = q.front_n + n_front
@@ -1327,6 +1345,17 @@ class Tiered3DeviceQueue(NamedTuple):
     ``max(front) <= min(staging ∪ runs ∪ main)``, and the *logical*
     capacity excludes the slack — ``capacity`` is what overflow
     accounting is measured against, bit-identical to the reference.
+
+    Front-tier hot loops come in two implementations selected by the
+    ``kernels=`` argument of :func:`tiered3_queue_extract` /
+    :func:`tiered3_queue_fill_rows` (surfaced as
+    ``DeviceEngine(queue_kernels=...)``): ``"xla"`` — the
+    all-pairs-rank + gather shapes tuned for XLA:CPU — or ``"pallas"``
+    — :mod:`repro.kernels.queue_front` kernels that keep the window
+    extract and the front counting-merge in VMEM on TPU (interpret
+    mode elsewhere, bit-identical output).  The queue layout itself is
+    implementation-agnostic, which is why the knob rides on the
+    functions, not in the pytree.
     """
 
     f_times: jnp.ndarray   # f32[front_cap]
@@ -2022,7 +2051,7 @@ def tiered3_queue_pop_prefix(q: Tiered3DeviceQueue, length, k: int
 
 
 def tiered3_queue_extract(q: Tiered3DeviceQueue, max_len: int, lookaheads,
-                          t_cap=None):
+                          t_cap=None, kernels: str = "xla"):
     """Window extraction from the front tier (paper Fig 2).
 
     Identical take rule and output as :func:`tiered_queue_extract`;
@@ -2033,6 +2062,14 @@ def tiered3_queue_extract(q: Tiered3DeviceQueue, max_len: int, lookaheads,
     (:func:`tiered3_queue_pop_prefix`) — so the sharded engine's split
     extraction shares every line with the single-queue path the
     differential suites pin.
+
+    ``kernels="pallas"`` runs the post-refill hot loop (§III-B take
+    rule + prefix pop) as one Pallas kernel
+    (:func:`repro.kernels.queue_front.window_extract`) — bit-identical
+    output, front columns stay in VMEM on TPU, interpret mode
+    elsewhere.  The bounded refill itself stays in XLA (it is the rare
+    amortized path, not the per-batch one).
+
     Returns ``(q', ts, tys, args, length)``.
     """
     if max_len > q.front_cap:
@@ -2041,6 +2078,22 @@ def tiered3_queue_extract(q: Tiered3DeviceQueue, max_len: int, lookaheads,
         )
     k = max_len
     num_types = lookaheads.shape[0]
+
+    if kernels == "pallas":
+        from repro.kernels.queue_front import window_extract
+
+        q, _ts_c, _tys_c, _args_c, _seqs_c = tiered3_queue_peek_front(q, k)
+        (ts, tys, args, length,
+         nf_t, nf_y, nf_a, nf_s) = window_extract(
+            q.f_times, q.f_types, q.f_args, q.f_seqs,
+            lookaheads, t_cap, k=k,
+        )
+        q = q._replace(
+            f_times=nf_t, f_types=nf_y, f_args=nf_a, f_seqs=nf_s,
+            front_n=q.front_n - length,
+            size=q.size - length,
+        )
+        return q, ts, tys, args, length
 
     q, ts_c, tys_c, args_c, _seqs_c = tiered3_queue_peek_front(q, k)
     valid = tys_c >= 0
@@ -2083,8 +2136,8 @@ def _tiered3_preflush(q: Tiered3DeviceQueue, R: int) -> Tiered3DeviceQueue:
     )
 
 
-def tiered3_queue_fill_rows(q: Tiered3DeviceQueue, rows
-                            ) -> Tiered3DeviceQueue:
+def tiered3_queue_fill_rows(q: Tiered3DeviceQueue, rows,
+                            kernels: str = "xla") -> Tiered3DeviceQueue:
     """Per-batch emit insert touching only the front and staging tiers.
 
     Same partition and accounting as :func:`tiered_queue_fill_rows`
@@ -2101,12 +2154,14 @@ def tiered3_queue_fill_rows(q: Tiered3DeviceQueue, rows
     q = _tiered3_preflush(q, rows.shape[0])
     seq_r, insert, counters = _default_fill_accounting(q, rows)
     return _tiered_fill_finish(
-        q, rows, _tiered3_boundary(q), seq_r, insert, counters
+        q, rows, _tiered3_boundary(q), seq_r, insert, counters,
+        kernels=kernels,
     )
 
 
 def tiered3_queue_fill_rows_tagged(q: Tiered3DeviceQueue, rows, seqs,
-                                   insert) -> Tiered3DeviceQueue:
+                                   insert, kernels: str = "xla"
+                                   ) -> Tiered3DeviceQueue:
     """Shard-aware emit insert: seqs and survival are decided UPSTREAM.
 
     The sharded engine assigns seqs from ONE global counter across all
@@ -2134,7 +2189,8 @@ def tiered3_queue_fill_rows_tagged(q: Tiered3DeviceQueue, rows, seqs,
         dropped=q.dropped,
     )
     return _tiered_fill_finish(
-        q, rows, _tiered3_boundary(q), seqs, insert, counters
+        q, rows, _tiered3_boundary(q), seqs, insert, counters,
+        kernels=kernels,
     )
 
 

@@ -230,6 +230,9 @@ class ShardedDeviceEngine(DeviceEngine):
                      front_cap: int | None = None,
                      stage_cap: int | None = None,
                      num_runs: int | None = None,
+                     dispatch_mode: str = "switch",
+                     hot_words=None,
+                     queue_kernels: str = "xla",
                      t_end: float = float("inf")) -> "ShardedDeviceEngine":
         """Construct the sharded device backend from a frozen SimProgram
         (cf. :meth:`DeviceEngine.from_program`; the entity→shard mapping
@@ -246,6 +249,9 @@ class ShardedDeviceEngine(DeviceEngine):
             front_cap=front_cap,
             stage_cap=stage_cap,
             num_runs=num_runs,
+            dispatch_mode=dispatch_mode,
+            hot_words=hot_words,
+            queue_kernels=queue_kernels,
             entity_handlers=program.device_entity_handlers() or None,
             shards=shards,
             shard_fn=shard_fn,
@@ -379,7 +385,8 @@ class ShardedDeviceEngine(DeviceEngine):
             dest = self._shard_of(ty_r, emits[:, 2:])
             qs = [
                 tiered3_queue_fill_rows_tagged(
-                    qs[i], emits, seq_r, insert & (dest == i)
+                    qs[i], emits, seq_r, insert & (dest == i),
+                    kernels=self.queue_kernels,
                 )
                 for i in range(N)
             ]
@@ -391,16 +398,24 @@ class ShardedDeviceEngine(DeviceEngine):
                 dropped=sq.dropped + (num_valid - num_insert),
             )
             last_t = ts[jnp.maximum(length - 1, 0)]
-            stats = {
+            new_stats = {
                 "batches": stats["batches"] + 1,
                 "events": stats["events"] + length,
                 "time": jnp.maximum(stats["time"], last_t),
             }
-            return state, sq, stats
+            if self._track_word_counts:
+                code = self.codec.encode_jnp(tys, length)
+                new_stats["word_counts"] = \
+                    stats["word_counts"].at[code].add(1)
+            return state, sq, new_stats
 
         stats0 = {
             "batches": jnp.int32(0),
             "events": jnp.int32(0),
             "time": jnp.float32(0.0),
         }
+        if self._track_word_counts:
+            stats0["word_counts"] = jnp.zeros(
+                (self.codec.num_batches,), jnp.int32
+            )
         return jax.lax.while_loop(cond, body, (state, queue, stats0))

@@ -1,0 +1,271 @@
+"""Pallas kernels for the tiered3 queue's front-tier hot loops.
+
+The XLA shapes of these two loops (all-pairs rank + gather +
+``dynamic_slice``) were deliberately tuned for XLA:CPU, where sort
+custom calls and scatters carry large fixed overhead (DESIGN.md §4.4).
+On TPU that is the wrong trade: each pass re-materializes the
+front-tier columns through HBM.  These kernels run the same math as
+ONE Pallas program per call with every operand resident in VMEM, so
+the per-batch extract→dispatch→insert round trip never leaves the
+core's local memory:
+
+* :func:`window_extract` — the §III-B dynamic-lookahead take rule over
+  the (already refilled) sorted front plus the prefix pop, fused into
+  one kernel: window bounds, exclusive cummin, prefix-AND, and the
+  shift-left of all four front columns.
+* :func:`front_merge` — the front counting-merge of the per-batch emit
+  insert (:func:`repro.core.queue._tiered_fill_finish`): lex-rank the
+  emit rows, locate each insertion point against the sorted front
+  (searchsorted as an all-pairs count), and rebuild the merged
+  ``front_cap + R`` columns by position arithmetic — no sorts, no
+  scatters, gather-free (one-hot selects).
+
+Both kernels are BIT-IDENTICAL to the XLA paths (the differential
+suites in ``tests/test_queue_kernels.py`` pin this against the tiered3
+XLA path and the reference queue spec).  Selected via
+``DeviceEngine(queue_kernels="pallas")`` /
+``tiered3_queue_extract(..., kernels="pallas")``.  Off-TPU the kernels
+execute in interpret mode (the repo-wide idiom, see
+:mod:`repro.kernels.ops`); TPU compilation goes through Mosaic with
+:mod:`repro.kernels._pallas_compat` resolving the compiler-params API
+drift.
+
+Scalar operands (``length``, ``front_n``) travel as 1-element arrays;
+iotas are built 2-D (``broadcasted_iota``) per the TPU lowering rules.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels._pallas_compat import CompilerParams
+
+_I32_MAX = 2**31 - 1
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _iota(n: int, m: int):
+    """2-D i32 iota along dim 0 — the TPU-safe construction."""
+    return jax.lax.broadcasted_iota(jnp.int32, (n, m), 0)
+
+
+# ---------------------------------------------------------------------------
+# Window extract (take rule + prefix pop)
+# ---------------------------------------------------------------------------
+
+def _window_extract_kernel(
+    t_ref, y_ref, a_ref, s_ref, la_ref, cap_ref,
+    ts_ref, tys_ref, args_ref, len_ref,
+    nt_ref, ny_ref, na_ref, ns_ref,
+    *, k: int, F: int,
+):
+    # Front columns arrive padded to F + k with free-slot sentinels so
+    # the pop shift below stays in bounds for any length <= k.
+    ts_k = t_ref[0:k]
+    tys_k = y_ref[0:k]
+    T = la_ref.shape[0]
+    valid = tys_k >= 0
+    tyc = jnp.clip(tys_k, 0, T - 1)
+    # Lookahead lookup as a one-hot select (gather-free on TPU).
+    la_all = la_ref[...]
+    sel = tyc[:, None] == _iota(T, k).T
+    la = jnp.sum(jnp.where(sel, la_all[None, :], 0.0), axis=1)
+    wins = jnp.where(valid, ts_k + la, jnp.inf)
+
+    # Exclusive cummin of the window bounds + prefix-AND stop rule,
+    # both as k×k all-pairs forms (k is max_batch_len — tiny).
+    i2 = _iota(k, k)          # [i, j] = i
+    j2 = i2.T                 # [i, j] = j
+    t_max = jnp.min(jnp.where(j2 < i2, wins[None, :], jnp.inf), axis=1)
+    ok = valid & (ts_k <= jnp.minimum(t_max, cap_ref[0]))
+    take = jnp.sum((j2 <= i2) & ~ok[None, :], axis=1) == 0
+    length = jnp.sum(take).astype(jnp.int32)
+
+    ts_ref[...] = jnp.where(take, ts_k, 0.0)
+    tys_ref[...] = jnp.where(take, tys_k, 0)
+    args_ref[...] = jnp.where(take[:, None], a_ref[0:k, :], 0.0)
+    len_ref[0] = length
+
+    # Prefix pop: shift every (padded) front column left by `length`.
+    nt_ref[...] = pl.load(t_ref, (pl.ds(length, F),))
+    ny_ref[...] = pl.load(y_ref, (pl.ds(length, F),))
+    na_ref[...] = pl.load(a_ref, (pl.ds(length, F), slice(None)))
+    ns_ref[...] = pl.load(s_ref, (pl.ds(length, F),))
+
+
+@partial(jax.jit, static_argnames=("k", "interpret"))
+def window_extract(f_times, f_types, f_args, f_seqs, lookaheads,
+                   t_cap=None, *, k: int, interpret: bool | None = None):
+    """Fused take-rule + pop over a refilled sorted front tier.
+
+    Bit-identical to ``window_prefix_mask`` + ``tiered3_queue_pop_prefix``
+    applied to the same front columns.  Returns
+    ``(ts[k], tys[k], args[k, W], length, f_times', f_types', f_args',
+    f_seqs')`` with the primed columns shifted left by ``length``.
+    """
+    F = f_times.shape[0]
+    W = f_args.shape[1]
+    if k > F:
+        raise ValueError(f"window width {k} exceeds front capacity {F}")
+    interpret = _interpret() if interpret is None else interpret
+    pad_t = jnp.concatenate(
+        [f_times, jnp.full((k,), jnp.inf, jnp.float32)])
+    pad_y = jnp.concatenate(
+        [f_types, jnp.full((k,), -1, jnp.int32)])
+    pad_a = jnp.concatenate(
+        [f_args, jnp.zeros((k, W), jnp.float32)])
+    pad_s = jnp.concatenate(
+        [f_seqs, jnp.full((k,), _I32_MAX, jnp.int32)])
+    cap = (jnp.full((1,), jnp.inf, jnp.float32) if t_cap is None
+           else jnp.asarray(t_cap, jnp.float32).reshape(1))
+    la = jnp.asarray(lookaheads, jnp.float32)
+
+    out = pl.pallas_call(
+        partial(_window_extract_kernel, k=k, F=F),
+        out_shape=[
+            jax.ShapeDtypeStruct((k,), jnp.float32),      # ts
+            jax.ShapeDtypeStruct((k,), jnp.int32),        # tys
+            jax.ShapeDtypeStruct((k, W), jnp.float32),    # args
+            jax.ShapeDtypeStruct((1,), jnp.int32),        # length
+            jax.ShapeDtypeStruct((F,), jnp.float32),      # f_times'
+            jax.ShapeDtypeStruct((F,), jnp.int32),        # f_types'
+            jax.ShapeDtypeStruct((F, W), jnp.float32),    # f_args'
+            jax.ShapeDtypeStruct((F,), jnp.int32),        # f_seqs'
+        ],
+        compiler_params=CompilerParams(),
+        interpret=interpret,
+    )(pad_t, pad_y, pad_a, pad_s, la, cap)
+    ts, tys, args, length, nt, ny, na, ns = out
+    return ts, tys, args, length[0], nt, ny, na, ns
+
+
+# ---------------------------------------------------------------------------
+# Front counting-merge (the per-batch emit insert hot loop)
+# ---------------------------------------------------------------------------
+
+def _front_merge_kernel(
+    ft_ref, fy_ref, fa_ref, fs_ref, fn_ref,
+    rt_ref, ry_ref, ra_ref, rs_ref, ins_ref,
+    mt_ref, my_ref, ma_ref, ms_ref,
+    *, F: int, R: int,
+):
+    FE = F + R
+    front_n = fn_ref[0]
+    to_front = ins_ref[...] != 0
+    t_r = rt_ref[...]
+    seq_r = rs_ref[...]
+
+    # Lex-rank the emit rows by (time, seq, index) — non-front rows get
+    # (inf, I32_MAX) keys so they rank last — then select row r of the
+    # sorted order with a one-hot (the gather-free _small_lex_perm).
+    tt = jnp.where(to_front, t_r, jnp.inf)
+    ss = jnp.where(to_front, seq_r, _I32_MAX)
+    ri = _iota(R, R)          # [i, j] = i
+    rj = ri.T
+    t_gt = tt[:, None] > tt[None, :]
+    t_eq = tt[:, None] == tt[None, :]
+    s_gt = ss[:, None] > ss[None, :]
+    s_eq = ss[:, None] == ss[None, :]
+    before = t_gt | (t_eq & s_gt) | (t_eq & s_eq & (ri > rj))
+    rank = jnp.sum(before, axis=1).astype(jnp.int32)  # unique in [0, R)
+    onehot = rank[None, :] == _iota(R, R)             # [r, i]: rank[i]==r
+    rt = jnp.sum(jnp.where(onehot, tt[None, :], 0.0), axis=1)
+    ty_r = ry_ref[...]
+    arg_r = ra_ref[...]
+    rty = jnp.sum(jnp.where(onehot, ty_r[None, :], 0), axis=1)
+    rseq = jnp.sum(jnp.where(onehot, seq_r[None, :], 0), axis=1)
+    rarg = jnp.sum(
+        jnp.where(onehot[:, :, None], arg_r[None, :, :], 0.0),
+        axis=1,
+    )
+    rins = jnp.any(onehot & to_front[None, :], axis=1)
+
+    # searchsorted(f_times, rt, 'right') as an all-pairs count, capped
+    # at the live occupancy (rows land after every equal-time slot —
+    # emit seqs exceed queued seqs).
+    older = jnp.minimum(
+        jnp.sum(ft_ref[...][None, :] <= rt[:, None], axis=1)
+        .astype(jnp.int32),
+        front_n,
+    )
+    r_idx = _iota(R, 1)[:, 0]
+    pos = jnp.where(rins, older + r_idx, FE + R)
+
+    # Position-arithmetic rebuild of the merged columns.
+    i2 = _iota(FE, R)         # [i, j] = i
+    ins_before = jnp.sum(pos[None, :] < i2, axis=1).astype(jnp.int32)
+    is_ins = (
+        jnp.sum(pos[None, :] <= i2, axis=1).astype(jnp.int32) > ins_before
+    )
+    i_idx = _iota(FE, 1)[:, 0]
+    src = jnp.where(
+        is_ins, FE + jnp.clip(ins_before, 0, R - 1),
+        jnp.clip(i_idx - ins_before, 0, FE - 1),
+    )
+
+    ext_t = jnp.concatenate(
+        [ft_ref[...], jnp.full((R,), jnp.inf, jnp.float32), rt])
+    ext_y = jnp.concatenate(
+        [fy_ref[...], jnp.full((R,), -1, jnp.int32), rty])
+    ext_a = jnp.concatenate(
+        [fa_ref[...], jnp.zeros((R, fa_ref.shape[1]), jnp.float32), rarg])
+    ext_s = jnp.concatenate(
+        [fs_ref[...], jnp.full((R,), _I32_MAX, jnp.int32), rseq])
+
+    EXT = F + 2 * R
+    sel = src[:, None] == _iota(EXT, FE).T     # [i, e]: src[i] == e
+    mt_ref[...] = jnp.sum(jnp.where(sel, ext_t[None, :], 0.0), axis=1)
+    my_ref[...] = jnp.sum(jnp.where(sel, ext_y[None, :], 0), axis=1)
+    ms_ref[...] = jnp.sum(jnp.where(sel, ext_s[None, :], 0), axis=1)
+    ma_ref[...] = jnp.sum(
+        jnp.where(sel[:, :, None], ext_a[None, :, :], 0.0), axis=1
+    )
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def front_merge(f_times, f_types, f_args, f_seqs, front_n,
+                t_r, ty_r, arg_r, seq_r, to_front, *,
+                interpret: bool | None = None):
+    """Counting-merge ``R`` emit rows into the sorted front tier.
+
+    Bit-identical to the XLA front-merge block of
+    :func:`repro.core.queue._tiered_fill_finish`: returns the merged
+    ``(times, types, args, seqs)`` columns, ``front_cap + R`` wide —
+    slots ``[front_cap:]`` are the evicted tail the caller stages.
+    ``to_front`` is the rows-bound-for-the-front mask (insert-surviving
+    AND earlier than the tier boundary).
+    """
+    F = f_times.shape[0]
+    R = t_r.shape[0]
+    W = f_args.shape[1]
+    interpret = _interpret() if interpret is None else interpret
+    out = pl.pallas_call(
+        partial(_front_merge_kernel, F=F, R=R),
+        out_shape=[
+            jax.ShapeDtypeStruct((F + R,), jnp.float32),
+            jax.ShapeDtypeStruct((F + R,), jnp.int32),
+            jax.ShapeDtypeStruct((F + R, W), jnp.float32),
+            jax.ShapeDtypeStruct((F + R,), jnp.int32),
+        ],
+        compiler_params=CompilerParams(),
+        interpret=interpret,
+    )(
+        jnp.asarray(f_times, jnp.float32),
+        jnp.asarray(f_types, jnp.int32),
+        jnp.asarray(f_args, jnp.float32),
+        jnp.asarray(f_seqs, jnp.int32),
+        jnp.asarray(front_n, jnp.int32).reshape(1),
+        jnp.asarray(t_r, jnp.float32),
+        jnp.asarray(ty_r, jnp.int32),
+        jnp.asarray(arg_r, jnp.float32),
+        jnp.asarray(seq_r, jnp.int32),
+        jnp.asarray(to_front, jnp.int32),
+    )
+    return tuple(out)

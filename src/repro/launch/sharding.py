@@ -1,6 +1,6 @@
 """Partitioning rules: param / batch / cache shardings for every arch.
 
-Parallelism layout (DESIGN.md §7.1):
+Parallelism layout (DESIGN.md §8.1):
 
 * **TP** over ``model``: attention heads (wq/wk/wv out-dim), wo in-dim,
   MLP hidden, MoE experts (EP), mamba d_inner, rwkv projections, vocab.

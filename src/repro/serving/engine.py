@@ -1,7 +1,7 @@
 """Event-driven serving engine: continuous batching as a DES.
 
 The serving control plane IS a discrete-event simulation (DESIGN.md
-§7.2):
+§8.2):
 
 * ``ARRIVE``  — a request joins; lookahead = the trace's minimum
   inter-arrival gap (known from the ingress SLA).

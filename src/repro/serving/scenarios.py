@@ -1,4 +1,4 @@
-"""Device-compilable serving scenarios (DESIGN.md §7.2).
+"""Device-compilable serving scenarios (DESIGN.md §8.2).
 
 :class:`repro.serving.engine.ServingEngine` is the REAL control plane —
 its handlers mutate Python state and drive device work, so it runs on

@@ -18,6 +18,12 @@ Groups:
   belongs here: each super-step reconstructs the exact single-queue
   window (DESIGN.md §5.1), so even its batch grouping is identical.
   ``unbatched``/``speculative`` group differently and stay out.
+
+The ``device/masked`` and ``device/fused*`` entries pin the dispatch
+specialization contract (DESIGN.md §7): all three dispatch modes run
+the identical handler sequence with the identical emit layout, so they
+are full BATCHED members — bit-identical state AND batch counts, with
+the sharded entry exercising fused dispatch under the split window.
 """
 
 import numpy as np
@@ -32,6 +38,10 @@ ALL_BACKENDS = {
     "device/reference": dict(backend="device", queue_mode="reference"),
     "device/tiered3-2shard": dict(backend="device", shards=2),
     "device/tiered3-4shard": dict(backend="device", shards=4),
+    "device/masked": dict(backend="device", dispatch_mode="masked"),
+    "device/fused": dict(backend="device", dispatch_mode="fused"),
+    "device/fused-2shard": dict(
+        backend="device", shards=2, dispatch_mode="fused"),
 }
 
 BATCHED = (
@@ -42,6 +52,9 @@ BATCHED = (
     "device/reference",
     "device/tiered3-2shard",
     "device/tiered3-4shard",
+    "device/masked",
+    "device/fused",
+    "device/fused-2shard",
 )
 
 

@@ -115,3 +115,54 @@ def test_property_jnp_encode_matches_python(num_types, max_len, data):
 
 def test_geometric_sum_base_one():
     assert dense_batch_count(1, 7) == 7
+
+
+@given(num_types=st.integers(1, 8), data=st.data())
+@settings(max_examples=150, deadline=None)
+def test_property_max_arity_words(num_types, data):
+    """Edge words at the full batch arity (len == max_len) — the last
+    Horner 'digit block'.  Their codes must fill exactly the top
+    num_types^max_len slots of the dense space (the fused-dispatch slot
+    table indexes straight into this layout)."""
+    max_len = data.draw(st.integers(1, 5))
+    word = data.draw(
+        st.lists(st.integers(0, num_types - 1),
+                 min_size=max_len, max_size=max_len)
+    )
+    codec = DenseCodec(num_types, max_len)
+    code = codec.encode(word)
+    assert codec.decode(code) == word
+    shorter = dense_batch_count(num_types, max_len - 1) if max_len > 1 else 0
+    assert shorter <= code < codec.num_batches
+    assert codec.num_batches - shorter == num_types ** max_len
+    # Padding beyond `length` must not perturb the jnp encode.
+    padded = jnp.full((max_len,), num_types - 1, jnp.int32)
+    padded = padded.at[:max_len].set(jnp.asarray(word, jnp.int32))
+    assert int(codec.encode_jnp(padded, jnp.int32(max_len))) == code
+
+
+@given(
+    num_types=st.integers(1, 8),
+    max_len=st.integers(1, 6),
+    data=st.data(),
+)
+@settings(max_examples=150, deadline=None)
+def test_property_single_type_words(num_types, max_len, data):
+    """Edge words built from one repeated type ([t]*k) — the words the
+    poc/phold hot sets are made of.  Round-trip through both codecs and
+    pin that distinct (t, k) pairs never collide in the dense space."""
+    t = data.draw(st.integers(0, num_types - 1))
+    k = data.draw(st.integers(1, max_len))
+    word = [t] * k
+    dense = DenseCodec(num_types, max_len)
+    paper = PaperCodec(num_types, max_len)
+    dcode = dense.encode(word)
+    assert dense.decode(dcode) == word
+    assert paper.decode(paper.encode(word)) == word
+    # Injectivity over the whole single-type family.
+    codes = {
+        dense.encode([ty] * n)
+        for ty in range(num_types)
+        for n in range(1, max_len + 1)
+    }
+    assert len(codes) == num_types * max_len

@@ -1,4 +1,4 @@
-"""The serving admission scenario (DESIGN.md §7.2) is a real model of
+"""The serving admission scenario (DESIGN.md §8.2) is a real model of
 the serving control plane AND a cross-backend executable contract: one
 pure SimProgram definition must produce bit-identical admission
 counters on the host schedulers and the device engine — in particular
