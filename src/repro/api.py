@@ -35,14 +35,18 @@ from repro.core.program import (
     SimProgram,
     normalize_arg,
 )
+from repro.core.validate import FAULT_NAMES, EngineFaultError, fault_names
 
 __all__ = [
     "ARG_WIDTH",
     "EMIT_WIDTH",
     "CompiledSim",
     "Config",
+    "EngineFaultError",
+    "FAULT_NAMES",
     "RunResult",
     "SimProgram",
     "emits_events",
+    "fault_names",
     "normalize_arg",
 ]

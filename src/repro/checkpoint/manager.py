@@ -44,8 +44,16 @@ def _leaf_paths(tree) -> list[tuple[str, Any]]:
 
 
 def _checksum(arr: np.ndarray) -> str:
+    # Full-content digest, chunked so large leaves never materialize a
+    # second copy.  (An earlier version hashed only the first 1 MiB,
+    # which let a bit flip past that offset restore silently — the
+    # integrity check must cover every byte of a capacity-sized queue
+    # buffer.)
     h = hashlib.sha256()
-    h.update(np.ascontiguousarray(arr).view(np.uint8)[:1 << 20].tobytes())
+    view = np.ascontiguousarray(arr).reshape(-1).view(np.uint8)
+    chunk = 1 << 24
+    for start in range(0, view.size, chunk):
+        h.update(view[start:start + chunk].tobytes())
     h.update(str(arr.shape).encode())
     return h.hexdigest()[:16]
 
@@ -118,6 +126,32 @@ class CheckpointManager:
     def latest_step(self) -> Optional[int]:
         steps = self.all_steps()
         return steps[-1] if steps else None
+
+    def restore_leaf(self, name: str, step: Optional[int] = None, *,
+                     verify: bool = True) -> np.ndarray:
+        """Load ONE leaf by manifest name, shape taken from the file.
+
+        Escape hatch for variable-length sidecar leaves (e.g. the
+        engine's host spill pool) that cannot appear in a fixed-shape
+        restore template.
+        """
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        path = os.path.join(self.directory, f"step_{step:010d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        if name not in manifest["leaves"]:
+            raise KeyError(
+                f"leaf {name!r} not in checkpoint step {step}; "
+                f"available: {sorted(manifest['leaves'])}")
+        arr = np.load(os.path.join(path, name + ".npy"))
+        meta = manifest["leaves"][name]
+        if verify and _checksum(arr) != meta["checksum"]:
+            raise IOError(f"checksum mismatch for {name} @ step {step}")
+        if meta["dtype"] == "bfloat16":
+            arr = arr.view(ml_dtypes.bfloat16)
+        return arr
 
     def restore(self, template, step: Optional[int] = None,
                 shardings=None, *, verify: bool = True):

@@ -68,6 +68,7 @@ from typing import Any, Callable, Mapping
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.codec import DenseCodec, PaperCodec, make_codec
 from repro.core.composer import (
@@ -77,12 +78,13 @@ from repro.core.composer import (
     build_masked_dispatcher,
     build_switch_dispatcher,
 )
-from repro.core.events import EventRegistry
+from repro.core.events import ARG_WIDTH, EventRegistry
 from repro.core.queue import (
     DeviceQueue,
     HostEventQueue,
     Tiered3DeviceQueue,
     TieredDeviceQueue,
+    _prefix_rank,
     device_queue_extract,
     device_queue_extract_ref,
     device_queue_fill_rows,
@@ -92,15 +94,21 @@ from repro.core.queue import (
     device_queue_push_rows,
     tiered3_queue_extract,
     tiered3_queue_fill_rows,
+    tiered3_queue_fill_rows_tagged,
     tiered3_queue_from_host,
     tiered3_queue_has_pending,
+    tiered3_queue_next_key,
     tiered3_queue_next_time,
+    tiered3_queue_occupancy,
     tiered_queue_extract,
     tiered_queue_fill_rows,
     tiered_queue_from_host,
     tiered_queue_has_pending,
     tiered_queue_next_time,
+    tiered_queue_occupancy,
 )
+from repro.core import validate as _validate
+from repro.core.validate import FAULT_CLOCK, FAULT_OVERFLOW, EngineFaultError
 from repro.core.scheduler import (
     ConservativeScheduler,
     RunStats,
@@ -263,6 +271,8 @@ class DeviceEngine:
     hot_words: Any = None
     queue_kernels: str = "xla"
     entity_handlers: Mapping[int, Callable] | None = None
+    validate: str = "off"
+    overflow: str = "drop"
     # Removed 2024-era flag; kept as an InitVar so old call sites get a
     # pointer at queue_mode instead of a generic unexpected-kwarg error.
     use_vectorized_queue: dataclasses.InitVar[Any] = None
@@ -303,6 +313,27 @@ class DeviceEngine:
                 "queue_kernels='pallas' requires queue_mode='tiered3' "
                 f"(got {self.queue_mode!r}): the Pallas kernels implement "
                 "the tiered3 front-tier hot loops"
+            )
+        if self.validate not in ("off", "cheap", "full"):
+            raise ValueError(
+                f"unknown validate {self.validate!r}; expected "
+                "'off', 'cheap', or 'full'"
+            )
+        if self.overflow not in ("drop", "error", "spill"):
+            raise ValueError(
+                f"unknown overflow {self.overflow!r}; expected "
+                "'drop', 'error', or 'spill'"
+            )
+        if self.overflow == "spill" and self.queue_mode != "tiered3":
+            raise ValueError(
+                "overflow='spill' requires queue_mode='tiered3' (got "
+                f"{self.queue_mode!r}): spilled rows reabsorb through "
+                "the tiered3 tagged-fill path"
+            )
+        if self.overflow == "spill" and self.queue_kernels != "xla":
+            raise ValueError(
+                "overflow='spill' requires queue_kernels='xla': the "
+                "lex-bounded extraction fence is XLA-only"
             )
         # Tier sizing: the rare O(capacity) paths (front refill, staging
         # flush) amortize over ~front_cap/max_batch_len resp.
@@ -387,10 +418,12 @@ class DeviceEngine:
         # capacity-sized buffers in place instead of copying them.  The
         # state is NOT donated — callers routinely feed one initial
         # state to several engines (and donation of a shared buffer
-        # would poison the caller's copy).
-        self._run_jit = jax.jit(
-            self._run, static_argnames=("max_batches",), donate_argnums=(1,)
-        )
+        # would poison the caller's copy).  `max_batches` and the stats
+        # carry are TRACED arguments: segmented execution re-enters the
+        # same compiled loop with a new cumulative batch target and the
+        # previous segment's stats, so checkpoint cadence never forces
+        # a recompile.
+        self._run_jit = jax.jit(self._run, donate_argnums=(1,))
 
     @classmethod
     def from_program(cls, program, *, queue_mode: str = "tiered3",
@@ -401,6 +434,8 @@ class DeviceEngine:
                      dispatch_mode: str = "switch",
                      hot_words=None,
                      queue_kernels: str = "xla",
+                     validate: str = "off",
+                     overflow: str = "drop",
                      t_end: float = float("inf")) -> "DeviceEngine":
         """Construct the device backend from a frozen SimProgram.
 
@@ -426,6 +461,8 @@ class DeviceEngine:
             dispatch_mode=dispatch_mode,
             hot_words=hot_words,
             queue_kernels=queue_kernels,
+            validate=validate,
+            overflow=overflow,
             entity_handlers=program.device_entity_handlers() or None,
         )
 
@@ -446,8 +483,45 @@ class DeviceEngine:
             )
         return device_queue_from_host(events, self.capacity)
 
+    def initial_queue_spill(self, events):
+        """Seed split for ``overflow='spill'``: the lex-earliest
+        ``capacity`` events seed the queue with their original
+        input-order seqs; the rest start life in the host spill pool
+        (instead of being dropped as ghosts).  Returns ``(queue,
+        spill_rows, spill_seqs)`` — the rows in device emit layout
+        ``(time, type, arg...)``, ready for
+        :func:`tiered3_queue_absorb_rows`.
+        """
+        if self.queue_mode != "tiered3":
+            raise ValueError("overflow='spill' requires queue_mode='tiered3'")
+        events = list(events)
+        n = len(events)
+        if n <= self.capacity:
+            return (self.initial_queue(events),
+                    np.zeros((0, 2 + ARG_WIDTH), np.float32),
+                    np.zeros((0,), np.int32))
+        order = sorted(range(n), key=lambda i: (float(events[i][0]), i))
+        keep = sorted(order[:self.capacity])
+        spill = sorted(order[self.capacity:])
+        q = tiered3_queue_from_host(
+            [events[i] for i in keep], self.capacity,
+            front_cap=self.front_cap, stage_cap=self.stage_cap,
+            num_runs=self.num_runs, seqs=keep,
+        )
+        # Spilled events own seqs too: the counter must already be past
+        # every seed seq, queued or spilled.
+        q = q._replace(next_seq=jnp.int32(n))
+        rows = np.zeros((len(spill), 2 + ARG_WIDTH), np.float32)
+        for j, i in enumerate(spill):
+            t, ty, arg = events[i]
+            rows[j, 0] = t
+            rows[j, 1] = ty
+            if arg is not None:
+                rows[j, 2:] = np.asarray(arg, np.float32)
+        return q, rows, np.asarray(spill, np.int32)
+
     # -- extraction (paper Fig 2) --------------------------------------------
-    def _extract(self, queue, t_cap=None):
+    def _extract(self, queue, t_cap=None, bound=None):
         if self.queue_mode == "tiered":
             return tiered_queue_extract(
                 queue, self.max_batch_len, self._lookaheads, t_cap
@@ -455,7 +529,7 @@ class DeviceEngine:
         if self.queue_mode == "tiered3":
             return tiered3_queue_extract(
                 queue, self.max_batch_len, self._lookaheads, t_cap,
-                kernels=self.queue_kernels,
+                kernels=self.queue_kernels, bound=bound,
             )
         if self.queue_mode == "flat":
             return device_queue_extract(
@@ -507,8 +581,117 @@ class DeviceEngine:
 
         return jax.lax.cond(is_run, run_path, switch_path, state)
 
+    # -- run accounting -------------------------------------------------------
+    def initial_run_stats(self):
+        """The stats carry threaded through the while-loop.
+
+        Segmented execution hands the PREVIOUS segment's stats back in,
+        so cumulative counters (``batches``, ``events``, ``emitted``,
+        ``time``, the fault word, the spill buffer) survive segment
+        boundaries and a segmented run is bit-identical to an
+        unsegmented one by construction.
+        """
+        stats = {
+            "batches": jnp.int32(0),
+            "events": jnp.int32(0),
+            "emitted": jnp.int32(0),
+            "time": jnp.float32(0.0),
+        }
+        if self._track_word_counts:
+            stats["word_counts"] = jnp.zeros(
+                (self.codec.num_batches,), jnp.int32
+            )
+        if self.validate != "off":
+            # Only the WORD rides the carry.  The faulting step is not
+            # tracked on device: a set bit freezes the loop guard, so
+            # at exit the step is recoverable from ``batches`` alone
+            # (see ``run``) — one fewer carried scalar, which matters
+            # because every extra carry leaf is another launch-bound
+            # copy/fusion kernel per super-step on CPU.
+            stats["fault_word"] = jnp.int32(0)
+        if self.overflow == "spill":
+            rows = self.dispatch.empty_emits()
+            stats["spill_rows"] = jnp.asarray(rows)
+            stats["spill_seqs"] = jnp.zeros((rows.shape[0],), jnp.int32)
+            stats["spill_n"] = jnp.int32(0)
+            stats["bound_t"] = jnp.float32(jnp.inf)
+            stats["bound_seq"] = jnp.int32(2**31 - 1)
+        return stats
+
+    def queue_occupancy(self, queue):
+        """Real pending-event count (conservation-law accounting)."""
+        if self.queue_mode == "tiered3":
+            return tiered3_queue_occupancy(queue)
+        if self.queue_mode == "tiered":
+            return tiered_queue_occupancy(queue)
+        return jnp.sum(queue.types >= 0).astype(jnp.int32)
+
+    def _cheap_fault_bits(self, queue):
+        """O(front) per-super-step invariant bits for this queue mode."""
+        if self.queue_mode == "tiered3":
+            return _validate.tiered3_fault_bits(
+                queue, local=(self.overflow == "spill")
+            )
+        if self.queue_mode == "tiered":
+            return _validate.tiered_fault_bits(queue)
+        if self.queue_mode == "flat":
+            return _validate.flat_fault_bits(queue, sorted_layout=True)
+        return _validate.flat_fault_bits(queue, sorted_layout=False)
+
+    def _spill_insert(self, queue, emits, stats):
+        """Insert the emit rows that fit; divert the rest to the
+        host-bound spill buffer carried in the stats.
+
+        Every valid row — queued or spilled — draws its seq from the
+        one global counter, so a reabsorbed row keeps its exact place
+        in the total ``(time, seq)`` order.  Returns ``(queue, delta)``
+        with ``delta`` the spill-related stats updates.  The loop guard
+        stops the segment as soon as ``spill_n > 0``, so at most one
+        batch ever writes the buffer before the host drains it.
+        """
+        R = emits.shape[0]
+        valid = emits[:, 1] >= 0
+        vrank = _prefix_rank(valid)
+        num_valid = jnp.sum(valid).astype(jnp.int32)
+        base_seq = queue.next_seq
+        seq_r = base_seq + vrank
+        occ = tiered3_queue_occupancy(queue)
+        fits = valid & (occ + vrank < jnp.int32(self.capacity))
+        spilled = valid & ~fits
+        queue = tiered3_queue_fill_rows_tagged(
+            queue, emits, seq_r, fits, kernels=self.queue_kernels
+        )
+        # The tagged fill advances next_seq only past INSERTED rows;
+        # spilled rows still own theirs.
+        queue = queue._replace(next_seq=base_seq + num_valid)
+        srank = _prefix_rank(spilled)
+        dst = jnp.where(spilled, srank, jnp.int32(R))
+        n_spill = jnp.sum(spilled).astype(jnp.int32)
+        s_t = jnp.where(spilled, emits[:, 0], jnp.inf)
+        min_t = jnp.min(s_t)
+        min_s = jnp.min(jnp.where(
+            spilled & (emits[:, 0] == min_t), seq_r, jnp.int32(2**31 - 1)
+        ))
+        # Tighten the execution fence to the lex-earliest outstanding
+        # spilled key: nothing at or past it may run before reabsorb.
+        take = (min_t < stats["bound_t"]) | (
+            (min_t == stats["bound_t"]) & (min_s < stats["bound_seq"])
+        )
+        delta = {
+            "spill_rows": stats["spill_rows"].at[dst].set(
+                emits, mode="drop"
+            ),
+            "spill_seqs": stats["spill_seqs"].at[dst].set(
+                seq_r, mode="drop"
+            ),
+            "spill_n": stats["spill_n"] + n_spill,
+            "bound_t": jnp.where(take, min_t, stats["bound_t"]),
+            "bound_seq": jnp.where(take, min_s, stats["bound_seq"]),
+        }
+        return queue, delta
+
     # -- main loop ------------------------------------------------------------
-    def _run(self, state, queue, t_end, *, max_batches: int):
+    def _run(self, state, queue, t_end, max_batches, stats0):
         inserts = {
             "tiered": tiered_queue_fill_rows,
             "tiered3": lambda q, rows: tiered3_queue_fill_rows(
@@ -543,74 +726,174 @@ class DeviceEngine:
         # horizon.  The contract (shared with the host schedulers): the
         # dynamic extraction window is capped at t_end, so exactly the
         # events with timestamp <= t_end execute — later ones stay
-        # queued — identically on every backend.
+        # queued — identically on every backend.  `max_batches` is
+        # cumulative against the carried stats, which is what makes a
+        # segmented run re-enter this loop mid-count.
+        validate_on = self.validate != "off"
+        spill = self.overflow == "spill"
+
         def cond(carry):
             state, queue, stats = carry
             del state
-            return (
+            ok = (
                 has_pending(queue)
                 & (stats["batches"] < max_batches)
                 & (next_time(queue) <= t_end)
             )
+            if validate_on:
+                # Fail-fast without host sync: a set bit freezes the
+                # loop at the faulting super-step.
+                ok = ok & (stats["fault_word"] == 0)
+            if self.overflow == "error":
+                ok = ok & (queue.dropped == 0)
+            if spill:
+                # Nothing at or past the lex-earliest spilled key may
+                # run before the host reabsorbs the spill buffer.
+                nk_t, nk_s = tiered3_queue_next_key(queue)
+                below = (nk_t < stats["bound_t"]) | (
+                    (nk_t == stats["bound_t"])
+                    & (nk_s < stats["bound_seq"])
+                )
+                ok = ok & (stats["spill_n"] == 0) & below
+            return ok
 
         def body(carry):
             state, queue, stats = carry
-            queue, ts, tys, args, length = self._extract(queue, t_end)
+            if spill:
+                queue, ts, tys, args, length = self._extract(
+                    queue, t_end,
+                    bound=(stats["bound_t"], stats["bound_seq"]),
+                )
+            else:
+                queue, ts, tys, args, length = self._extract(queue, t_end)
+            prev_time = stats["time"]
             state, emits = self._dispatch_window(state, ts, tys, args, length)
-            queue = insert(queue, emits)
+            if spill:
+                queue, spill_delta = self._spill_insert(queue, emits, stats)
+            else:
+                queue = insert(queue, emits)
             last_t = ts[jnp.maximum(length - 1, 0)]
-            stats = {
+            new_stats = {
                 "batches": stats["batches"] + 1,
                 "events": stats["events"] + length,
+                "emitted": stats["emitted"]
+                + jnp.sum(emits[:, 1] >= 0).astype(jnp.int32),
                 "time": jnp.maximum(stats["time"], last_t),
             }
             if self._track_word_counts:
                 # Per-word histogram (XLA CSEs the encode against the
                 # dispatch path's — same pure computation).
                 code = self.codec.encode_jnp(tys, length)
-                stats["word_counts"] = carry[2]["word_counts"].at[code].add(1)
-            return state, queue, stats
+                new_stats["word_counts"] = stats["word_counts"].at[code].add(1)
+            if spill:
+                new_stats.update(spill_delta)
+            if validate_on:
+                bits = self._cheap_fault_bits(queue)
+                bits = bits | jnp.where(
+                    (length > 0) & (ts[0] < prev_time),
+                    jnp.int32(FAULT_CLOCK), jnp.int32(0),
+                )
+                new_stats["fault_word"] = stats["fault_word"] | bits
+            return state, queue, new_stats
 
-        stats0 = {
-            "batches": jnp.int32(0),
-            "events": jnp.int32(0),
-            "time": jnp.float32(0.0),
-        }
-        if self._track_word_counts:
-            stats0["word_counts"] = jnp.zeros(
-                (self.codec.num_batches,), jnp.int32
-            )
         return jax.lax.while_loop(cond, body, (state, queue, stats0))
 
     def run(self, state,
             queue: DeviceQueue | TieredDeviceQueue | Tiered3DeviceQueue,
-            *, max_batches: int = 1 << 30, t_end: float | None = None):
+            *, max_batches: int = 1 << 30, t_end: float | None = None,
+            stats: Mapping | None = None):
         """Run to completion (or ``max_batches`` / horizon ``t_end``).
 
-        ``t_end`` overrides the engine default per call without
-        recompiling (it is a traced argument): the extraction window is
-        capped at it, so exactly the events with timestamp <= t_end
-        execute and later ones stay queued.
+        ``t_end`` and ``max_batches`` override the engine defaults per
+        call without recompiling (both are traced arguments): the
+        extraction window is capped at t_end, so exactly the events
+        with timestamp <= t_end execute and later ones stay queued.
+
+        ``stats`` resumes a previous (segmented) run: pass the stats a
+        prior ``run`` returned and the loop continues its cumulative
+        counters — ``max_batches`` then caps the TOTAL batch count, not
+        this call's increment.
 
         Stats carry ``word_counts`` (i32[num_batches], batches per
         Horner word — the fused-dispatch profiling source) whenever the
-        code space is small enough to track.
+        code space is small enough to track, plus the fault word /
+        spill buffer when ``validate`` / ``overflow='spill'`` enable
+        them.
+
+        With ``validate != 'off'`` a set fault bit raises
+        :class:`EngineFaultError` naming the first violated invariant
+        and super-step; with ``overflow='error'`` the first dropped
+        event does the same.
         """
         t_end = self.t_end if t_end is None else t_end
+        if stats is None:
+            stats0 = self.initial_run_stats()
+        else:
+            # "dropped" is surfaced on the way out (it lives on the
+            # queue, not in the loop carry) — strip it on the way in.
+            stats0 = {k: v for k, v in stats.items() if k != "dropped"}
+        if self.validate != "off":
+            # Entry audit: a queue corrupted BETWEEN segments (bad
+            # restore, host-side mutation) would otherwise have its
+            # poisoned front extracted on the first super-step, before
+            # the in-loop bits (computed post-insert) ever see it.
+            # Folding the incoming queue's bits into the carry makes
+            # the loop guard trip before any event executes.
+            # Jitted (and cached): eagerly the ~30 small ops dispatch
+            # one by one at ~100x the cost of a single compiled call,
+            # which would dominate the whole auditor's overhead.
+            entry_fn = self.__dict__.get("_entry_bits_jit")
+            if entry_fn is None:
+                entry_fn = jax.jit(self._cheap_fault_bits)
+                self._entry_bits_jit = entry_fn
+            stats0 = dict(stats0)
+            stats0["fault_word"] = stats0["fault_word"] | jnp.int32(
+                entry_fn(queue))
         state, queue, stats = self._run_jit(
-            state, queue, jnp.float32(t_end), max_batches=max_batches
+            state, queue, jnp.float32(t_end), jnp.int32(max_batches), stats0
         )
         stats = dict(stats)
         stats["dropped"] = queue.dropped
+        if self.overflow == "error" and int(queue.dropped) > 0:
+            raise EngineFaultError(
+                FAULT_OVERFLOW, int(stats["batches"]),
+                detail=(f"{int(queue.dropped)} event(s) overflowed the "
+                        f"capacity-{self.capacity} queue"),
+            )
+        if self.validate != "off" and int(stats["fault_word"]) != 0:
+            # The guard freezes the loop the moment the word sets, so
+            # the word can only have been set by the LAST executed
+            # super-step (batches - 1), or — when no super-step ran at
+            # all — by the entry audit on the incoming queue (batches).
+            final_b = int(stats["batches"])
+            entry_b = int(stats0["batches"])
+            raise EngineFaultError(
+                int(stats["fault_word"]),
+                final_b - 1 if final_b > entry_b else final_b,
+            )
+        if self.validate == "full":
+            # Segment-boundary audit: each ``run`` call is one segment,
+            # so the O(capacity) cross-tier sweep runs off the hot path.
+            _validate.raise_on_findings(
+                _validate.full_audit(
+                    queue, local=(self.overflow == "spill")
+                ),
+                step=int(stats["batches"]),
+            )
         return state, queue, stats
 
-    def lower_run(self, state_spec, queue_spec, *, max_batches: int = 1 << 30):
+    def lower_run(self, state_spec, queue_spec):
         """AOT lowering hook (used by tests and the dry-run).
 
         Lowers the same jitted function as :meth:`run`, so the AOT
         executable keeps the documented queue-donation semantics.
         """
         t_spec = jax.ShapeDtypeStruct((), jnp.float32)
+        mb_spec = jax.ShapeDtypeStruct((), jnp.int32)
+        stats_spec = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(jnp.shape(x), x.dtype),
+            self.initial_run_stats(),
+        )
         return self._run_jit.lower(
-            state_spec, queue_spec, t_spec, max_batches=max_batches
+            state_spec, queue_spec, t_spec, mb_spec, stats_spec
         )

@@ -210,6 +210,12 @@ class RunResult:
     ``build(..., dispatch_mode="fused", hot_words=...)`` hot-word
     selection (see :func:`repro.core.composer.hot_words_from_counts`);
     ``None`` on host backends.
+
+    ``emitted``/``pending``/``spilled`` (device backends) complete the
+    conservation law ``seeded + emitted == events + pending + dropped
+    + spilled``; ``fault_word``/``fault_step`` surface the on-device
+    auditor's packed invariant bits (``0``/``-1`` when clean or when
+    ``validate="off"``) — see :mod:`repro.core.validate`.
     """
 
     state: Any
@@ -220,6 +226,11 @@ class RunResult:
     rollbacks: int = 0
     raw: Any = None
     word_counts: Any = None
+    emitted: int = 0
+    pending: int = 0
+    spilled: int = 0
+    fault_word: int = 0
+    fault_step: int = -1
 
     @property
     def mean_batch_length(self) -> float:
@@ -233,6 +244,11 @@ class RunResult:
             "final_time": self.final_time,
             "rollbacks": self.rollbacks,
             "mean_batch_length": self.mean_batch_length,
+            "emitted": self.emitted,
+            "pending": self.pending,
+            "spilled": self.spilled,
+            "fault_word": self.fault_word,
+            "fault_step": self.fault_step,
         }
 
 
@@ -401,6 +417,8 @@ class SimProgram:
               dispatch_mode: str = "switch",
               hot_words: Sequence | None = None,
               queue_kernels: str = "xla",
+              validate: str = "off",
+              overflow: str = "drop",
               state_spec=None, arg_spec=None,
               check_causality: bool = False,
               window_slack: float = float("inf"),
@@ -425,6 +443,15 @@ class SimProgram:
         ``RunResult.word_counts`` for a real selection).
         ``queue_kernels="pallas"`` swaps the tiered3 front-tier hot
         loops for the Pallas kernels (interpret mode off-TPU).
+        ``validate`` arms the on-device invariant auditor (DESIGN.md
+        §9): ``"cheap"`` folds per-super-step fault bits into the
+        loop carry (CI-gated at <=1.10x the ``"off"`` cost),
+        ``"full"`` adds an exact audit at segment boundaries; a
+        violation raises :class:`~repro.core.validate.EngineFaultError`
+        naming the invariant and super-step.  ``overflow`` picks the
+        full-queue policy: ``"drop"`` (count ghosts), ``"error"``
+        (fail fast), or ``"spill"`` (divert to a host pool reabsorbed
+        at segment boundaries — bit-parity with an oversized queue).
         ``backend="host"`` honors
         ``scheduler`` and ``composer`` (+ eager specs / causality /
         slack knobs).  Passing a knob that the selected backend does
@@ -484,6 +511,7 @@ class SimProgram:
                     stage_cap=stage_cap, num_runs=num_runs,
                     dispatch_mode=dispatch_mode, hot_words=hot_words,
                     queue_kernels=queue_kernels,
+                    validate=validate, overflow=overflow,
                 )
                 return CompiledSim(
                     self, backend="device", engine=engine,
@@ -495,6 +523,7 @@ class SimProgram:
                 num_runs=num_runs,
                 dispatch_mode=dispatch_mode, hot_words=hot_words,
                 queue_kernels=queue_kernels,
+                validate=validate, overflow=overflow,
             )
             return CompiledSim(self, backend="device", engine=engine,
                                variant=queue_mode)
@@ -510,6 +539,8 @@ class SimProgram:
                 "dispatch_mode": dispatch_mode != "switch",
                 "hot_words": hot_words is not None,
                 "queue_kernels": queue_kernels != "xla",
+                "validate": validate != "off",
+                "overflow": overflow != "drop",
             }
             bad = [k for k, hit in misdirected.items() if hit]
             if bad:
@@ -601,10 +632,248 @@ class CompiledSim:
                 evs.append((float(t), type_id, normalize_arg(arg)))
         return evs
 
+    # -- segmented device driver -------------------------------------------
+    def _rebalance_spill(self, queue, pool_rows, pool_seqs):
+        """The pool outgrew the queue's slack: merge queue ∪ pool and
+        keep the lex-smallest ``capacity`` events on device; the rest
+        stays host-side.  Host O(capacity log capacity) at a segment
+        boundary (off the hot path); the global counters are preserved
+        exactly, so the logical pending set is untouched — only its
+        device/host split moves.
+        """
+        from repro.core.queue import (
+            tiered3_queue_from_host,
+            tiered3_queue_to_flat,
+        )
+
+        eng = self.engine
+        flat = tiered3_queue_to_flat(queue)
+        occ = np.asarray(flat.types) >= 0
+        times = np.concatenate(
+            [np.asarray(flat.times)[occ], pool_rows[:, 0]]
+        )
+        types = np.concatenate(
+            [np.asarray(flat.types)[occ],
+             pool_rows[:, 1].astype(np.int32)]
+        )
+        args = np.concatenate(
+            [np.asarray(flat.args)[occ], pool_rows[:, 2:]]
+        )
+        seqs = np.concatenate([np.asarray(flat.seqs)[occ], pool_seqs])
+        order = np.lexsort((seqs, times))
+        C = eng.capacity
+        keep, rest = order[:C], order[C:]
+        q = tiered3_queue_from_host(
+            [(float(times[i]), int(types[i]), args[i]) for i in keep],
+            C, front_cap=eng.front_cap, stage_cap=eng.stage_cap,
+            num_runs=eng.num_runs, seqs=seqs[keep],
+        )
+        q = q._replace(next_seq=queue.next_seq, dropped=queue.dropped)
+        new_rows = np.zeros((rest.size, EMIT_WIDTH), np.float32)
+        new_rows[:, 0] = times[rest]
+        new_rows[:, 1] = types[rest]
+        new_rows[:, 2:] = args[rest]
+        return q, new_rows, seqs[rest].astype(np.int32)
+
+    def _absorb_spill(self, queue, pool_rows, pool_seqs, stats):
+        """Reabsorb the host spill pool — wholesale when it fits,
+        otherwise via the lex rebalance — and refresh the engine's
+        execution fence to the lex-earliest key still outstanding.
+        Returns ``(queue, pool_rows, pool_seqs, stats)``."""
+        from repro.core.queue import tiered3_queue_absorb_rows
+
+        eng = self.engine
+        if pool_seqs.size:
+            occ = int(np.asarray(eng.queue_occupancy(queue)))
+            room = eng.capacity - occ
+            if room >= int(pool_seqs.size):
+                queue = tiered3_queue_absorb_rows(
+                    queue, jnp.asarray(pool_rows),
+                    jnp.asarray(pool_seqs),
+                )
+                pool_rows = np.zeros((0, EMIT_WIDTH), np.float32)
+                pool_seqs = np.zeros((0,), np.int32)
+            else:
+                queue, pool_rows, pool_seqs = self._rebalance_spill(
+                    queue, pool_rows, pool_seqs
+                )
+        stats = dict(eng.initial_run_stats() if stats is None else stats)
+        if pool_seqs.size:
+            order = np.lexsort((pool_seqs, pool_rows[:, 0]))
+            stats["bound_t"] = jnp.float32(pool_rows[order[0], 0])
+            stats["bound_seq"] = jnp.int32(pool_seqs[order[0]])
+        else:
+            stats["bound_t"] = jnp.float32(np.inf)
+            stats["bound_seq"] = jnp.int32(2**31 - 1)
+        return queue, pool_rows, pool_seqs, stats
+
+    @staticmethod
+    def _save_checkpoint(manager, step, state, queue, stats,
+                         pool_rows, pool_seqs):
+        # "dropped" lives on the queue (re-derived after every segment),
+        # not in the loop carry — keep the saved stats restorable
+        # against the initial_run_stats template.
+        manager.save_async(step, {
+            "state": state,
+            "queue": queue,
+            "stats": {k: v for k, v in stats.items() if k != "dropped"},
+            "pool_rows": np.asarray(pool_rows),
+            "pool_seqs": np.asarray(pool_seqs),
+        })
+
+    def _run_device(self, state, evs, t_end, total_batches, *,
+                    checkpoint_every, checkpoint_dir, resume_from,
+                    segment_hook):
+        eng = self.engine
+        spill = getattr(eng, "overflow", "drop") == "spill"
+        if (checkpoint_every is not None or resume_from is not None) \
+                and checkpoint_dir is None:
+            raise ValueError(
+                "checkpoint_every/resume_from require checkpoint_dir="
+            )
+        seg = None if checkpoint_every is None else int(checkpoint_every)
+        if seg is not None and seg < 1:
+            raise ValueError(f"checkpoint_every must be >= 1, got {seg}")
+        manager = None
+        if checkpoint_dir is not None:
+            from repro.checkpoint.manager import CheckpointManager
+            manager = CheckpointManager(checkpoint_dir)
+
+        if spill:
+            queue, pool_rows, pool_seqs = eng.initial_queue_spill(evs)
+        else:
+            queue = eng.initial_queue(evs)
+            pool_rows = np.zeros((0, EMIT_WIDTH), np.float32)
+            pool_seqs = np.zeros((0,), np.int32)
+        stats = None
+
+        if resume_from is not None:
+            step = None if resume_from == "latest" else int(resume_from)
+            restored, at_step = manager.restore({
+                "state": state,
+                "queue": queue,
+                "stats": eng.initial_run_stats(),
+            }, step)
+            state, queue = restored["state"], restored["queue"]
+            stats = restored["stats"]
+            pool_rows = np.asarray(
+                manager.restore_leaf("pool_rows", at_step), np.float32
+            )
+            pool_seqs = np.asarray(
+                manager.restore_leaf("pool_seqs", at_step), np.int32
+            )
+
+        seg_index = 0
+        idle_rounds = 0
+        try:
+            state, queue, stats, pool_rows, pool_seqs = self._segment_loop(
+                state, queue, stats, pool_rows, pool_seqs,
+                t_end=t_end, total_batches=total_batches, seg=seg,
+                spill=spill, manager=manager, segment_hook=segment_hook,
+                seg_index=seg_index, idle_rounds=idle_rounds,
+            )
+        finally:
+            if manager is not None:
+                # Even on a fault path, drain the async writer so the
+                # newest on-disk checkpoint is complete (atomic rename
+                # means a partial write is never visible as "latest").
+                manager.wait()
+
+        word_counts = stats.get("word_counts")
+        raw = dict(stats)
+        raw["final_queue"] = queue
+        return RunResult(
+            state=state,
+            events=int(stats["events"]),
+            batches=int(stats["batches"]),
+            dropped=int(stats["dropped"]),
+            final_time=float(stats["time"]),
+            raw=raw,
+            word_counts=(None if word_counts is None
+                         else np.asarray(word_counts)),
+            emitted=int(np.asarray(stats.get("emitted", 0))),
+            pending=int(np.asarray(eng.queue_occupancy(queue))),
+            spilled=int(pool_seqs.size),
+            fault_word=int(np.asarray(stats.get("fault_word", 0))),
+            fault_step=int(np.asarray(stats.get("fault_step", -1))),
+        )
+
+    def _segment_loop(self, state, queue, stats, pool_rows, pool_seqs, *,
+                      t_end, total_batches, seg, spill, manager,
+                      segment_hook, seg_index, idle_rounds):
+        from repro.core.validate import FAULT_SPILL_STALL, EngineFaultError
+
+        eng = self.engine
+        while True:
+            if spill and pool_seqs.size:
+                queue, pool_rows, pool_seqs, stats = \
+                    self._absorb_spill(queue, pool_rows, pool_seqs, stats)
+            done = 0 if stats is None else int(np.asarray(stats["batches"]))
+            target = (total_batches if seg is None
+                      else min(total_batches, done + seg))
+            state, queue, stats = eng.run(
+                state, queue, max_batches=target, t_end=t_end, stats=stats
+            )
+            new_done = int(stats["batches"])
+            if spill and int(np.asarray(stats.get("spill_n", 0))) > 0:
+                n = int(stats["spill_n"])
+                pool_rows = np.concatenate(
+                    [pool_rows, np.asarray(stats["spill_rows"])[:n]]
+                )
+                pool_seqs = np.concatenate(
+                    [pool_seqs, np.asarray(stats["spill_seqs"])[:n]]
+                )
+                stats = dict(stats)
+                stats["spill_n"] = jnp.int32(0)
+            seg_index += 1
+            # Save BEFORE the injection seam: the newest checkpoint is
+            # always a clean pre-corruption snapshot, so fault recovery
+            # is restore-latest-and-replay.
+            if manager is not None and seg is not None:
+                self._save_checkpoint(manager, new_done, state, queue,
+                                      stats, pool_rows, pool_seqs)
+            if segment_hook is not None:
+                out = segment_hook(seg_index, state, queue, stats)
+                if out is not None:
+                    state, queue, stats = out
+            if new_done >= total_batches:
+                break
+            if spill and pool_seqs.size:
+                from repro.core.queue import tiered3_queue_next_time
+                qt = float(np.asarray(tiered3_queue_next_time(queue)))
+                if qt > t_end and float(pool_rows[:, 0].min()) > t_end:
+                    # Everything outstanding is past the horizon — the
+                    # spilled remainder stays pending, like the queue's.
+                    break
+                if new_done == done:
+                    idle_rounds += 1
+                    # One idle round is legal (the absorb/rebalance runs
+                    # NEXT iteration); repeated idleness means the fence
+                    # can never clear.
+                    if idle_rounds >= 3:
+                        raise EngineFaultError(
+                            FAULT_SPILL_STALL, new_done,
+                            detail=(f"{pool_seqs.size} spilled event(s) "
+                                    "outstanding but no segment can make "
+                                    "progress"),
+                        )
+                else:
+                    idle_rounds = 0
+                continue
+            if new_done < target:
+                # Loop exited before its batch target: drained, horizon,
+                # or spill fence with an empty pool — all terminal.
+                break
+        return state, queue, stats, pool_rows, pool_seqs
+
     def run(self, state, *, until: float | None = None,
             max_batches: int | None = None,
             max_events: int | None = None,
-            events: Sequence | None = None) -> RunResult:
+            events: Sequence | None = None,
+            checkpoint_every: int | None = None,
+            checkpoint_dir: str | None = None,
+            resume_from: int | str | None = None,
+            _segment_hook: Callable | None = None) -> RunResult:
         """Execute until the pending set drains (or a bound trips).
 
         ``until`` stops before any event later than it runs (identical
@@ -613,6 +882,18 @@ class CompiledSim:
         only — the device loop counts batches).  ``events`` optionally
         replaces the program's initial schedule for this run, as
         ``(time, type_name_or_id[, arg])`` tuples.
+
+        Device backends additionally run SEGMENTED: ``checkpoint_every=N``
+        snapshots the full engine pytree (state, every queue tier, the
+        cumulative stats carry) to ``checkpoint_dir`` every N super-steps
+        through :class:`repro.checkpoint.manager.CheckpointManager`
+        (async + atomic, off the hot path), and ``resume_from=step`` (or
+        ``"latest"``) restores one and continues — a resumed run is
+        bit-identical to an uninterrupted one because the while-loop
+        carry IS the checkpoint.  ``_segment_hook(seg_index, state,
+        queue, stats)`` is the fault-injection seam: called between
+        segments, it may return a replacement ``(state, queue, stats)``
+        triple (tests only).
         """
         t_end = float("inf") if until is None else float(until)
         evs = self._initial_events(events)
@@ -622,23 +903,20 @@ class CompiledSim:
                     "max_events is host-only; the device loop counts "
                     "batches — use max_batches"
                 )
-            queue = self.engine.initial_queue(evs)
-            state, queue, stats = self.engine.run(
-                state, queue,
-                max_batches=(1 << 30) if max_batches is None
-                else int(max_batches),
-                t_end=t_end,
+            return self._run_device(
+                state, evs, t_end,
+                (1 << 30) if max_batches is None else int(max_batches),
+                checkpoint_every=checkpoint_every,
+                checkpoint_dir=checkpoint_dir,
+                resume_from=resume_from,
+                segment_hook=_segment_hook,
             )
-            word_counts = stats.get("word_counts")
-            return RunResult(
-                state=state,
-                events=int(stats["events"]),
-                batches=int(stats["batches"]),
-                dropped=int(stats["dropped"]),
-                final_time=float(stats["time"]),
-                raw=stats,
-                word_counts=(None if word_counts is None
-                             else np.asarray(word_counts)),
+        if (checkpoint_every is not None or checkpoint_dir is not None
+                or resume_from is not None or _segment_hook is not None):
+            raise ValueError(
+                "checkpoint_every/checkpoint_dir/resume_from are "
+                "device-backend knobs; the host backend would silently "
+                "ignore them — drop them or build with backend='device'"
             )
         queue = HostEventQueue()
         for (t, type_id, arg) in evs:

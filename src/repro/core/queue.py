@@ -1084,7 +1084,7 @@ def _default_fill_accounting(q, rows):
 
 
 def _tiered_fill_finish(q, rows, b_time, seq_r, insert, counters,
-                        kernels: str = "xla"):
+                        kernels: str = "xla", b_seq=None):
     """Shared tail of BOTH tiered fill families (the ROADMAP-flagged
     factoring): partition the emit block against the tier boundary,
     counting-merge the near rows into the sorted front (evicting its
@@ -1101,7 +1101,13 @@ def _tiered_fill_finish(q, rows, b_time, seq_r, insert, counters,
     only their consequences are applied here, so the trickiest
     accounting exists exactly once.  Row seqs must exceed every queued
     seq (true for fresh emits under both the local and the global seq
-    discipline) — the front-merge tie handling relies on it.
+    discipline) — the front-merge tie handling relies on it — UNLESS
+    ``b_seq`` is given: then the boundary partition and the front-merge
+    placement both compare full ``(time, seq)`` lexicographic keys
+    (all-pairs against the front, XLA kernels only), which is what lets
+    previously *spilled* rows — whose seqs are older than freshly
+    queued ones — reabsorb exactly where they belong
+    (:func:`tiered3_queue_absorb_rows`).
 
     ``kernels="pallas"`` computes the front counting-merge with the
     Pallas kernel (:func:`repro.kernels.queue_front.front_merge`) —
@@ -1115,15 +1121,26 @@ def _tiered_fill_finish(q, rows, b_time, seq_r, insert, counters,
     arg_r = rows[:, 2:]
     r_idx = jnp.arange(R, dtype=jnp.int32)
 
-    # Emit seqs all exceed every queued seq, so a timestamp TIE with
-    # the boundary already sorts the row after it — the partition is on
-    # time alone.
-    to_front = insert & (t_r < b_time)
+    if b_seq is None:
+        # Emit seqs all exceed every queued seq, so a timestamp TIE
+        # with the boundary already sorts the row after it — the
+        # partition is on time alone.
+        to_front = insert & (t_r < b_time)
+    else:
+        # Lex-exact partition for reabsorbed (old-seq) rows.
+        to_front = insert & (
+            (t_r < b_time) | ((t_r == b_time) & (seq_r < b_seq))
+        )
     to_stage = insert & ~to_front
 
     # --- front merge (output F + R wide: overflow becomes eviction) ---
     FE = F + R
     if kernels == "pallas":
+        if b_seq is not None:
+            raise ValueError(
+                "lex-exact fill (b_seq) is XLA-only; absorb spilled "
+                "rows with kernels='xla'"
+            )
         from repro.kernels.queue_front import front_merge
 
         merged_t, merged_y, merged_a, merged_s = front_merge(
@@ -1141,13 +1158,25 @@ def _tiered_fill_finish(q, rows, b_time, seq_r, insert, counters,
         rseq = seq_r[perm]
         rins = to_front[perm]
 
-        # Same strict-total-order shortcut as device_queue_fill_rows:
-        # row seqs all exceed queued seqs, so position = searchsorted
-        # on time.
-        older = jnp.minimum(
-            jnp.searchsorted(q.f_times, rt, side="right").astype(jnp.int32),
-            q.front_n,
-        )
+        if b_seq is None:
+            # Same strict-total-order shortcut as
+            # device_queue_fill_rows: row seqs all exceed queued seqs,
+            # so position = searchsorted on time.
+            older = jnp.minimum(
+                jnp.searchsorted(
+                    q.f_times, rt, side="right").astype(jnp.int32),
+                q.front_n,
+            )
+        else:
+            # Reabsorbed rows carry OLD seqs: count the occupied front
+            # slots strictly lex-before each row (all-pairs, R × F
+            # fused bools — boundary-rare, never the per-batch path).
+            occ_f = (jnp.arange(F, dtype=jnp.int32) < q.front_n)[None, :]
+            lex_lt = (q.f_times[None, :] < rt[:, None]) | (
+                (q.f_times[None, :] == rt[:, None])
+                & (q.f_seqs[None, :] < rseq[:, None])
+            )
+            older = jnp.sum(occ_f & lex_lt, axis=1).astype(jnp.int32)
         pos = jnp.where(rins, older + r_idx, FE + R)
 
         # `pos` ascends over the lex-sorted rows: searchsorted rebuild.
@@ -2051,7 +2080,7 @@ def tiered3_queue_pop_prefix(q: Tiered3DeviceQueue, length, k: int
 
 
 def tiered3_queue_extract(q: Tiered3DeviceQueue, max_len: int, lookaheads,
-                          t_cap=None, kernels: str = "xla"):
+                          t_cap=None, kernels: str = "xla", bound=None):
     """Window extraction from the front tier (paper Fig 2).
 
     Identical take rule and output as :func:`tiered_queue_extract`;
@@ -2070,6 +2099,14 @@ def tiered3_queue_extract(q: Tiered3DeviceQueue, max_len: int, lookaheads,
     elsewhere.  The bounded refill itself stays in XLA (it is the rare
     amortized path, not the per-batch one).
 
+    ``bound`` optionally caps the candidate set at a lexicographic
+    ``(time, seq)`` key: only events strictly lex-BEFORE it are
+    eligible.  This is the spill policy's ordering fence — while a
+    spilled event is held host-side, nothing at or past its key may
+    execute — and since the eligible set is a lex prefix of the sorted
+    candidates, the §III-B take rule sees it as the queue simply
+    ending earlier (XLA kernels only).
+
     Returns ``(q', ts, tys, args, length)``.
     """
     if max_len > q.front_cap:
@@ -2080,6 +2117,11 @@ def tiered3_queue_extract(q: Tiered3DeviceQueue, max_len: int, lookaheads,
     num_types = lookaheads.shape[0]
 
     if kernels == "pallas":
+        if bound is not None:
+            raise ValueError(
+                "lex-bounded extraction (spill) is XLA-only; use "
+                "queue_kernels='xla'"
+            )
         from repro.kernels.queue_front import window_extract
 
         q, _ts_c, _tys_c, _args_c, _seqs_c = tiered3_queue_peek_front(q, k)
@@ -2095,8 +2137,13 @@ def tiered3_queue_extract(q: Tiered3DeviceQueue, max_len: int, lookaheads,
         )
         return q, ts, tys, args, length
 
-    q, ts_c, tys_c, args_c, _seqs_c = tiered3_queue_peek_front(q, k)
+    q, ts_c, tys_c, args_c, seqs_c = tiered3_queue_peek_front(q, k)
     valid = tys_c >= 0
+    if bound is not None:
+        b_t, b_s = bound
+        valid = valid & (
+            (ts_c < b_t) | ((ts_c == b_t) & (seqs_c < b_s))
+        )
     la = lookaheads[jnp.clip(tys_c, 0, num_types - 1)]
     wins = jnp.where(valid, ts_c + la, jnp.inf)
     take = window_prefix_mask(ts_c, wins, valid, t_cap)
@@ -2122,6 +2169,56 @@ def _tiered3_boundary(q: Tiered3DeviceQueue):
     return jnp.minimum(
         jnp.minimum(m_min, jnp.min(q.s_times)), jnp.min(_run_mins(q))
     )
+
+
+def _lex_min_pair(t1, s1, t2, s2):
+    """Lexicographic min of two ``(time, seq)`` keys (elementwise)."""
+    t = jnp.minimum(t1, t2)
+    s = jnp.minimum(
+        jnp.where(t1 == t, s1, _I32_MAX),
+        jnp.where(t2 == t, s2, _I32_MAX),
+    )
+    return t, s
+
+
+def _tiered3_boundary_key(q: Tiered3DeviceQueue):
+    """Lexicographic ``(time, seq)`` form of :func:`_tiered3_boundary`:
+    the earliest full key outside the front tier.  Needed wherever the
+    time-only boundary is ambiguous — reabsorbing spilled rows whose
+    seqs are older than queued ones (:func:`tiered3_queue_absorb_rows`).
+    O(stage_cap + num_runs)."""
+    s_t = jnp.min(q.s_times)
+    s_s = jnp.min(jnp.where(
+        (q.s_times == s_t) & (q.s_types >= 0), q.s_seqs, _I32_MAX
+    ))
+    r_heads_t = _run_mins(q)
+    r_heads_s = jnp.where(
+        q.r_len > q.r_off,
+        jnp.take_along_axis(
+            q.r_seqs, jnp.clip(q.r_off, 0, q.stage_cap - 1)[:, None],
+            axis=1,
+        )[:, 0],
+        _I32_MAX,
+    )
+    r_t = jnp.min(r_heads_t)
+    r_s = jnp.min(jnp.where(r_heads_t == r_t, r_heads_s, _I32_MAX))
+    m_idx = jnp.clip(q.m_head, 0, q.main_phys - 1)
+    m_t = jnp.where(q.main_n > 0, jnp.take(q.m_times, m_idx), _INF)
+    m_s = jnp.where(q.main_n > 0, jnp.take(q.m_seqs, m_idx), _I32_MAX)
+    t, s = _lex_min_pair(s_t, s_s, r_t, r_s)
+    return _lex_min_pair(t, s, m_t, m_s)
+
+
+def tiered3_queue_next_key(q: Tiered3DeviceQueue):
+    """Full ``(time, seq)`` key of the earliest pending event —
+    ``(inf, i32_max)`` when empty.  The lex refinement of
+    :func:`tiered3_queue_next_time`, used by the spill policy's
+    while-loop guard (no event at or past the spilled bound may run
+    before the spill reabsorbs)."""
+    b_t, b_s = _tiered3_boundary_key(q)
+    t = jnp.where(q.front_n > 0, q.f_times[0], b_t)
+    s = jnp.where(q.front_n > 0, q.f_seqs[0], b_s)
+    return t, s
 
 
 def _tiered3_preflush(q: Tiered3DeviceQueue, R: int) -> Tiered3DeviceQueue:
@@ -2192,6 +2289,50 @@ def tiered3_queue_fill_rows_tagged(q: Tiered3DeviceQueue, rows, seqs,
         q, rows, _tiered3_boundary(q), seqs, insert, counters,
         kernels=kernels,
     )
+
+
+def tiered3_queue_absorb_rows(q: Tiered3DeviceQueue, rows, seqs
+                              ) -> Tiered3DeviceQueue:
+    """Reabsorb previously SPILLED rows carrying their original seqs.
+
+    The overflow='spill' policy diverts would-be ghosts to a host
+    buffer; at the next segment boundary they come back through here.
+    Unlike fresh emits, spilled rows' seqs are OLDER than seqs queued
+    after the spill, so both the boundary partition and the front-merge
+    placement must compare full lexicographic ``(time, seq)`` keys —
+    the ``b_seq`` mode of :func:`_tiered_fill_finish`.  Counters follow
+    the occupancy discipline of the tagged fill (``size`` = real
+    occupancy, ``dropped`` untouched, ``next_seq`` already past every
+    spilled seq); the caller guarantees the rows fit (occupancy +
+    rows <= capacity) — absorption never drops.
+
+    Host-driven (segment boundaries, off the hot path): rows are
+    chunked to ``stage_cap`` so each chunk satisfies the preflush
+    contract.  Row layout ``(time, type, arg...)``; ``type < 0`` rows
+    are skipped.
+    """
+    rows = jnp.asarray(rows, jnp.float32)
+    seqs = jnp.asarray(seqs, jnp.int32)
+    S = q.stage_cap
+    for start in range(0, int(rows.shape[0]), S):
+        chunk = rows[start:start + S]
+        chunk_seqs = seqs[start:start + S]
+        q = _tiered3_preflush(q, int(chunk.shape[0]))
+        insert = chunk[:, 1] >= 0
+        n_ins = jnp.sum(insert).astype(jnp.int32)
+        counters = dict(
+            size=q.size + n_ins,
+            next_seq=jnp.maximum(
+                q.next_seq,
+                jnp.max(jnp.where(insert, chunk_seqs + 1, 0)),
+            ),
+            dropped=q.dropped,
+        )
+        b_t, b_s = _tiered3_boundary_key(q)
+        q = _tiered_fill_finish(
+            q, chunk, b_t, chunk_seqs, insert, counters, b_seq=b_s
+        )
+    return q
 
 
 def tiered3_queue_to_flat(q: Tiered3DeviceQueue) -> DeviceQueue:

@@ -96,8 +96,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import validate as _validate
 from repro.core.engine import DeviceEngine
 from repro.core.events import ARG_WIDTH
+from repro.core.validate import FAULT_CLOCK
 from repro.core.queue import (
     DeviceQueue,
     Tiered3DeviceQueue,
@@ -107,6 +109,7 @@ from repro.core.queue import (
     tiered3_queue_from_host,
     tiered3_queue_has_pending,
     tiered3_queue_next_time,
+    tiered3_queue_occupancy,
     tiered3_queue_peek_front,
     tiered3_queue_pop_prefix,
     tiered3_queue_to_flat,
@@ -220,6 +223,12 @@ class ShardedDeviceEngine(DeviceEngine):
             )
         if self.shards < 1:
             raise ValueError(f"shards must be >= 1, got {self.shards}")
+        if self.overflow == "spill":
+            raise ValueError(
+                "overflow='spill' is not supported on the sharded engine "
+                "yet: the spill fence is a single-queue lex bound "
+                "(use overflow='drop' or 'error')"
+            )
         super().__post_init__(use_vectorized_queue)
 
     @classmethod
@@ -233,6 +242,8 @@ class ShardedDeviceEngine(DeviceEngine):
                      dispatch_mode: str = "switch",
                      hot_words=None,
                      queue_kernels: str = "xla",
+                     validate: str = "off",
+                     overflow: str = "drop",
                      t_end: float = float("inf")) -> "ShardedDeviceEngine":
         """Construct the sharded device backend from a frozen SimProgram
         (cf. :meth:`DeviceEngine.from_program`; the entity→shard mapping
@@ -252,6 +263,8 @@ class ShardedDeviceEngine(DeviceEngine):
             dispatch_mode=dispatch_mode,
             hot_words=hot_words,
             queue_kernels=queue_kernels,
+            validate=validate,
+            overflow=overflow,
             entity_handlers=program.device_entity_handlers() or None,
             shards=shards,
             shard_fn=shard_fn,
@@ -301,12 +314,24 @@ class ShardedDeviceEngine(DeviceEngine):
             dropped=jnp.int32(n - len(survivors)),
         )
 
+    # -- run accounting -----------------------------------------------------
+    def queue_occupancy(self, queue):
+        """Real pending-event count summed across shards."""
+        return sum(
+            (tiered3_queue_occupancy(q) for q in queue.shards),
+            jnp.int32(0),
+        )
+
+    def _cheap_fault_bits(self, queue):
+        return _validate.sharded_fault_bits(queue)
+
     # -- main loop ----------------------------------------------------------
-    def _run(self, state, queue, t_end, *, max_batches: int):
+    def _run(self, state, queue, t_end, max_batches, stats0):
         k = self.max_batch_len
         N = self.shards
         num_types = len(self.registry)
         lookaheads = self._lookaheads
+        validate_on = self.validate != "off"
 
         def cond(carry):
             state, sq, stats = carry
@@ -317,11 +342,16 @@ class ShardedDeviceEngine(DeviceEngine):
             next_t = jnp.min(jnp.stack(
                 [tiered3_queue_next_time(q) for q in sq.shards]
             ))
-            return (
+            ok = (
                 pending
                 & (stats["batches"] < max_batches)
                 & (next_t <= t_end)
             )
+            if validate_on:
+                ok = ok & (stats["fault_word"] == 0)
+            if self.overflow == "error":
+                ok = ok & (sq.dropped == 0)
+            return ok
 
         def body(carry):
             state, sq, stats = carry
@@ -398,24 +428,26 @@ class ShardedDeviceEngine(DeviceEngine):
                 dropped=sq.dropped + (num_valid - num_insert),
             )
             last_t = ts[jnp.maximum(length - 1, 0)]
+            prev_time = stats["time"]
             new_stats = {
                 "batches": stats["batches"] + 1,
                 "events": stats["events"] + length,
+                "emitted": stats["emitted"] + num_valid,
                 "time": jnp.maximum(stats["time"], last_t),
             }
             if self._track_word_counts:
                 code = self.codec.encode_jnp(tys, length)
                 new_stats["word_counts"] = \
                     stats["word_counts"].at[code].add(1)
+            if validate_on:
+                bits = self._cheap_fault_bits(sq)
+                bits = bits | jnp.where(
+                    (length > 0) & (ts[0] < prev_time),
+                    jnp.int32(FAULT_CLOCK), jnp.int32(0),
+                )
+                # Word only — the faulting step is reconstructed from
+                # ``batches`` at exit (see DeviceEngine.run).
+                new_stats["fault_word"] = stats["fault_word"] | bits
             return state, sq, new_stats
 
-        stats0 = {
-            "batches": jnp.int32(0),
-            "events": jnp.int32(0),
-            "time": jnp.float32(0.0),
-        }
-        if self._track_word_counts:
-            stats0["word_counts"] = jnp.zeros(
-                (self.codec.num_batches,), jnp.int32
-            )
         return jax.lax.while_loop(cond, body, (state, queue, stats0))

@@ -1,0 +1,384 @@
+"""On-device invariant auditing for the device engines (DESIGN.md §9).
+
+Two layers, selected by ``DeviceEngine(validate=...)``:
+
+* **cheap** — O(per-batch-work) checks folded into every super-step of
+  the ``lax.while_loop``: the functions here return an i32 *fault word*
+  (a bit per invariant class) that the engine ORs into its stats carry.
+  No host sync, no extra compiled programs — the checks ride the same
+  XLA module as the simulation, and the loop's ``cond`` gains
+  ``fault_word == 0`` so a corrupted pending set stops the run at the
+  first poisoned super-step instead of silently propagating.
+* **full** — an O(capacity) cross-tier audit (:func:`full_audit`) run
+  host-side at segment boundaries only (the checkpoint cadence), where
+  the queue is being snapshotted anyway.  It covers what the cheap
+  layer structurally cannot: duplicated seqs across tiers, sortedness
+  of every run-log remainder, the cross-tier boundary invariant, and
+  occupancy recounted from the raw buffers.
+
+The per-bit meaning is shared by both layers; ``FAULT_NAMES`` is the
+wire format surfaced on :class:`repro.api.RunResult` and in
+:class:`EngineFaultError`.
+
+Check costs are matched to the queue family they guard: the tiered
+fronts get O(front_cap) order/finiteness/seq scans (capacity-
+independent, like every tiered per-batch path), while ``flat`` /
+``reference`` — whose extraction is already O(capacity) per batch —
+get whole-array checks that cannot change their complexity class.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "EngineFaultError",
+    "FAULT_NAMES",
+    "FAULT_FRONT_ORDER",
+    "FAULT_TIME_NONFINITE",
+    "FAULT_SEQ_RANGE",
+    "FAULT_TIER_COUNTS",
+    "FAULT_CONSERVATION",
+    "FAULT_CLOCK",
+    "FAULT_OVERFLOW",
+    "FAULT_SPILL_STALL",
+    "FAULT_AUDIT",
+    "fault_names",
+    "full_audit",
+]
+
+# Packed fault-word layout (i32).  Bits are sticky: once set in the
+# while-loop carry they survive to the host.  The faulting super-step
+# is NOT carried on device — the loop guard freezes on a nonzero word,
+# so the engine reconstructs it from the batch counter at exit.
+FAULT_FRONT_ORDER = 1      # front/flat tier not (time, seq)-sorted
+FAULT_TIME_NONFINITE = 2   # NaN/inf timestamp on an occupied slot
+FAULT_SEQ_RANGE = 4        # occupied seq >= next_seq (counter bound)
+FAULT_TIER_COUNTS = 8      # tier counter outside its structural range
+FAULT_CONSERVATION = 16    # occupancy(+dropped) != size
+FAULT_CLOCK = 32           # window head precedes the committed clock
+FAULT_OVERFLOW = 64        # overflow='error' tripped (dropped > 0)
+FAULT_SPILL_STALL = 128    # spill held host-side but no room to absorb
+FAULT_AUDIT = 256          # full cross-tier audit finding (host-side)
+
+FAULT_NAMES = {
+    FAULT_FRONT_ORDER: "front_order",
+    FAULT_TIME_NONFINITE: "time_nonfinite",
+    FAULT_SEQ_RANGE: "seq_range",
+    FAULT_TIER_COUNTS: "tier_counts",
+    FAULT_CONSERVATION: "conservation",
+    FAULT_CLOCK: "clock_regression",
+    FAULT_OVERFLOW: "overflow",
+    FAULT_SPILL_STALL: "spill_stall",
+    FAULT_AUDIT: "full_audit",
+}
+
+
+def fault_names(word: int) -> list[str]:
+    """Decode a fault word into its invariant names (LSB first)."""
+    return [name for bit, name in sorted(FAULT_NAMES.items())
+            if int(word) & bit]
+
+
+class EngineFaultError(RuntimeError):
+    """A run tripped an engine invariant (or the overflow='error' /
+    spill policies could not proceed).  ``fault_word`` is the packed
+    bit set, ``fault_step`` the super-step that first set it (-1 when
+    detected host-side between segments), ``faults`` the decoded
+    names."""
+
+    def __init__(self, fault_word: int, fault_step: int = -1,
+                 detail: str = ""):
+        self.fault_word = int(fault_word)
+        self.fault_step = int(fault_step)
+        self.faults = fault_names(fault_word)
+        where = (f" at super-step {self.fault_step}"
+                 if self.fault_step >= 0 else "")
+        msg = (f"engine invariant violated{where}: "
+               f"{', '.join(self.faults) or hex(self.fault_word)}")
+        if detail:
+            msg += f" ({detail})"
+        super().__init__(msg)
+
+
+# ---------------------------------------------------------------------------
+# Cheap per-super-step checks (traced; return an i32 fault word)
+# ---------------------------------------------------------------------------
+
+def _bit(pred, bit):
+    return jnp.where(pred, jnp.int32(bit), jnp.int32(0))
+
+
+def _lex_sorted_bits(times, seqs, occ_n):
+    """FRONT_ORDER bit for a canonical occupied-prefix layout: every
+    adjacent occupied pair must ascend under (time, seq).  NaNs fail
+    every comparison, so a poisoned slot also trips this bit."""
+    i = jnp.arange(times.shape[0] - 1, dtype=jnp.int32)
+    pair_occ = (i + 1) < occ_n
+    t0, t1 = times[:-1], times[1:]
+    s0, s1 = seqs[:-1], seqs[1:]
+    ok = (t0 < t1) | ((t0 == t1) & (s0 < s1))
+    return _bit(jnp.any(pair_occ & ~ok), FAULT_FRONT_ORDER)
+
+
+def _occupied_slot_bits(times, seqs, occ_mask, next_seq):
+    bits = _bit(jnp.any(occ_mask & ~jnp.isfinite(times)),
+                FAULT_TIME_NONFINITE)
+    bits |= _bit(jnp.any(occ_mask & (seqs >= next_seq)), FAULT_SEQ_RANGE)
+    return bits
+
+
+def tiered3_fault_bits(q, *, local: bool) -> jnp.ndarray:
+    """Cheap fault word for one :class:`Tiered3DeviceQueue` —
+    O(front_cap + num_runs), the same bound as every tiered3 per-batch
+    path.  ``local=True`` applies the occupancy conservation discipline
+    of shard-local / spill-mode queues (``size`` == real occupancy,
+    ``dropped`` == 0); ``local=False`` the single-queue reference rule
+    (``size`` counts ghosts: occupancy + dropped == size).
+
+    This runs EVERY super-step inside the while-loop body, where each
+    kernel launch on a small array costs more than its arithmetic, so
+    the whole check compiles to TWO reductions: one fused max over
+    per-slot fault words covering the front (order / finiteness / seq
+    bounds — built from slices of the same arrays, which fuse into the
+    reduce producer; no concatenation materializes), and one sum over
+    the run pool whose per-run live counts are POISONED when a run's
+    offsets are structurally invalid, so a bad run surfaces through the
+    conservation equation.  Two coarsenings follow, both covered by the
+    exact host-side :func:`full_audit`: (a) max is not bitwise-OR
+    across slots — when different slots violate different invariants in
+    one super-step only the larger word is named (any violation is
+    still a nonzero word), and (b) a structurally-bad run reports
+    ``conservation`` rather than ``tier_counts``."""
+    F, S = q.front_cap, q.stage_cap
+    t, s = q.f_times, q.f_seqs
+    i = jnp.arange(F - 1, dtype=jnp.int32)
+    occ_i = i < q.front_n          # slot i occupied
+    pair_occ = (i + 1) < q.front_n  # slots i, i+1 both occupied
+    t0, t1 = t[:-1], t[1:]
+    s0, s1 = s[:-1], s[1:]
+    pair_ok = (t0 < t1) | ((t0 == t1) & (s0 < s1))
+    word = jnp.where(pair_occ & ~pair_ok,
+                     jnp.int32(FAULT_FRONT_ORDER), jnp.int32(0))
+    word |= jnp.where(occ_i & ~jnp.isfinite(t0),
+                      jnp.int32(FAULT_TIME_NONFINITE), jnp.int32(0))
+    word |= jnp.where(occ_i & (s0 >= q.next_seq),
+                      jnp.int32(FAULT_SEQ_RANGE), jnp.int32(0))
+    bits = jnp.max(word)
+    # the F-1'th slot has no successor pair; its slot checks are scalar
+    last_occ = q.front_n >= F
+    bits |= _bit(last_occ & ~jnp.isfinite(t[F - 1]), FAULT_TIME_NONFINITE)
+    bits |= _bit(last_occ & (s[F - 1] >= q.next_seq), FAULT_SEQ_RANGE)
+
+    live = q.r_len - q.r_off
+    run_bad = (q.r_off < 0) | (live < 0) | (q.r_len > S)
+    # poison makes the occupancy sum exceed any reachable size, so a
+    # corrupt run pool cannot cancel back to a conserved total
+    occ = (q.front_n + q.stage_n + q.main_n
+           + jnp.sum(jnp.where(run_bad, jnp.int32(1 << 24), live))
+           .astype(jnp.int32))
+    counts_ok = (
+        (q.front_n >= 0) & (q.front_n <= F)
+        & (q.stage_n >= 0) & (q.stage_n <= S)
+        & (q.main_n >= 0) & (q.main_n <= q.main_phys)
+    )
+    bits |= _bit(~counts_ok, FAULT_TIER_COUNTS)
+    conserved = (occ == q.size) if local else (occ + q.dropped == q.size)
+    bits |= _bit(~conserved, FAULT_CONSERVATION)
+    return bits
+
+
+def tiered_fault_bits(q) -> jnp.ndarray:
+    """Cheap fault word for a two-tier :class:`TieredDeviceQueue`."""
+    F, S = q.front_cap, q.stage_cap
+    occ_f = jnp.arange(F, dtype=jnp.int32) < q.front_n
+    bits = _lex_sorted_bits(q.f_times, q.f_seqs, q.front_n)
+    bits |= _occupied_slot_bits(q.f_times, q.f_seqs, occ_f, q.next_seq)
+    counts_ok = (
+        (q.front_n >= 0) & (q.front_n <= F)
+        & (q.stage_n >= 0) & (q.stage_n <= S)
+        & (q.main_n >= 0) & (q.main_n <= q.m_times.shape[0])
+    )
+    bits |= _bit(~counts_ok, FAULT_TIER_COUNTS)
+    occ = q.front_n + q.stage_n + q.main_n
+    bits |= _bit(occ + q.dropped != q.size, FAULT_CONSERVATION)
+    return bits
+
+
+def flat_fault_bits(q, *, sorted_layout: bool) -> jnp.ndarray:
+    """Cheap fault word for a flat :class:`DeviceQueue`.  O(capacity),
+    matching the flat/reference per-batch extraction cost.
+    ``sorted_layout=False`` (the reference queue) skips the order
+    check — its slot placement is legitimately unsorted."""
+    occ = q.types >= 0
+    n_occ = jnp.sum(occ).astype(jnp.int32)
+    bits = jnp.int32(0)
+    if sorted_layout:
+        # Canonical layout: occupied prefix, sorted.
+        bits |= _lex_sorted_bits(q.times, q.seqs, n_occ)
+        prefix_ok = ~jnp.any(occ & (jnp.cumsum(~occ) > 0))
+        bits |= _bit(~prefix_ok, FAULT_TIER_COUNTS)
+    bits |= _occupied_slot_bits(q.times, q.seqs, occ, q.next_seq)
+    bits |= _bit(n_occ + q.dropped != q.size, FAULT_CONSERVATION)
+    return bits
+
+
+def sharded_fault_bits(sq) -> jnp.ndarray:
+    """Cheap fault word for a :class:`ShardedQueue`: each shard audited
+    under the local discipline, plus the GLOBAL conservation law
+    Σ occupancy_i + dropped == size."""
+    from repro.core.queue import tiered3_queue_occupancy
+
+    bits = jnp.int32(0)
+    total_occ = jnp.int32(0)
+    for q in sq.shards:
+        bits |= tiered3_fault_bits(q, local=True)
+        total_occ = total_occ + tiered3_queue_occupancy(q)
+    bits |= _bit(total_occ + sq.dropped != sq.size, FAULT_CONSERVATION)
+    return bits
+
+
+# ---------------------------------------------------------------------------
+# Full cross-tier audit (host-side, segment boundaries only)
+# ---------------------------------------------------------------------------
+
+def _audit_columns(findings, label, times, seqs, *, expect_sorted):
+    if times.size == 0:
+        return
+    if not np.all(np.isfinite(times)):
+        findings.append((FAULT_TIME_NONFINITE,
+                         f"{label}: non-finite timestamp"))
+    if expect_sorted and times.size > 1:
+        t0, t1 = times[:-1], times[1:]
+        s0, s1 = seqs[:-1], seqs[1:]
+        if not np.all((t0 < t1) | ((t0 == t1) & (s0 < s1))):
+            findings.append((FAULT_FRONT_ORDER,
+                             f"{label}: not (time, seq)-sorted"))
+
+
+def _tiered3_live_columns(q):
+    """(label, times, seqs) per live tier region of a tiered3 queue."""
+    off = np.asarray(q.r_off)
+    rlen = np.asarray(q.r_len)
+    head, main_n = int(q.m_head), int(q.main_n)
+    fn = int(q.front_n)
+    sn = int(q.stage_n)
+    regions = [
+        ("front", np.asarray(q.f_times)[:fn], np.asarray(q.f_seqs)[:fn],
+         True),
+        ("staging", np.asarray(q.s_times)[:sn], np.asarray(q.s_seqs)[:sn],
+         False),
+        ("main", np.asarray(q.m_times)[head:head + main_n],
+         np.asarray(q.m_seqs)[head:head + main_n], True),
+    ]
+    for i in range(q.num_runs):
+        regions.append((
+            f"run[{i}]",
+            np.asarray(q.r_times)[i, off[i]:rlen[i]],
+            np.asarray(q.r_seqs)[i, off[i]:rlen[i]],
+            True,
+        ))
+    return regions
+
+
+def _audit_tiered3(q, findings, *, local: bool):
+    F, S = q.front_cap, q.stage_cap
+    fn, sn = int(q.front_n), int(q.stage_n)
+    off, rlen = np.asarray(q.r_off), np.asarray(q.r_len)
+    if not (0 <= fn <= F and 0 <= sn <= S and 0 <= int(q.main_n)
+            and np.all((off >= 0) & (off <= rlen) & (rlen <= S))):
+        findings.append((FAULT_TIER_COUNTS,
+                         "tier counter outside structural range"))
+        return  # slicing below would be ill-defined
+    regions = _tiered3_live_columns(q)
+    for label, times, seqs, expect_sorted in regions:
+        _audit_columns(findings, label, times, seqs,
+                       expect_sorted=expect_sorted)
+    all_seqs = np.concatenate([r[2] for r in regions]) if regions else \
+        np.zeros((0,), np.int32)
+    if all_seqs.size and np.unique(all_seqs).size != all_seqs.size:
+        findings.append((FAULT_SEQ_RANGE, "duplicated seq across tiers"))
+    if all_seqs.size and int(all_seqs.max()) >= int(q.next_seq):
+        findings.append((FAULT_SEQ_RANGE,
+                         "queued seq >= next_seq counter"))
+    # Cross-tier boundary invariant: max(front) <= min(everything else)
+    # under the lexicographic key.
+    front = regions[0]
+    rest = [(t[i], s[i]) for _, t, s, _ in regions[1:]
+            for i in range(t.size)]
+    if fn and rest:
+        fmax = (float(front[1][-1]), int(front[2][-1]))
+        rmin = min(rest)
+        if fmax > rmin:
+            findings.append((FAULT_FRONT_ORDER,
+                             f"tier boundary inverted: front max {fmax} "
+                             f"> rest min {rmin}"))
+    occ = sum(r[1].size for r in regions)
+    expect = int(q.size) if local else int(q.size) - int(q.dropped)
+    if occ != expect:
+        findings.append((FAULT_CONSERVATION,
+                         f"occupancy {occ} != expected {expect} "
+                         f"(size {int(q.size)}, dropped "
+                         f"{int(q.dropped)})"))
+
+
+def full_audit(queue, *, local: bool = False) -> list[tuple[int, str]]:
+    """O(capacity) cross-tier audit of a pending set; returns findings
+    as ``(fault_bit, message)``.  Accepts a single tiered3 queue, a
+    :class:`~repro.core.sharded.ShardedQueue`, or a flat/tiered queue
+    (reduced checks).  Host-side — call at segment boundaries only."""
+    findings: list[tuple[int, str]] = []
+    if hasattr(queue, "shards") and not hasattr(queue, "f_times"):
+        total_occ = 0
+        for i, q in enumerate(queue.shards):
+            shard_findings: list[tuple[int, str]] = []
+            _audit_tiered3(q, shard_findings, local=True)
+            findings.extend((bit, f"shard {i}: {msg}")
+                            for bit, msg in shard_findings)
+            total_occ += sum(
+                r[1].size for r in _tiered3_live_columns(q))
+        if total_occ + int(queue.dropped) != int(queue.size):
+            findings.append((
+                FAULT_CONSERVATION,
+                f"global occupancy {total_occ} + dropped "
+                f"{int(queue.dropped)} != size {int(queue.size)}"))
+        return findings
+    if hasattr(queue, "r_times"):
+        _audit_tiered3(queue, findings, local=local)
+        return findings
+    if hasattr(queue, "f_times"):  # two-tier
+        _audit_columns(findings, "front",
+                       np.asarray(queue.f_times)[:int(queue.front_n)],
+                       np.asarray(queue.f_seqs)[:int(queue.front_n)],
+                       expect_sorted=True)
+        occ = int(queue.front_n) + int(queue.stage_n) + int(queue.main_n)
+        if occ + int(queue.dropped) != int(queue.size):
+            findings.append((FAULT_CONSERVATION,
+                             f"occupancy {occ} + dropped != size"))
+        return findings
+    # flat / reference
+    occ_mask = np.asarray(queue.types) >= 0
+    times = np.asarray(queue.times)[occ_mask]
+    seqs = np.asarray(queue.seqs)[occ_mask]
+    if times.size and not np.all(np.isfinite(times)):
+        findings.append((FAULT_TIME_NONFINITE,
+                         "flat: non-finite timestamp"))
+    if seqs.size and np.unique(seqs).size != seqs.size:
+        findings.append((FAULT_SEQ_RANGE, "flat: duplicated seq"))
+    if int(occ_mask.sum()) + int(queue.dropped) != int(queue.size):
+        findings.append((FAULT_CONSERVATION,
+                         "flat: occupancy + dropped != size"))
+    return findings
+
+
+def raise_on_findings(findings, *, step: int = -1):
+    """Collapse :func:`full_audit` findings into one typed error."""
+    if not findings:
+        return
+    word = FAULT_AUDIT
+    for bit, _ in findings:
+        word |= bit
+    detail = "; ".join(msg for _, msg in findings)
+    raise EngineFaultError(word, step, detail)

@@ -40,26 +40,9 @@ import jax
 
 from repro.checkpoint.manager import CheckpointManager
 
-
-@dataclasses.dataclass
-class FailureEvent:
-    step: int
-    kind: str           # crash | lost_node | slow_node
-    node: int = 0
-    detail: str = ""
-
-
-class FailureInjector:
-    def __init__(self, events: list[FailureEvent]):
-        self.events = sorted(events, key=lambda e: e.step)
-        self.fired: list[FailureEvent] = []
-
-    def poll(self, step: int) -> Optional[FailureEvent]:
-        if self.events and self.events[0].step <= step:
-            ev = self.events.pop(0)
-            self.fired.append(ev)
-            return ev
-        return None
+# The injector moved to repro.runtime.injection so the DES engines'
+# fault harness can share it; re-exported here for compatibility.
+from repro.runtime.injection import FailureEvent, FailureInjector  # noqa: F401
 
 
 class Heartbeat:

@@ -1,0 +1,25 @@
+"""Test-support harnesses that ship with the library (not pytest-only):
+fault injection for the device engines (:mod:`repro.testing.faults`),
+runnable standalone in CI smoke steps via ``python -m
+repro.testing.faults``.
+"""
+
+from repro.testing.faults import (
+    CORRUPTIONS,
+    SimulatedCrash,
+    run_all_scenarios,
+    run_corruption_scenario,
+    run_crash_scenario,
+    run_overflow_scenario,
+    tiny_phold,
+)
+
+__all__ = [
+    "CORRUPTIONS",
+    "SimulatedCrash",
+    "run_all_scenarios",
+    "run_corruption_scenario",
+    "run_crash_scenario",
+    "run_overflow_scenario",
+    "tiny_phold",
+]

@@ -1,0 +1,319 @@
+"""Fault-injection harness for the device engines (ISSUE 7 tentpole 3).
+
+Reuses the :class:`repro.runtime.injection.FailureInjector` schedule
+shape to corrupt LIVE queue snapshots between run segments (through
+``CompiledSim.run``'s ``_segment_hook`` seam) and asserts the two
+properties the robustness layer promises:
+
+* **detected** — every corruption class trips the on-device invariant
+  auditor (``validate="cheap"`` bits in the while-loop carry, or the
+  ``"full"`` O(capacity) cross-tier audit at the segment boundary) as a
+  typed :class:`~repro.core.validate.EngineFaultError`;
+* **recovered** — restoring the checkpoint saved before the corruption
+  and replaying produces a final state bit-identical to a never-faulted
+  run (checkpoints are saved BEFORE the injection seam fires, so the
+  newest checkpoint is always clean).
+
+Corruption classes (CORRUPTIONS maps kind -> queue transform):
+
+``nan_time``           a front slot's timestamp becomes NaN
+``nonmonotone_front``  two front keys swapped out of (time, seq) order
+``dup_seq``            one seq duplicated across two front slots
+``truncate_run_log``   a live run's ``r_len`` rewound to ``r_off``
+                       (events silently vanish from the log)
+``seq_rewind``         the global seq counter rewound below queued seqs
+
+Two engine-level scenarios ride along: ``crash`` (a simulated crash
+mid-run, recovered by ``resume_from="latest"``) and ``overflow_storm``
+(a queue too small for its event population: ``overflow="error"``
+fail-fast detection, ``overflow="spill"`` graceful completion).
+
+CI smoke: ``python -m repro.testing.faults [--scenario crash]``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import tempfile
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api import Config, SimProgram
+from repro.core.validate import EngineFaultError, fault_names
+from repro.runtime.injection import FailureEvent, FailureInjector
+
+I32_MAX = 2**31 - 1
+
+
+class SimulatedCrash(RuntimeError):
+    """Raised by the injection seam to model a mid-run process death."""
+
+
+# ---------------------------------------------------------------------------
+# Model: a tiny self-sustaining PHOLD
+# ---------------------------------------------------------------------------
+
+def tiny_phold(*, capacity: int = 256, seeds: int = 8,
+               max_batch_len: int = 4) -> SimProgram:
+    """Self-sustaining PHOLD: every event reschedules one successor with
+    delay in [0.4, 1.0] (declared lookahead 0.4 — honest), so the
+    pending set never drains and every run bound is ``max_batches``."""
+    prog = SimProgram("tiny_phold", config=Config(
+        max_batch_len=max_batch_len, capacity=capacity, max_emit=2,
+    ))
+
+    @prog.handler("BOUNCE", lookahead=0.4, emits=True)
+    def bounce(state, t, arg):
+        d = 0.7 + 0.3 * jnp.sin(t + arg[0])
+        e = jnp.full((2, 6), -1.0, jnp.float32).at[:, 0].set(0.0)
+        e = e.at[0, 0].set(d).at[0, 1].set(0.0).at[0, 2].set(arg[0] + 1.0)
+        return state + 1, e
+
+    for i in range(seeds):
+        prog.schedule(0.1 * i, "BOUNCE", [float(i)])
+    return prog
+
+
+# ---------------------------------------------------------------------------
+# Queue corruptions (tiered3 single-queue layout)
+# ---------------------------------------------------------------------------
+
+def _corrupt_nan_time(q):
+    return q._replace(f_times=q.f_times.at[0].set(jnp.float32(jnp.nan)))
+
+
+def _corrupt_nonmonotone_front(q):
+    t0, t1 = q.f_times[0], q.f_times[1]
+    return q._replace(f_times=q.f_times.at[0].set(t1).at[1].set(t0))
+
+
+def _corrupt_dup_seq(q):
+    return q._replace(
+        f_times=q.f_times.at[1].set(q.f_times[0]),
+        f_seqs=q.f_seqs.at[1].set(q.f_seqs[0]),
+    )
+
+
+def _corrupt_truncate_run_log(q):
+    # Rewind the longest live run to empty: its events vanish from the
+    # log while `size` still counts them.
+    live = np.asarray(q.r_len) - np.asarray(q.r_off)
+    i = int(np.argmax(live))
+    if live[i] <= 0:
+        # No live run at this boundary: vanish a front slot instead —
+        # the same conservation violation (occupancy < size).
+        n = q.front_n
+        return q._replace(
+            f_times=q.f_times.at[n - 1].set(jnp.inf),
+            f_types=q.f_types.at[n - 1].set(-1),
+            f_seqs=q.f_seqs.at[n - 1].set(I32_MAX),
+            front_n=n - 1,
+        )
+    return q._replace(r_len=q.r_len.at[i].set(q.r_off[i]))
+
+
+def _corrupt_seq_rewind(q):
+    return q._replace(next_seq=jnp.int32(0))
+
+
+CORRUPTIONS = {
+    "nan_time": _corrupt_nan_time,
+    "nonmonotone_front": _corrupt_nonmonotone_front,
+    "dup_seq": _corrupt_dup_seq,
+    "truncate_run_log": _corrupt_truncate_run_log,
+    "seq_rewind": _corrupt_seq_rewind,
+}
+
+_MAX_BATCHES = 60
+_CKPT_EVERY = 5
+_CORRUPT_AT_SEG = 4
+
+
+def _final_fingerprint(result):
+    """Bit-comparable digest of a run: state, counters, residual queue."""
+    from repro.core.queue import tiered3_queue_to_flat
+
+    q = result.raw["final_queue"]
+    flat = tiered3_queue_to_flat(q)
+    return (
+        int(result.state), result.events, result.batches, result.dropped,
+        float(result.final_time),
+        np.asarray(flat.times).tobytes(), np.asarray(flat.types).tobytes(),
+        np.asarray(flat.seqs).tobytes(),
+    )
+
+
+def run_corruption_scenario(kind: str, *, tmpdir: str,
+                            validate: str = "full", sim=None) -> dict:
+    """Inject ``kind`` at a segment boundary; assert detection + exact
+    recovery.  Returns a small report dict (used by tests and the CLI).
+
+    ``sim`` reuses an already-built ``tiny_phold`` CompiledSim (it must
+    have ``validate != 'off'``) so a battery of scenarios pays for one
+    compile.
+    """
+    corrupt = CORRUPTIONS[kind]
+    if sim is None:
+        sim = tiny_phold().build(backend="device", validate=validate)
+
+    # Fingerprint a never-faulted run (no checkpoint dir — it must not
+    # pollute the "latest" checkpoint the recovery below resumes from).
+    clean = sim.run(jnp.int32(0), max_batches=_MAX_BATCHES)
+    want = _final_fingerprint(clean)
+
+    injector = FailureInjector([FailureEvent(_CORRUPT_AT_SEG, kind)])
+
+    def hook(seg, state, queue, stats):
+        if injector.poll(seg) is not None:
+            return state, corrupt(queue), stats
+        return None
+
+    detected = None
+    try:
+        sim.run(jnp.int32(0), max_batches=_MAX_BATCHES,
+                checkpoint_every=_CKPT_EVERY, checkpoint_dir=tmpdir,
+                _segment_hook=hook)
+    except EngineFaultError as e:
+        detected = e
+    if detected is None:
+        raise AssertionError(f"{kind}: corruption was NOT detected")
+    if not injector.fired:
+        raise AssertionError(f"{kind}: injector never fired")
+
+    # Recovery: the newest checkpoint predates the corruption (the
+    # driver saves before the injection seam) — restore and replay.
+    recovered = sim.run(jnp.int32(0), max_batches=_MAX_BATCHES,
+                        checkpoint_every=_CKPT_EVERY,
+                        checkpoint_dir=tmpdir, resume_from="latest")
+    got = _final_fingerprint(recovered)
+    if got != want:
+        raise AssertionError(f"{kind}: restore-and-replay diverged")
+    return {"kind": kind, "detected": fault_names(detected.fault_word),
+            "fault_step": detected.fault_step, "recovered": True}
+
+
+def run_crash_scenario(*, tmpdir: str, validate: str = "cheap",
+                       sim=None) -> dict:
+    """Simulated crash mid-run; resume from the latest checkpoint and
+    assert the stitched run is bit-identical to an uninterrupted one."""
+
+    if sim is None:
+        sim = tiny_phold().build(backend="device", validate=validate)
+
+    clean = sim.run(jnp.int32(0), max_batches=_MAX_BATCHES)
+    want = _final_fingerprint(clean)
+
+    injector = FailureInjector([FailureEvent(_CORRUPT_AT_SEG, "crash")])
+
+    def hook(seg, state, queue, stats):
+        if injector.poll(seg) is not None:
+            raise SimulatedCrash(f"injected crash at segment {seg}")
+        return None
+
+    try:
+        sim.run(jnp.int32(0), max_batches=_MAX_BATCHES,
+                checkpoint_every=_CKPT_EVERY, checkpoint_dir=tmpdir,
+                _segment_hook=hook)
+        raise AssertionError("crash: injected crash did not fire")
+    except SimulatedCrash:
+        pass
+
+    resumed = sim.run(jnp.int32(0), max_batches=_MAX_BATCHES,
+                      checkpoint_every=_CKPT_EVERY,
+                      checkpoint_dir=tmpdir, resume_from="latest")
+    got = _final_fingerprint(resumed)
+    if got != want:
+        raise AssertionError("crash: resumed run diverged from clean run")
+    return {"kind": "crash", "detected": ["crash"], "recovered": True}
+
+
+def run_overflow_scenario(*, validate: str = "cheap") -> dict:
+    """Overflow storm: a queue too small for its event population.
+    ``overflow='error'`` must fail fast with a typed overflow fault;
+    ``overflow='spill'`` must complete bit-identically to an oversized
+    queue with zero drops."""
+
+    def storm(cap):
+        p = SimProgram("storm", config=Config(
+            max_batch_len=2, capacity=cap, max_emit=2))
+
+        @p.handler("GEN", lookahead=0.1, emits=True)
+        def gen(state, t, arg):
+            alive = t < 2.0
+            e = jnp.full((2, 6), -1.0, jnp.float32).at[:, 0].set(0.0)
+            e = e.at[0, 0].set(jnp.where(alive, 0.3, -1.0))
+            e = e.at[0, 1].set(jnp.where(alive, 0.0, -1.0))
+            e = e.at[1, 0].set(jnp.where(alive, 0.45, -1.0))
+            e = e.at[1, 1].set(jnp.where(alive, 0.0, -1.0))
+            return state + 1, e
+
+        for i in range(6):
+            p.schedule(0.05 * i, "GEN")
+        return p
+
+    detected = None
+    try:
+        storm(16).build(backend="device", overflow="error",
+                        validate=validate).run(jnp.int32(0))
+    except EngineFaultError as e:
+        detected = e
+    if detected is None:
+        raise AssertionError("overflow_storm: 'error' policy did not raise")
+
+    big = storm(16384).build(backend="device").run(jnp.int32(0))
+    sp = storm(64).build(backend="device", overflow="spill",
+                         validate=validate).run(jnp.int32(0))
+    ok = (int(sp.state) == int(big.state) and sp.events == big.events
+          and float(sp.final_time) == float(big.final_time)
+          and sp.dropped == 0 and sp.spilled == 0)
+    if not ok:
+        raise AssertionError(
+            "overflow_storm: spill run diverged from the oversized queue"
+        )
+    return {"kind": "overflow_storm",
+            "detected": fault_names(detected.fault_word),
+            "recovered": True}
+
+
+def run_all_scenarios(*, validate: str = "full") -> list[dict]:
+    reports = []
+    sim = tiny_phold().build(backend="device", validate=validate)
+    for kind in CORRUPTIONS:
+        with tempfile.TemporaryDirectory() as d:
+            reports.append(run_corruption_scenario(
+                kind, tmpdir=d, validate=validate, sim=sim))
+    with tempfile.TemporaryDirectory() as d:
+        reports.append(run_crash_scenario(tmpdir=d, sim=sim))
+    reports.append(run_overflow_scenario())
+    return reports
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--scenario", default="all",
+                    choices=["all", "crash", "overflow_storm",
+                             *CORRUPTIONS])
+    ap.add_argument("--validate", default="full",
+                    choices=["cheap", "full"])
+    args = ap.parse_args(argv)
+    if args.scenario == "all":
+        reports = run_all_scenarios(validate=args.validate)
+    elif args.scenario == "crash":
+        with tempfile.TemporaryDirectory() as d:
+            reports = [run_crash_scenario(tmpdir=d)]
+    elif args.scenario == "overflow_storm":
+        reports = [run_overflow_scenario()]
+    else:
+        with tempfile.TemporaryDirectory() as d:
+            reports = [run_corruption_scenario(
+                args.scenario, tmpdir=d, validate=args.validate)]
+    for r in reports:
+        print(f"[fault-injection] {r['kind']}: detected={r['detected']} "
+              f"recovered={r['recovered']}")
+    print(f"[fault-injection] {len(reports)} scenario(s) OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

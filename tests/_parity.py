@@ -57,6 +57,20 @@ BATCHED = (
     "device/fused-2shard",
 )
 
+# The resume axis: device runtimes whose interrupted-then-resumed runs
+# must be bit-identical to a straight run (segmented execution carries
+# the whole loop state through the checkpoint, so this holds by
+# construction — these labels prove it across queue mode × dispatch
+# mode × shard count).  Host backends have no checkpoint driver.
+RESUME_BACKENDS = (
+    "device/tiered3",
+    "device/flat",
+    "device/masked",
+    "device/fused",
+    "device/tiered3-2shard",
+    "device/fused-2shard",
+)
+
 
 def run_all(build_program, state0, *, backends=None, run_kw=None):
     """Build the program per backend and run it; label -> RunResult.
@@ -106,3 +120,88 @@ def assert_parity(results, *, base="host/unbatched", batched=None,
         batched = [k for k in BATCHED if k in results]
     batch_counts = {results[k].batches for k in batched}
     assert len(batch_counts) <= 1, batch_counts
+
+
+def queue_flat_view(result):
+    """``(times, types, seqs)`` of the residual pending set, as numpy.
+
+    Normalizes every device queue family (flat, tiered, tiered3,
+    sharded) to the LIVE entries in ``(time, seq)`` order, so residual
+    queues compare bit-exactly across resume boundaries and across
+    physical layouts (a 2-shard queue and a single queue holding the
+    same pending set produce identical views).
+    """
+    q = result.raw["final_queue"]
+    name = type(q).__name__
+    if name == "ShardedQueue":
+        from repro.core.sharded import sharded_queue_to_flat
+        q = sharded_queue_to_flat(q)
+    elif name == "Tiered3DeviceQueue":
+        from repro.core.queue import tiered3_queue_to_flat
+        q = tiered3_queue_to_flat(q)
+    elif name == "TieredDeviceQueue":
+        from repro.core.queue import tiered_queue_to_flat
+        q = tiered_queue_to_flat(q)
+    times = np.asarray(q.times)
+    types = np.asarray(q.types)
+    seqs = np.asarray(q.seqs)
+    live = types >= 0
+    times, types, seqs = times[live], types[live], seqs[live]
+    order = np.lexsort((seqs, times))
+    return (times[order], types[order], seqs[order])
+
+
+def assert_resume_parity(straight, resumed, *, label=""):
+    """An interrupted-then-resumed run must be BIT-IDENTICAL to the
+    straight run: state leaves, executed/batch/drop counters, final
+    time, and the residual pending set (times, types, seqs)."""
+    import jax
+
+    for leaf_s, leaf_r in zip(
+        jax.tree_util.tree_leaves(straight.state),
+        jax.tree_util.tree_leaves(resumed.state),
+    ):
+        np.testing.assert_array_equal(
+            np.asarray(leaf_r), np.asarray(leaf_s), err_msg=label
+        )
+    assert resumed.events == straight.events, label
+    assert resumed.batches == straight.batches, label
+    assert resumed.dropped == straight.dropped, label
+    assert np.float32(resumed.final_time) == np.float32(
+        straight.final_time), label
+    for got, want in zip(queue_flat_view(resumed),
+                         queue_flat_view(straight)):
+        np.testing.assert_array_equal(got, want, err_msg=label)
+
+
+def run_interrupted_then_resumed(sim, state0, *, tmpdir,
+                                 max_batches, checkpoint_every,
+                                 crash_at_segment, run_kw=None):
+    """Drive ``sim`` segmented, crash it at ``crash_at_segment`` via the
+    injection seam, then resume from the latest checkpoint; returns the
+    resumed RunResult.  Raises if the crash never fires (the run ended
+    before the target segment — a miswired scenario, not a pass)."""
+    from repro.testing.faults import SimulatedCrash
+
+    run_kw = run_kw or {}
+    fired = []
+
+    def hook(seg, state, queue, stats):
+        if seg == crash_at_segment:
+            fired.append(seg)
+            raise SimulatedCrash(f"injected crash at segment {seg}")
+        return None
+
+    try:
+        sim.run(state0, max_batches=max_batches,
+                checkpoint_every=checkpoint_every, checkpoint_dir=tmpdir,
+                _segment_hook=hook, **run_kw)
+    except SimulatedCrash:
+        pass
+    assert fired, (
+        f"crash segment {crash_at_segment} never reached "
+        f"(run finished early — lower crash_at_segment)"
+    )
+    return sim.run(state0, max_batches=max_batches,
+                   checkpoint_every=checkpoint_every, checkpoint_dir=tmpdir,
+                   resume_from="latest", **run_kw)

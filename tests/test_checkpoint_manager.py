@@ -1,0 +1,97 @@
+"""CheckpointManager integrity: full-content checksums, single-leaf
+restore, atomicity and retention invariants the fault-tolerant run
+driver depends on.
+
+The regression of record: ``_checksum`` used to hash only the first
+1 MiB of a leaf, so a bit flip past that offset restored silently — a
+silent-corruption hole exactly where it matters most (capacity-sized
+queue buffers are the largest leaves).  The checksum now covers every
+byte; the tests here flip a byte in the LAST MiB of a multi-MiB leaf
+and require the restore to fail loudly.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager, _checksum
+
+
+def _flip_byte(path, offset_from_end=-1):
+    with open(path, "r+b") as f:
+        f.seek(offset_from_end, os.SEEK_END)
+        b = f.read(1)
+        f.seek(-1, os.SEEK_CUR)
+        f.write(bytes([b[0] ^ 0xFF]))
+
+
+def test_bit_flip_past_first_mib_detected(tmp_path):
+    """Corrupt the tail of a >1 MiB leaf: restore must raise, not
+    silently hand back a poisoned queue buffer."""
+    mgr = CheckpointManager(str(tmp_path))
+    big = np.arange(3 * (1 << 20), dtype=np.int8)  # 3 MiB
+    mgr.save(1, {"big": big})
+
+    _flip_byte(str(tmp_path / "step_0000000001" / "big.npy"))
+
+    with pytest.raises(IOError, match="checksum mismatch"):
+        mgr.restore({"big": np.zeros_like(big)}, 1)
+    with pytest.raises(IOError, match="checksum mismatch"):
+        mgr.restore_leaf("big", 1)
+
+
+def test_checksum_covers_every_byte():
+    a = np.zeros(2 * (1 << 20), dtype=np.uint8)
+    b = a.copy()
+    b[-1] = 1  # differs only in the final byte, well past 1 MiB
+    assert _checksum(a) != _checksum(b)
+    # and shape participates (same bytes, different logical layout)
+    assert _checksum(a) != _checksum(a.reshape(2, 1 << 20))
+
+
+def test_restore_leaf_round_trip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    tree = {
+        "state": np.float32(3.5),
+        "pool_rows": np.arange(12, dtype=np.float32).reshape(2, 6),
+        "nested": {"seqs": np.array([4, 7, 9], np.int32)},
+    }
+    mgr.save(5, tree)
+    np.testing.assert_array_equal(
+        mgr.restore_leaf("pool_rows", 5), tree["pool_rows"])
+    np.testing.assert_array_equal(
+        mgr.restore_leaf("nested.seqs"), tree["nested"]["seqs"])
+    with pytest.raises(KeyError, match="available"):
+        mgr.restore_leaf("no_such_leaf", 5)
+
+
+def test_restore_leaf_variable_length(tmp_path):
+    """The spill pool changes length between checkpoints; restore_leaf
+    takes the shape from the file, not from a template."""
+    mgr = CheckpointManager(str(tmp_path), keep_last=10)
+    mgr.save(1, {"pool": np.zeros((0, 6), np.float32)})
+    mgr.save(2, {"pool": np.ones((7, 6), np.float32)})
+    assert mgr.restore_leaf("pool", 1).shape == (0, 6)
+    assert mgr.restore_leaf("pool", 2).shape == (7, 6)
+    assert mgr.restore_leaf("pool").shape == (7, 6)  # latest
+
+
+def test_manifest_checksums_recorded(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    arr = np.arange(100, dtype=np.float64)
+    mgr.save(3, {"x": arr})
+    with open(tmp_path / "step_0000000003" / "manifest.json") as f:
+        manifest = json.load(f)
+    assert manifest["leaves"]["x"]["checksum"] == _checksum(arr)
+
+
+def test_retention_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_last=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, {"x": np.int32(s)})
+    assert mgr.all_steps() == [3, 4]
+    assert mgr.latest_step() == 4
+    restored, step = mgr.restore({"x": np.int32(0)})
+    assert step == 4 and int(restored["x"]) == 4
