@@ -24,6 +24,11 @@ the same definition with bit-identical final state and normalized
 :class:`RunResult` stats.  The classes in :mod:`repro.core` remain the
 backend layer underneath; reach for them only when benchmarking a
 specific runtime mechanism.
+
+Open-system runs stream arrivals from a host-side source instead of
+pre-seeding them: ``sim.run(state0, arrivals=PoissonSource(...))`` —
+see :mod:`repro.stream` and DESIGN.md §10 for the determinism contract
+(a streamed run is bit-identical to pre-seeding the same trace).
 """
 
 from repro.core.events import ARG_WIDTH, emits_events
@@ -36,17 +41,35 @@ from repro.core.program import (
     normalize_arg,
 )
 from repro.core.validate import FAULT_NAMES, EngineFaultError, fault_names
+from repro.stream import (
+    ArrivalSource,
+    BurstySource,
+    DiurnalSource,
+    PoissonSource,
+    StreamFeeder,
+    TraceReader,
+    TraceWriter,
+    source_events,
+)
 
 __all__ = [
     "ARG_WIDTH",
     "EMIT_WIDTH",
+    "ArrivalSource",
+    "BurstySource",
     "CompiledSim",
     "Config",
+    "DiurnalSource",
     "EngineFaultError",
     "FAULT_NAMES",
+    "PoissonSource",
     "RunResult",
     "SimProgram",
+    "StreamFeeder",
+    "TraceReader",
+    "TraceWriter",
     "emits_events",
     "fault_names",
     "normalize_arg",
+    "source_events",
 ]

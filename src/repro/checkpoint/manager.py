@@ -127,13 +127,17 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    _MISSING = object()
+
     def restore_leaf(self, name: str, step: Optional[int] = None, *,
-                     verify: bool = True) -> np.ndarray:
+                     verify: bool = True, default=_MISSING) -> np.ndarray:
         """Load ONE leaf by manifest name, shape taken from the file.
 
         Escape hatch for variable-length sidecar leaves (e.g. the
-        engine's host spill pool) that cannot appear in a fixed-shape
-        restore template.
+        engine's host spill pool, the streaming arrival cursor) that
+        cannot appear in a fixed-shape restore template.  ``default``
+        (when given) is returned for a leaf absent from the manifest —
+        back-compat for sidecars newer than the checkpoint.
         """
         step = step if step is not None else self.latest_step()
         if step is None:
@@ -142,6 +146,8 @@ class CheckpointManager:
         with open(os.path.join(path, "manifest.json")) as f:
             manifest = json.load(f)
         if name not in manifest["leaves"]:
+            if default is not CheckpointManager._MISSING:
+                return default
             raise KeyError(
                 f"leaf {name!r} not in checkpoint step {step}; "
                 f"available: {sorted(manifest['leaves'])}")
@@ -182,6 +188,10 @@ class CheckpointManager:
 
         leaves = []
         for name, tmpl, shard in zip(names, flat_template, flat_shard):
+            if not hasattr(tmpl, "shape"):
+                # accept python/numpy scalars as template leaves
+                # (shape ()); arrays and ShapeDtypeStructs pass through
+                tmpl = np.asarray(tmpl)
             arr = np.load(os.path.join(path, name + ".npy"))
             meta = manifest["leaves"][name]
             if verify and _checksum(arr) != meta["checksum"]:

@@ -92,6 +92,7 @@ from repro.core.queue import (
     device_queue_next_time,
     device_queue_next_time_ref,
     device_queue_push_rows,
+    tiered3_queue_absorb_rows,
     tiered3_queue_extract,
     tiered3_queue_fill_rows,
     tiered3_queue_fill_rows_tagged,
@@ -626,6 +627,18 @@ class DeviceEngine:
             return tiered_queue_occupancy(queue)
         return jnp.sum(queue.types >= 0).astype(jnp.int32)
 
+    def absorb_rows(self, queue, rows, seqs, insert):
+        """Absorb externally keyed rows (stream arrivals) where
+        ``insert`` is set.  Caller guarantees the masked rows fit;
+        seqs come from the run's reserved arrival range (DESIGN.md
+        §10), so absorbed rows land at their pre-seeded lex rank."""
+        if self.queue_mode != "tiered3":
+            raise ValueError(
+                f"absorb_rows requires queue_mode='tiered3', got "
+                f"{self.queue_mode!r}"
+            )
+        return tiered3_queue_absorb_rows(queue, rows, seqs, insert=insert)
+
     def _cheap_fault_bits(self, queue):
         """O(front) per-super-step invariant bits for this queue mode."""
         if self.queue_mode == "tiered3":
@@ -731,6 +744,20 @@ class DeviceEngine:
         # segmented run re-enter this loop mid-count.
         validate_on = self.validate != "off"
         spill = self.overflow == "spill"
+        # The admission fence: nothing at or past the lex-earliest
+        # OUTSTANDING external key — a spilled row awaiting reabsorb,
+        # or the next unabsorbed stream arrival — may execute.  Spill
+        # mode always carries the bound; a streamed run injects
+        # ``bound_t``/``bound_seq`` into the incoming stats, and the
+        # carry STRUCTURE is part of the jit cache key, so closed runs
+        # compile a fence-free loop at zero cost.
+        fenced = spill or "bound_t" in stats0
+        if fenced and self.queue_mode != "tiered3":
+            raise ValueError(
+                "the admission fence (overflow='spill' / streamed "
+                "arrivals) requires queue_mode='tiered3', got "
+                f"{self.queue_mode!r}"
+            )
 
         def cond(carry):
             state, queue, stats = carry
@@ -746,20 +773,20 @@ class DeviceEngine:
                 ok = ok & (stats["fault_word"] == 0)
             if self.overflow == "error":
                 ok = ok & (queue.dropped == 0)
-            if spill:
-                # Nothing at or past the lex-earliest spilled key may
-                # run before the host reabsorbs the spill buffer.
+            if fenced:
                 nk_t, nk_s = tiered3_queue_next_key(queue)
                 below = (nk_t < stats["bound_t"]) | (
                     (nk_t == stats["bound_t"])
                     & (nk_s < stats["bound_seq"])
                 )
-                ok = ok & (stats["spill_n"] == 0) & below
+                ok = ok & below
+            if spill:
+                ok = ok & (stats["spill_n"] == 0)
             return ok
 
         def body(carry):
             state, queue, stats = carry
-            if spill:
+            if fenced:
                 queue, ts, tys, args, length = self._extract(
                     queue, t_end,
                     bound=(stats["bound_t"], stats["bound_seq"]),
@@ -787,6 +814,11 @@ class DeviceEngine:
                 new_stats["word_counts"] = stats["word_counts"].at[code].add(1)
             if spill:
                 new_stats.update(spill_delta)
+            elif fenced:
+                # Fence-only carry: the bound is host-set between
+                # segments and rides the loop unchanged.
+                new_stats["bound_t"] = stats["bound_t"]
+                new_stats["bound_seq"] = stats["bound_seq"]
             if validate_on:
                 bits = self._cheap_fault_bits(queue)
                 bits = bits | jnp.where(

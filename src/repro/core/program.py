@@ -212,10 +212,19 @@ class RunResult:
     ``None`` on host backends.
 
     ``emitted``/``pending``/``spilled`` (device backends) complete the
-    conservation law ``seeded + emitted == events + pending + dropped
-    + spilled``; ``fault_word``/``fault_step`` surface the on-device
-    auditor's packed invariant bits (``0``/``-1`` when clean or when
-    ``validate="off"``) — see :mod:`repro.core.validate`.
+    conservation law ``seeded + ingested + emitted == events + pending
+    + dropped + spilled + shed``; ``fault_word``/``fault_step`` surface
+    the on-device auditor's packed invariant bits (``0``/``-1`` when
+    clean or when ``validate="off"``) — see :mod:`repro.core.validate`.
+
+    ``ingested``/``shed`` account the open-system arrival stream of
+    ``run(arrivals=...)`` (DESIGN.md §10): ``ingested`` counts every
+    arrival CONSUMED from the source — absorbed into the queue, parked
+    in the spill pool, or refused — mirroring how ``emitted`` counts
+    dropped/spilled emits; ``shed`` is the refused subset (nonzero only
+    under ``backpressure="shed"``), which balances the law's right side
+    exactly like ``dropped`` does for emits.  Both are 0 for closed
+    runs on every backend.
     """
 
     state: Any
@@ -231,6 +240,8 @@ class RunResult:
     spilled: int = 0
     fault_word: int = 0
     fault_step: int = -1
+    ingested: int = 0
+    shed: int = 0
 
     @property
     def mean_batch_length(self) -> float:
@@ -249,6 +260,8 @@ class RunResult:
             "spilled": self.spilled,
             "fault_word": self.fault_word,
             "fault_step": self.fault_step,
+            "ingested": self.ingested,
+            "shed": self.shed,
         }
 
 
@@ -707,25 +720,81 @@ class CompiledSim:
             stats["bound_seq"] = jnp.int32(2**31 - 1)
         return queue, pool_rows, pool_seqs, stats
 
+    def _absorb_fn(self):
+        """Jitted masked arrival absorb, cached per CompiledSim.
+
+        The admitted count rides a traced ``[lo, hi)`` prefix mask and
+        the queue is donated, so ONE compile serves every segment
+        boundary of a streamed run — the per-boundary cost is a device
+        call, not a trace."""
+        fn = getattr(self, "_absorb_jit", None)
+        if fn is None:
+            eng = self.engine
+
+            def absorb(queue, rows, seqs, lo, hi):
+                idx = jnp.arange(rows.shape[0], dtype=jnp.int32)
+                return eng.absorb_rows(
+                    queue, rows, seqs, (idx >= lo) & (idx < hi)
+                )
+
+            fn = jax.jit(absorb, donate_argnums=(0,))
+            self._absorb_jit = fn
+        return fn
+
+    def _queue_next_time(self, queue):
+        """Earliest pending timestamp (host float), single or sharded."""
+        from repro.core.queue import tiered3_queue_next_time
+
+        if hasattr(queue, "shards"):
+            return min(
+                float(np.asarray(tiered3_queue_next_time(q)))
+                for q in queue.shards
+            )
+        return float(np.asarray(tiered3_queue_next_time(queue)))
+
     @staticmethod
     def _save_checkpoint(manager, step, state, queue, stats,
-                         pool_rows, pool_seqs):
+                         pool_rows, pool_seqs, *, extra=None, strip=()):
         # "dropped" lives on the queue (re-derived after every segment),
         # not in the loop carry — keep the saved stats restorable
-        # against the initial_run_stats template.
-        manager.save_async(step, {
+        # against the initial_run_stats template.  Fence-only streamed
+        # runs additionally strip the host-injected bound keys (the
+        # template never carries them; they are recomputed from the
+        # restored cursor at the first resumed boundary).
+        drop = {"dropped", *strip}
+        payload = {
             "state": state,
             "queue": queue,
-            "stats": {k: v for k, v in stats.items() if k != "dropped"},
+            "stats": {k: v for k, v in stats.items() if k not in drop},
             "pool_rows": np.asarray(pool_rows),
             "pool_seqs": np.asarray(pool_seqs),
-        })
+        }
+        if extra:
+            payload.update(extra)
+        manager.save_async(step, payload)
 
     def _run_device(self, state, evs, t_end, total_batches, *,
                     checkpoint_every, checkpoint_dir, resume_from,
-                    segment_hook):
+                    segment_hook, arrivals=None, backpressure="block",
+                    stream_prefetch=True):
         eng = self.engine
         spill = getattr(eng, "overflow", "drop") == "spill"
+        streamed = arrivals is not None
+        if streamed:
+            if getattr(eng, "queue_mode", None) != "tiered3":
+                raise ValueError(
+                    "run(arrivals=...) on the device backend requires "
+                    f"queue_mode='tiered3', got {eng.queue_mode!r}: the "
+                    "admission fence is a tiered3 lex bound"
+                )
+            from repro.core.sharded import ShardedDeviceEngine
+            if (eng.queue_kernels == "pallas"
+                    and not isinstance(eng, ShardedDeviceEngine)):
+                raise ValueError(
+                    "run(arrivals=...) needs the bounded extract's lex "
+                    "fence, which the pallas front tier does not "
+                    "implement — build with queue_kernels='xla'"
+                )
         if (checkpoint_every is not None or resume_from is not None) \
                 and checkpoint_dir is None:
             raise ValueError(
@@ -746,6 +815,16 @@ class CompiledSim:
             pool_rows = np.zeros((0, EMIT_WIDTH), np.float32)
             pool_seqs = np.zeros((0,), np.int32)
         stats = None
+        cursor, ingested, shed = 0, 0, 0
+        if streamed:
+            # Reserve the arrival seq range upfront: arrival j carries
+            # seq len(evs)+j, and mid-run emits draw seqs PAST the
+            # reservation — so an absorbed arrival occupies exactly the
+            # (time, seq) lex rank it would have had pre-seeded, even
+            # under timestamp ties (DESIGN.md §10).
+            queue = queue._replace(
+                next_seq=queue.next_seq + jnp.int32(len(arrivals))
+            )
 
         if resume_from is not None:
             step = None if resume_from == "latest" else int(resume_from)
@@ -762,17 +841,45 @@ class CompiledSim:
             pool_seqs = np.asarray(
                 manager.restore_leaf("pool_seqs", at_step), np.int32
             )
+            saved_cursor = manager.restore_leaf(
+                "ingest_cursor", at_step, default=None
+            )
+            if saved_cursor is not None and not streamed:
+                raise ValueError(
+                    "checkpoint was written by a streamed run "
+                    f"(arrival cursor {int(saved_cursor)}): resume with "
+                    "the same arrivals= source"
+                )
+            if streamed and saved_cursor is not None:
+                cursor = int(np.asarray(saved_cursor))
+                ingested = int(np.asarray(manager.restore_leaf(
+                    "ingested", at_step, default=np.int64(0))))
+                shed = int(np.asarray(manager.restore_leaf(
+                    "shed", at_step, default=np.int64(0))))
+
+        feeder = None
+        if streamed:
+            from repro.stream.ingest import StreamFeeder
+            feeder = StreamFeeder(
+                arrivals, len(evs), start=cursor,
+                prefetch=stream_prefetch,
+            )
 
         seg_index = 0
         idle_rounds = 0
         try:
-            state, queue, stats, pool_rows, pool_seqs = self._segment_loop(
+            (state, queue, stats, pool_rows, pool_seqs,
+             ingested, shed) = self._segment_loop(
                 state, queue, stats, pool_rows, pool_seqs,
                 t_end=t_end, total_batches=total_batches, seg=seg,
                 spill=spill, manager=manager, segment_hook=segment_hook,
                 seg_index=seg_index, idle_rounds=idle_rounds,
+                feeder=feeder, backpressure=backpressure,
+                ingested=ingested, shed=shed,
             )
         finally:
+            if feeder is not None:
+                feeder.close()
             if manager is not None:
                 # Even on a fault path, drain the async writer so the
                 # newest on-disk checkpoint is complete (atomic rename
@@ -796,18 +903,95 @@ class CompiledSim:
             spilled=int(pool_seqs.size),
             fault_word=int(np.asarray(stats.get("fault_word", 0))),
             fault_step=int(np.asarray(stats.get("fault_step", -1))),
+            ingested=int(ingested),
+            shed=int(shed),
         )
 
     def _segment_loop(self, state, queue, stats, pool_rows, pool_seqs, *,
                       t_end, total_batches, seg, spill, manager,
-                      segment_hook, seg_index, idle_rounds):
-        from repro.core.validate import FAULT_SPILL_STALL, EngineFaultError
+                      segment_hook, seg_index, idle_rounds,
+                      feeder=None, backpressure="block",
+                      ingested=0, shed=0):
+        from repro.core.validate import (
+            FAULT_INGEST,
+            FAULT_SPILL_STALL,
+            EngineFaultError,
+        )
 
         eng = self.engine
+        streamed = feeder is not None
         while True:
+            progressed = False
             if spill and pool_seqs.size:
                 queue, pool_rows, pool_seqs, stats = \
                     self._absorb_spill(queue, pool_rows, pool_seqs, stats)
+            # -- streamed admission: at most ONE arrival block per
+            # boundary, so the admitted/spilled/shed split is a pure
+            # function of the cursor, the horizon, and queue occupancy
+            # — never of prefetch timing.
+            if streamed and feeder.has_pending():
+                # Arrivals past the horizon are never consumed: they
+                # stay in the source, like queued events past t_end
+                # stay in the queue.
+                adm = feeder.admissible(t_end)
+                if adm:
+                    occ = int(np.asarray(eng.queue_occupancy(queue)))
+                    k = min(adm, max(eng.capacity - occ, 0))
+                    if k > 0:
+                        rows_d, seqs_d, lo = feeder.device_block()
+                        queue = self._absorb_fn()(
+                            queue, rows_d, seqs_d,
+                            jnp.int32(lo), jnp.int32(lo + k),
+                        )
+                        feeder.advance(k)
+                        ingested += k
+                        progressed = True
+                    rest = adm - k
+                    if rest > 0:
+                        if spill:
+                            r_rows, r_seqs = feeder.host_slice(rest)
+                            pool_rows = np.concatenate(
+                                [pool_rows, r_rows])
+                            pool_seqs = np.concatenate(
+                                [pool_seqs, r_seqs])
+                            feeder.advance(rest)
+                            ingested += rest
+                            progressed = True
+                        elif backpressure == "shed":
+                            feeder.advance(rest)
+                            ingested += rest
+                            shed += rest
+                            progressed = True
+                        elif backpressure == "error":
+                            raise EngineFaultError(
+                                FAULT_INGEST,
+                                0 if stats is None
+                                else int(np.asarray(stats["batches"])),
+                                detail=(
+                                    f"{rest} arrival(s) found the "
+                                    f"capacity-{eng.capacity} queue "
+                                    "full (backpressure='error')"
+                                ),
+                            )
+                        # backpressure='block': the rows wait in the
+                        # feeder; the fence keeps order safe and the
+                        # stall detector below converts a wedged
+                        # topology into FAULT_INGEST.
+            if streamed:
+                # Refresh the admission fence: the lex-min outstanding
+                # external key — next unconsumed arrival vs. spilled
+                # pool head — with (inf, I32_MAX) meaning no fence.
+                stats = dict(eng.initial_run_stats()
+                             if stats is None else stats)
+                f_t, f_s = feeder.next_key()
+                if spill and pool_seqs.size:
+                    order = np.lexsort((pool_seqs, pool_rows[:, 0]))
+                    p_key = (float(pool_rows[order[0], 0]),
+                             int(pool_seqs[order[0]]))
+                    if p_key < (f_t, f_s):
+                        f_t, f_s = p_key
+                stats["bound_t"] = jnp.float32(f_t)
+                stats["bound_seq"] = jnp.int32(f_s)
             done = 0 if stats is None else int(np.asarray(stats["batches"]))
             target = (total_batches if seg is None
                       else min(total_batches, done + seg))
@@ -815,6 +999,8 @@ class CompiledSim:
                 state, queue, max_batches=target, t_end=t_end, stats=stats
             )
             new_done = int(stats["batches"])
+            if new_done > done:
+                progressed = True
             if spill and int(np.asarray(stats.get("spill_n", 0))) > 0:
                 n = int(stats["spill_n"])
                 pool_rows = np.concatenate(
@@ -830,50 +1016,73 @@ class CompiledSim:
             # always a clean pre-corruption snapshot, so fault recovery
             # is restore-latest-and-replay.
             if manager is not None and seg is not None:
-                self._save_checkpoint(manager, new_done, state, queue,
-                                      stats, pool_rows, pool_seqs)
+                self._save_checkpoint(
+                    manager, new_done, state, queue, stats,
+                    pool_rows, pool_seqs,
+                    extra=(dict(
+                        ingest_cursor=np.int64(feeder.cursor),
+                        ingested=np.int64(ingested),
+                        shed=np.int64(shed),
+                    ) if streamed else None),
+                    strip=(("bound_t", "bound_seq")
+                           if streamed and not spill else ()),
+                )
             if segment_hook is not None:
                 out = segment_hook(seg_index, state, queue, stats)
                 if out is not None:
                     state, queue, stats = out
             if new_done >= total_batches:
                 break
-            if spill and pool_seqs.size:
-                from repro.core.queue import tiered3_queue_next_time
-                qt = float(np.asarray(tiered3_queue_next_time(queue)))
-                if qt > t_end and float(pool_rows[:, 0].min()) > t_end:
+            pool_live = bool(spill and pool_seqs.size)
+            feeder_live = streamed and feeder.has_pending()
+            if pool_live or feeder_live:
+                qt = self._queue_next_time(queue)
+                pool_t = (float(pool_rows[:, 0].min()) if pool_live
+                          else float("inf"))
+                feed_t = (feeder.next_time() if feeder_live
+                          else float("inf"))
+                if qt > t_end and pool_t > t_end and feed_t > t_end:
                     # Everything outstanding is past the horizon — the
-                    # spilled remainder stays pending, like the queue's.
+                    # external remainder stays pending, like the
+                    # queue's own post-horizon events.
                     break
-                if new_done == done:
+                if not progressed:
                     idle_rounds += 1
-                    # One idle round is legal (the absorb/rebalance runs
-                    # NEXT iteration); repeated idleness means the fence
-                    # can never clear.
+                    # One idle round is legal (the absorb/rebalance
+                    # runs NEXT iteration); repeated idleness means
+                    # the fence can never clear.
                     if idle_rounds >= 3:
+                        word = (FAULT_INGEST if feeder_live
+                                else FAULT_SPILL_STALL)
+                        n_out = (int(pool_seqs.size) if pool_live
+                                 else feeder.n - feeder.cursor)
                         raise EngineFaultError(
-                            FAULT_SPILL_STALL, new_done,
-                            detail=(f"{pool_seqs.size} spilled event(s) "
-                                    "outstanding but no segment can make "
-                                    "progress"),
+                            word, new_done,
+                            detail=(f"{n_out} external event(s) "
+                                    "outstanding but no segment can "
+                                    "make progress"),
                         )
                 else:
                     idle_rounds = 0
                 continue
             if new_done < target:
                 # Loop exited before its batch target: drained, horizon,
-                # or spill fence with an empty pool — all terminal.
+                # or admission fence with nothing outstanding — all
+                # terminal.
                 break
-        return state, queue, stats, pool_rows, pool_seqs
+        return state, queue, stats, pool_rows, pool_seqs, ingested, shed
 
     def run(self, state, *, until: float | None = None,
             max_batches: int | None = None,
             max_events: int | None = None,
             events: Sequence | None = None,
+            arrivals=None,
+            backpressure: str = "block",
             checkpoint_every: int | None = None,
             checkpoint_dir: str | None = None,
             resume_from: int | str | None = None,
-            _segment_hook: Callable | None = None) -> RunResult:
+            _segment_hook: Callable | None = None,
+            _stream_prefetch: bool = True) -> RunResult:
         """Execute until the pending set drains (or a bound trips).
 
         ``until`` stops before any event later than it runs (identical
@@ -883,6 +1092,24 @@ class CompiledSim:
         replaces the program's initial schedule for this run, as
         ``(time, type_name_or_id[, arg])`` tuples.
 
+        ``arrivals`` opens the system (DESIGN.md §10): an
+        :class:`repro.stream.ArrivalSource` streamed into the run in
+        fixed blocks.  The result is bit-identical to pre-seeding the
+        same trace (state, executed events, dropped, final_time) as
+        long as neither run overflows; arrivals with ``time > until``
+        are never consumed.  On the device backend blocks are absorbed
+        at segment boundaries under the lex admission fence with
+        double-buffered host→device staging; ``backpressure`` picks
+        what happens when an admissible arrival finds the queue full:
+        ``"block"`` (wait for capacity; a wedged topology raises
+        ``FAULT_INGEST``), ``"shed"`` (drop it, counted in
+        ``RunResult.shed``) or ``"error"`` (raise immediately).  With
+        ``overflow='spill'`` the non-fitting remainder joins the spill
+        pool instead (never sheds).  Device streaming requires
+        ``queue_mode='tiered3'`` (+ ``queue_kernels='xla'`` on the
+        single queue); host backends push the stream into the unbounded
+        heap (only ``backpressure='block'`` is meaningful there).
+
         Device backends additionally run SEGMENTED: ``checkpoint_every=N``
         snapshots the full engine pytree (state, every queue tier, the
         cumulative stats carry) to ``checkpoint_dir`` every N super-steps
@@ -890,12 +1117,23 @@ class CompiledSim:
         (async + atomic, off the hot path), and ``resume_from=step`` (or
         ``"latest"``) restores one and continues — a resumed run is
         bit-identical to an uninterrupted one because the while-loop
-        carry IS the checkpoint.  ``_segment_hook(seg_index, state,
-        queue, stats)`` is the fault-injection seam: called between
-        segments, it may return a replacement ``(state, queue, stats)``
-        triple (tests only).
+        carry IS the checkpoint (streamed runs snapshot the arrival
+        cursor and ingest counters alongside it).  ``_segment_hook(
+        seg_index, state, queue, stats)`` is the fault-injection seam:
+        called between segments, it may return a replacement ``(state,
+        queue, stats)`` triple (tests only).
         """
         t_end = float("inf") if until is None else float(until)
+        if backpressure not in ("block", "shed", "error"):
+            raise ValueError(
+                f"backpressure must be 'block', 'shed' or 'error', "
+                f"got {backpressure!r}"
+            )
+        if arrivals is None and backpressure != "block":
+            raise ValueError(
+                "backpressure= configures streamed runs — pass "
+                "arrivals= as well"
+            )
         evs = self._initial_events(events)
         if self.backend == "device":
             if max_events is not None:
@@ -910,6 +1148,9 @@ class CompiledSim:
                 checkpoint_dir=checkpoint_dir,
                 resume_from=resume_from,
                 segment_hook=_segment_hook,
+                arrivals=arrivals,
+                backpressure=backpressure,
+                stream_prefetch=_stream_prefetch,
             )
         if (checkpoint_every is not None or checkpoint_dir is not None
                 or resume_from is not None or _segment_hook is not None):
@@ -918,9 +1159,29 @@ class CompiledSim:
                 "device-backend knobs; the host backend would silently "
                 "ignore them — drop them or build with backend='device'"
             )
+        if arrivals is not None and backpressure != "block":
+            raise ValueError(
+                "host backends push the stream into an unbounded heap: "
+                "backpressure='shed'/'error' can never trigger there — "
+                "use the default 'block' or build backend='device'"
+            )
         queue = HostEventQueue()
         for (t, type_id, arg) in evs:
             queue.push(t, type_id, arg)
+        n_ingested = 0
+        if arrivals is not None:
+            # Host iterator path: seeds pushed first (seqs 0..n0-1),
+            # then the stream in source order (seqs n0..) — exactly the
+            # device reservation discipline, so the heap's (time, seq)
+            # total order matches the closed pre-seeded run's.
+            arrivals.seek(0)
+            for block in arrivals.blocks():
+                for row in np.asarray(block, np.float32):
+                    if row[1] < 0:
+                        continue
+                    queue.push(float(row[0]), int(row[1]),
+                               normalize_arg(row[2:]))
+                    n_ingested += 1
         if self.variant == "unbatched":
             from repro.core.scheduler import run_unbatched
 
@@ -943,4 +1204,5 @@ class CompiledSim:
             final_time=float(rs.final_time),
             rollbacks=rs.rollbacks,
             raw=rs,
+            ingested=n_ingested,
         )

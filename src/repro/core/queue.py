@@ -2291,20 +2291,25 @@ def tiered3_queue_fill_rows_tagged(q: Tiered3DeviceQueue, rows, seqs,
     )
 
 
-def tiered3_queue_absorb_rows(q: Tiered3DeviceQueue, rows, seqs
-                              ) -> Tiered3DeviceQueue:
-    """Reabsorb previously SPILLED rows carrying their original seqs.
+def tiered3_queue_absorb_rows(q: Tiered3DeviceQueue, rows, seqs,
+                              insert=None) -> Tiered3DeviceQueue:
+    """Absorb out-of-band rows carrying externally assigned seqs.
 
-    The overflow='spill' policy diverts would-be ghosts to a host
-    buffer; at the next segment boundary they come back through here.
-    Unlike fresh emits, spilled rows' seqs are OLDER than seqs queued
-    after the spill, so both the boundary partition and the front-merge
-    placement must compare full lexicographic ``(time, seq)`` keys —
-    the ``b_seq`` mode of :func:`_tiered_fill_finish`.  Counters follow
-    the occupancy discipline of the tagged fill (``size`` = real
-    occupancy, ``dropped`` untouched, ``next_seq`` already past every
-    spilled seq); the caller guarantees the rows fit (occupancy +
-    rows <= capacity) — absorption never drops.
+    Two callers: the overflow='spill' policy reabsorbing previously
+    spilled rows at a segment boundary, and the streaming ingest path
+    absorbing arrival blocks (DESIGN.md §10).  Unlike fresh emits, the
+    rows' seqs may be OLDER than seqs queued after them, so both the
+    boundary partition and the front-merge placement must compare full
+    lexicographic ``(time, seq)`` keys — the ``b_seq`` mode of
+    :func:`_tiered_fill_finish`.  Counters follow the occupancy
+    discipline of the tagged fill (``size`` = real occupancy,
+    ``dropped`` untouched, ``next_seq`` maxed past every absorbed seq);
+    the caller guarantees the inserted rows fit (occupancy + inserted
+    <= capacity) — absorption never drops.
+
+    ``insert`` optionally masks rows (ANDed with ``type >= 0``): the
+    streamed admission path uses a traced ``[lo, hi)`` prefix mask so
+    one jitted absorb serves any admitted-row count.
 
     Host-driven (segment boundaries, off the hot path): rows are
     chunked to ``stage_cap`` so each chunk satisfies the preflush
@@ -2318,19 +2323,21 @@ def tiered3_queue_absorb_rows(q: Tiered3DeviceQueue, rows, seqs
         chunk = rows[start:start + S]
         chunk_seqs = seqs[start:start + S]
         q = _tiered3_preflush(q, int(chunk.shape[0]))
-        insert = chunk[:, 1] >= 0
-        n_ins = jnp.sum(insert).astype(jnp.int32)
+        insert_c = chunk[:, 1] >= 0
+        if insert is not None:
+            insert_c = insert_c & jnp.asarray(insert)[start:start + S]
+        n_ins = jnp.sum(insert_c).astype(jnp.int32)
         counters = dict(
             size=q.size + n_ins,
             next_seq=jnp.maximum(
                 q.next_seq,
-                jnp.max(jnp.where(insert, chunk_seqs + 1, 0)),
+                jnp.max(jnp.where(insert_c, chunk_seqs + 1, 0)),
             ),
             dropped=q.dropped,
         )
         b_t, b_s = _tiered3_boundary_key(q)
         q = _tiered_fill_finish(
-            q, chunk, b_t, chunk_seqs, insert, counters, b_seq=b_s
+            q, chunk, b_t, chunk_seqs, insert_c, counters, b_seq=b_s
         )
     return q
 

@@ -105,9 +105,11 @@ from repro.core.queue import (
     Tiered3DeviceQueue,
     _prefix_rank,
     _small_lex_perm,
+    tiered3_queue_absorb_rows,
     tiered3_queue_fill_rows_tagged,
     tiered3_queue_from_host,
     tiered3_queue_has_pending,
+    tiered3_queue_next_key,
     tiered3_queue_next_time,
     tiered3_queue_occupancy,
     tiered3_queue_peek_front,
@@ -325,6 +327,31 @@ class ShardedDeviceEngine(DeviceEngine):
     def _cheap_fault_bits(self, queue):
         return _validate.sharded_fault_bits(queue)
 
+    def absorb_rows(self, sq, rows, seqs, insert):
+        """Absorb stream-arrival rows where ``insert`` is set: route
+        through ``shard_fn`` like any exchange, absorb per shard under
+        the full lex key, and advance the GLOBAL counters (``size`` by
+        the inserted count — the occupancy discipline; ``dropped``
+        untouched).  Caller guarantees the masked rows fit globally."""
+        rows = jnp.asarray(rows, jnp.float32)
+        seqs = jnp.asarray(seqs, jnp.int32)
+        insert = jnp.asarray(insert) & (rows[:, 1] >= 0)
+        dest = self._shard_of(rows[:, 1].astype(jnp.int32), rows[:, 2:])
+        shard_qs = tuple(
+            tiered3_queue_absorb_rows(q, rows, seqs,
+                                      insert=insert & (dest == i))
+            for i, q in enumerate(sq.shards)
+        )
+        n_ins = jnp.sum(insert).astype(jnp.int32)
+        return ShardedQueue(
+            shards=shard_qs,
+            size=sq.size + n_ins,
+            next_seq=jnp.maximum(
+                sq.next_seq, jnp.max(jnp.where(insert, seqs + 1, 0))
+            ),
+            dropped=sq.dropped,
+        )
+
     # -- main loop ----------------------------------------------------------
     def _run(self, state, queue, t_end, max_batches, stats0):
         k = self.max_batch_len
@@ -332,6 +359,11 @@ class ShardedDeviceEngine(DeviceEngine):
         num_types = len(self.registry)
         lookaheads = self._lookaheads
         validate_on = self.validate != "off"
+        # Streamed-arrival admission fence (DESIGN.md §10): carried
+        # structurally, exactly as in the single-queue engine — closed
+        # runs compile a fence-free loop.
+        fenced = "bound_t" in stats0
+        I32_MAX = jnp.int32(2**31 - 1)
 
         def cond(carry):
             state, sq, stats = carry
@@ -351,6 +383,20 @@ class ShardedDeviceEngine(DeviceEngine):
                 ok = ok & (stats["fault_word"] == 0)
             if self.overflow == "error":
                 ok = ok & (sq.dropped == 0)
+            if fenced:
+                # The globally earliest pending (time, seq) must be
+                # lex-below the bound, else the segment ends and the
+                # host absorbs the next arrival block first.
+                keys = [tiered3_queue_next_key(q) for q in sq.shards]
+                kt = jnp.stack([t for t, _ in keys])
+                ks = jnp.stack([s for _, s in keys])
+                nk_t = jnp.min(kt)
+                nk_s = jnp.min(jnp.where(kt == nk_t, ks, I32_MAX))
+                below = (nk_t < stats["bound_t"]) | (
+                    (nk_t == stats["bound_t"])
+                    & (nk_s < stats["bound_seq"])
+                )
+                ok = ok & below
             return ok
 
         def body(carry):
@@ -376,6 +422,16 @@ class ShardedDeviceEngine(DeviceEngine):
             args_c = cargs[order]
             src_c = csrc[order]
             valid = tys_c >= 0
+            if fenced:
+                # Candidates at/past the admission bound are invisible
+                # this super-step; they form a suffix of the lex-merged
+                # order, so the §III-B prefix take rule is unaffected.
+                seqs_c = cseqs[order]
+                valid = valid & (
+                    (ts_c < stats["bound_t"])
+                    | ((ts_c == stats["bound_t"])
+                       & (seqs_c < stats["bound_seq"]))
+                )
             la = lookaheads[jnp.clip(tys_c, 0, num_types - 1)]
             wins = jnp.where(valid, ts_c + la, jnp.inf)
             take = window_prefix_mask(ts_c, wins, valid, t_end)
@@ -439,6 +495,9 @@ class ShardedDeviceEngine(DeviceEngine):
                 code = self.codec.encode_jnp(tys, length)
                 new_stats["word_counts"] = \
                     stats["word_counts"].at[code].add(1)
+            if fenced:
+                new_stats["bound_t"] = stats["bound_t"]
+                new_stats["bound_seq"] = stats["bound_seq"]
             if validate_on:
                 bits = self._cheap_fault_bits(sq)
                 bits = bits | jnp.where(

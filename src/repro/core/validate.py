@@ -45,6 +45,7 @@ __all__ = [
     "FAULT_OVERFLOW",
     "FAULT_SPILL_STALL",
     "FAULT_AUDIT",
+    "FAULT_INGEST",
     "fault_names",
     "full_audit",
 ]
@@ -62,6 +63,8 @@ FAULT_CLOCK = 32           # window head precedes the committed clock
 FAULT_OVERFLOW = 64        # overflow='error' tripped (dropped > 0)
 FAULT_SPILL_STALL = 128    # spill held host-side but no room to absorb
 FAULT_AUDIT = 256          # full cross-tier audit finding (host-side)
+FAULT_INGEST = 512         # arrival stream stalled (backpressure) or
+                           # rejected (backpressure='error'), host-side
 
 FAULT_NAMES = {
     FAULT_FRONT_ORDER: "front_order",
@@ -73,6 +76,7 @@ FAULT_NAMES = {
     FAULT_OVERFLOW: "overflow",
     FAULT_SPILL_STALL: "spill_stall",
     FAULT_AUDIT: "full_audit",
+    FAULT_INGEST: "ingest_stall",
 }
 
 

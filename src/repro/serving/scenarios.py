@@ -46,7 +46,11 @@ import jax.numpy as jnp
 
 from repro.core.program import EMIT_WIDTH, Config, SimProgram
 
-__all__ = ["build_admission_program", "initial_state"]
+__all__ = [
+    "build_admission_program",
+    "build_open_admission_program",
+    "initial_state",
+]
 
 _ARRIVE, _ADMIT, _TICK = 0.0, 1.0, 2.0
 
@@ -168,5 +172,91 @@ def build_admission_program(*, num_slots: int = 8, num_requests: int = 64,
         return state, emits
 
     prog.schedule(0.0, "ARRIVE")
+    prog.schedule(1.0, "TICK")
+    return prog.freeze()
+
+
+def build_open_admission_program(*, num_slots: int = 8,
+                                 num_requests: int = 64,
+                                 max_decode: int = 6,
+                                 config: Config | None = None
+                                 ) -> SimProgram:
+    """The admission scenario as an OPEN system (DESIGN.md §10).
+
+    Same event alphabet and handlers as
+    :func:`build_admission_program`, except ``ARRIVE`` does NOT chain
+    the next arrival — requests come from an external stream
+    (``sim.run(state0, arrivals=source)``) or, for the closed-system
+    reference, from pre-seeded ``ARRIVE`` events at the same
+    timestamps.  ``num_requests`` must equal the trace length: the
+    ``TICK`` cadence keeps itself alive until that many arrivals have
+    executed, so the run terminates exactly when the stream drains.
+
+    Arrival timestamps must live on the 0.25 f32 grid (build sources
+    with ``grid=0.25``, e.g. ``PoissonSource(rate, n, grid=0.25,
+    type_id=0)``) — the scenario's cross-backend parity convention.
+    Streams should put the request index in ``arg[0]`` (the synthetic
+    sources' default), which is both the shard-routing slot and what
+    keeps sharded streamed runs bit-identical to the single queue.
+    """
+    cfg = config or Config(max_batch_len=8, capacity=1024, max_emit=2)
+    if cfg.max_emit < 2:
+        raise ValueError("admission program needs Config(max_emit >= 2)")
+    prog = SimProgram("serving-admission-open", config=cfg)
+
+    def _blank():
+        return jnp.full((cfg.max_emit, EMIT_WIDTH), -1.0, jnp.float32)
+
+    @prog.handler("ARRIVE", lookahead=0.25, emits=True)
+    def arrive(state, t, arg):
+        k = state["arrivals"]
+        state = dict(state, arrivals=k + 1, waiting=state["waiting"] + 1)
+        emits = _blank()
+        emits = emits.at[0, 0].set(0.25).at[0, 1].set(_ADMIT)
+        emits = emits.at[0, 2].set(k.astype(jnp.float32))
+        return state, emits
+
+    @prog.handler("ADMIT", lookahead=1.0, emits=True)
+    def admit(state, t, arg):
+        slots = state["slots"]
+        free = slots <= 0
+        any_free = jnp.any(free)
+        have_wait = state["waiting"] > 0
+        do = have_wait & any_free
+        took = do.astype(jnp.int32)
+        slot = jnp.argmax(free)
+        budget = 1 + _hash_mod(state["admitted"], 977, max_decode)
+        slots = jnp.where(do, slots.at[slot].set(budget), slots)
+        retry = have_wait & ~any_free
+        state = dict(
+            state, slots=slots,
+            waiting=state["waiting"] - took,
+            admitted=state["admitted"] + took,
+            retries=state["retries"] + retry.astype(jnp.int32),
+        )
+        emits = _blank()
+        emits = emits.at[0, 0].set(1.0).at[0, 1].set(
+            jnp.where(retry, _ADMIT, -1.0))
+        emits = emits.at[0, 2].set(arg[0])
+        return state, emits
+
+    @prog.handler("TICK", lookahead=1.0, emits=True)
+    def tick(state, t, arg):
+        slots = state["slots"]
+        active = slots > 0
+        slots = jnp.where(active, slots - 1, slots)
+        finished = active & (slots == 0)
+        state = dict(
+            state, slots=slots,
+            served=state["served"] + jnp.sum(finished).astype(jnp.int32),
+            decoded=state["decoded"] + jnp.sum(active).astype(jnp.int32),
+        )
+        more = ((state["arrivals"] < num_requests)
+                | (state["waiting"] > 0) | jnp.any(slots > 0))
+        emits = _blank()
+        emits = emits.at[0, 0].set(1.0).at[0, 1].set(
+            jnp.where(more, _TICK, -1.0))
+        return state, emits
+
     prog.schedule(1.0, "TICK")
     return prog.freeze()

@@ -1,0 +1,37 @@
+"""Open-system ingestion: host→device arrival streams (DESIGN.md §10).
+
+Every run used to be a CLOSED system — events seeded once, capacity
+fixed at build time, the engine drained to quiescence.  This package
+makes the pending set OPEN: an :class:`~repro.stream.source
+.ArrivalSource` produces fixed-size arrival blocks in the portable
+emit-row layout, and :class:`~repro.stream.ingest.StreamFeeder`
+double-buffers them host→device while the engine runs, absorbing each
+block at segment boundaries under the lexicographic admission fence —
+the same conservative-window discipline the spill policy uses, so a
+streamed run is bit-identical to pre-seeding the whole trace.
+
+Entry point: ``CompiledSim.run(arrivals=source, backpressure=...)``
+(see :meth:`repro.core.program.CompiledSim.run`).
+"""
+
+from repro.stream.source import (
+    ArrivalSource,
+    BurstySource,
+    DiurnalSource,
+    PoissonSource,
+    TraceReader,
+    TraceWriter,
+    source_events,
+)
+from repro.stream.ingest import StreamFeeder
+
+__all__ = [
+    "ArrivalSource",
+    "BurstySource",
+    "DiurnalSource",
+    "PoissonSource",
+    "StreamFeeder",
+    "TraceReader",
+    "TraceWriter",
+    "source_events",
+]

@@ -57,6 +57,29 @@ BATCHED = (
     "device/fused-2shard",
 )
 
+# The streaming axis (DESIGN.md §10): runtimes that accept
+# ``run(arrivals=...)``.  A streamed run must be bit-identical to
+# pre-seeding the same trace (seq reservation makes the absorbed
+# arrivals occupy the exact (time, seq) lex rank the pre-seeded events
+# would), so these labels join `assert_parity` against a CLOSED
+# ``host/unbatched`` base — but NOT the batch-count check: absorption
+# happens at segment boundaries, so batch grouping may differ from the
+# closed run even though the executed event sequence is identical.
+# Device streaming requires tiered3 (the only queue family with a
+# fence-bounded extract); the single-queue entries rely on the default
+# ``queue_kernels="xla"`` (the pallas extract has no lex bound).
+STREAM_BACKENDS = {
+    "host/unbatched+stream": dict(backend="host", scheduler="unbatched"),
+    "host/conservative+stream": dict(
+        backend="host", scheduler="conservative"),
+    "device/tiered3+stream": dict(backend="device", queue_mode="tiered3"),
+    "device/masked+stream": dict(backend="device", dispatch_mode="masked"),
+    "device/fused+stream": dict(backend="device", dispatch_mode="fused"),
+    "device/tiered3-2shard+stream": dict(backend="device", shards=2),
+    "device/fused-2shard+stream": dict(
+        backend="device", shards=2, dispatch_mode="fused"),
+}
+
 # The resume axis: device runtimes whose interrupted-then-resumed runs
 # must be bit-identical to a straight run (segmented execution carries
 # the whole loop state through the checkpoint, so this holds by

@@ -2,14 +2,19 @@
 
 Every device run must satisfy, exactly::
 
-    seeded + emitted == executed + pending + dropped + spilled
+    seeded + ingested + emitted ==
+        executed + pending + dropped + spilled + shed
 
-``seeded`` is the initial schedule, ``emitted`` counts every valid
-handler emit (whether it was queued, dropped, or spilled), ``executed``
-is ``RunResult.events``, ``pending`` the residual queue occupancy.
-This holds at ANY stopping point (drained, ``max_batches``, horizon)
-and under every overflow policy — it's the accounting identity the
-on-device conservation fault bit enforces per super-step.
+``seeded`` is the initial schedule, ``ingested`` counts external
+arrivals accepted from a stream (zero for closed runs — pinned below),
+``emitted`` counts every valid handler emit (whether it was queued,
+dropped, or spilled), ``executed`` is ``RunResult.events``, ``pending``
+the residual queue occupancy, ``shed`` the arrivals refused under
+``backpressure="shed"`` (zero for closed runs).  This holds at ANY
+stopping point (drained, ``max_batches``, horizon) and under every
+overflow policy — it's the accounting identity the on-device
+conservation fault bit enforces per super-step, extended host-side to
+the open-system boundary (DESIGN.md §10).
 
 Host backends don't surface emitted/pending (their RunResult fields
 default to 0), so the matrix here is the device half of ALL_BACKENDS.
@@ -19,7 +24,7 @@ import jax.numpy as jnp
 import pytest
 
 from _parity import ALL_BACKENDS
-from repro.api import Config, SimProgram
+from repro.api import Config, PoissonSource, SimProgram
 from repro.testing.faults import tiny_phold
 
 DEVICE_LABELS = sorted(
@@ -30,12 +35,13 @@ _SEEDED = 8  # tiny_phold default seeds
 
 
 def _check(res, *, seeded):
-    lhs = seeded + res.emitted
-    rhs = res.events + res.pending + res.dropped + res.spilled
+    lhs = seeded + res.ingested + res.emitted
+    rhs = res.events + res.pending + res.dropped + res.spilled + res.shed
     assert lhs == rhs, (
-        f"conservation violated: {seeded} seeded + {res.emitted} emitted "
-        f"!= {res.events} executed + {res.pending} pending "
-        f"+ {res.dropped} dropped + {res.spilled} spilled"
+        f"conservation violated: {seeded} seeded + {res.ingested} ingested "
+        f"+ {res.emitted} emitted != {res.events} executed "
+        f"+ {res.pending} pending + {res.dropped} dropped "
+        f"+ {res.spilled} spilled + {res.shed} shed"
     )
 
 
@@ -47,6 +53,9 @@ def test_conservation_across_matrix(label, tmp_path):
     assert res.pending > 0
     assert res.emitted > 0
     assert res.fault_word == 0
+    # closed runs: the open-system terms are identically zero
+    assert res.ingested == 0
+    assert res.shed == 0
     _check(res, seeded=_SEEDED)
 
 
@@ -98,3 +107,78 @@ def test_conservation_survives_resume(tmp_path):
     )
     assert res.pending > 0
     _check(res, seeded=_SEEDED)
+
+
+# -- open-system runs (DESIGN.md §10) ----------------------------------------
+
+def _sink_prog(cap, *, seeds=2):
+    """Events that emit nothing — occupancy only ever shrinks, so a
+    spilled/shed backlog drains as the engine frees capacity."""
+    p = SimProgram("sink", config=Config(
+        max_batch_len=4, capacity=cap, max_emit=1))
+
+    @p.handler("SINK", lookahead=0.25)
+    def sink(state, t, arg):
+        return state + 1
+
+    for i in range(seeds):
+        p.schedule(0.25 * i, "SINK")
+    return p
+
+
+def test_conservation_streamed_midflight():
+    """ingested joins the left side of the law; stopping mid-flight
+    with arrivals absorbed across several block boundaries keeps it
+    exact (pending > 0 makes it non-trivial)."""
+    sim = tiny_phold(capacity=64).build(backend="device", validate="cheap")
+    src = PoissonSource(2.0, 24, grid=0.25, type_id=0, block_size=8)
+    res = sim.run(jnp.int32(0), max_batches=40, arrivals=src)
+    assert res.fault_word == 0
+    # the batch target can stop the run with blocks still unconsumed —
+    # arrivals left in the source are in NO term of the law
+    assert 0 < res.ingested <= 24
+    assert res.shed == 0
+    assert res.pending > 0
+    _check(res, seeded=_SEEDED)
+
+
+def test_conservation_streamed_shed():
+    """backpressure='shed': refused arrivals balance the law via the
+    shed term, never silently vanish."""
+    sim = tiny_phold(capacity=16).build(backend="device", validate="cheap")
+    src = PoissonSource(4.0, 32, grid=0.25, type_id=0, block_size=32)
+    res = sim.run(jnp.int32(0), max_batches=30, arrivals=src,
+                  backpressure="shed")
+    assert res.shed > 0
+    # ingested counts CONSUMED arrivals (absorbed + shed), so a fully
+    # drained source always shows ingested == trace length
+    assert res.ingested == 32
+    assert res.shed < 32
+    _check(res, seeded=_SEEDED)
+
+
+def test_conservation_streamed_spill_midflight():
+    """overflow='spill' + streaming: arrivals beyond capacity land in
+    the host pool (counted ingested), and a mid-flight stop leaves a
+    non-empty pool balanced by the spilled term."""
+    sim = _sink_prog(8).build(backend="device", overflow="spill",
+                              validate="cheap")
+    src = PoissonSource(4.0, 32, grid=0.25, type_id=0)
+    res = sim.run(jnp.int32(0), max_batches=3, arrivals=src)
+    assert res.ingested == 32
+    assert res.spilled > 0
+    _check(res, seeded=2)
+
+
+def test_conservation_streamed_spill_drains():
+    """The same topology run to completion: the pool drains to zero and
+    every ingested arrival was executed."""
+    sim = _sink_prog(8).build(backend="device", overflow="spill",
+                              validate="cheap")
+    src = PoissonSource(4.0, 32, grid=0.25, type_id=0)
+    res = sim.run(jnp.int32(0), max_batches=200, arrivals=src)
+    assert res.ingested == 32
+    assert res.spilled == 0
+    assert res.pending == 0
+    assert res.events == 2 + 32
+    _check(res, seeded=2)

@@ -1,0 +1,179 @@
+"""Closed-vs-open equivalence (DESIGN.md §10): streaming a trace is
+bit-identical to pre-seeding it.
+
+The seq-reservation discipline (arrival ``j`` carries seq
+``len(seeds) + j``; mid-run emits draw past the reservation) plus the
+lex admission fence mean a streamed run executes the EXACT event
+sequence of a closed run whose initial schedule is
+``seeds + source_events(trace)`` — state, executed events, dropped,
+final_time, all bit-equal, on every streaming-capable backend
+(``STREAM_BACKENDS``), through checkpoint interrupt/resume, and with a
+streamed small-capacity + spill run against a closed large-capacity
+reference (the bounded-device-memory serving shape).
+
+Arrival times live on the 0.25 f32 grid — the scenario's cross-backend
+parity convention (host f64 vs device f32 time arithmetic agree only on
+grid-exact values).
+"""
+
+import numpy as np
+import pytest
+
+from _parity import (
+    STREAM_BACKENDS,
+    assert_parity,
+    assert_resume_parity,
+    run_all,
+    run_interrupted_then_resumed,
+)
+from repro.core.program import Config
+from repro.serving.scenarios import (
+    build_open_admission_program,
+    initial_state,
+)
+from repro.stream import PoissonSource, source_events
+
+CFG = Config(max_batch_len=3, capacity=256, max_emit=2)
+N_REQ = 40
+
+
+def _source():
+    # type 0 = ARRIVE; default arg0 = request index (the routing slot)
+    return PoissonSource(1.5, N_REQ, seed=42, grid=0.25, t0=0.0,
+                         type_id=0, block_size=16)
+
+
+def _build(num_requests=N_REQ, config=CFG):
+    return build_open_admission_program(
+        num_slots=4, num_requests=num_requests, max_decode=5,
+        config=config)
+
+
+def _closed_events():
+    """The pre-seeded reference schedule: program seeds FIRST (matching
+    the device run's seq0 = len(seeds) reservation), then the trace."""
+    return [(1.0, "TICK")] + [
+        (t, ty, list(arg)) for (t, ty, arg) in source_events(_source())
+    ]
+
+
+def test_streamed_equals_preseeded_across_backends():
+    closed = _build().build(backend="host", scheduler="unbatched").run(
+        initial_state(4), events=_closed_events())
+    assert closed.events > N_REQ  # arrivals + admits + ticks all ran
+    results = run_all(_build, initial_state(4),
+                      backends=STREAM_BACKENDS,
+                      run_kw={"arrivals": _source()})
+    results["closed/host-unbatched"] = closed
+    # batched=[]: streamed absorption happens at segment boundaries, so
+    # batch grouping is NOT part of the equivalence contract
+    assert_parity(results, base="closed/host-unbatched", batched=[])
+    for label, res in results.items():
+        if label.endswith("+stream"):
+            assert res.ingested == N_REQ, label
+            assert res.shed == 0, label
+    st = {k: int(np.asarray(v).sum())
+          for k, v in results["device/tiered3+stream"].state.items()}
+    assert st["arrivals"] == st["admitted"] == st["served"] == N_REQ
+    assert st["waiting"] == 0 and st["slots"] == 0
+
+
+@pytest.mark.parametrize("label", [
+    "device/tiered3+stream",
+    pytest.param("device/masked+stream", marks=pytest.mark.slow),
+    pytest.param("device/fused-2shard+stream", marks=pytest.mark.slow),
+])
+def test_streamed_resume_bit_identical(label, tmp_path):
+    """Interrupt a streamed run mid-flight and resume from the latest
+    checkpoint (which carries the arrival cursor): bit-identical to the
+    straight segmented run — state, counters, batch grouping, residual
+    queue.  The straight run uses the SAME checkpoint cadence: streamed
+    batch grouping depends on where segment boundaries fall (each
+    boundary absorbs a block and moves the fence), so it is
+    resume-invariant but not segmentation-invariant — which is exactly
+    why the stream labels stay out of the BATCHED group."""
+    kw = STREAM_BACKENDS[label]
+    straight = _build().build(**kw).run(
+        initial_state(4), arrivals=_source(), checkpoint_every=8,
+        checkpoint_dir=str(tmp_path / "straight"))
+    sim = _build().build(**kw)
+    resumed = run_interrupted_then_resumed(
+        sim, initial_state(4), tmpdir=str(tmp_path / "crashed"),
+        max_batches=1 << 30, checkpoint_every=8, crash_at_segment=3,
+        run_kw={"arrivals": _source()},
+    )
+    assert_resume_parity(straight, resumed, label=label)
+    assert resumed.ingested == N_REQ
+
+
+def test_streamed_resume_requires_arrivals(tmp_path):
+    """A checkpoint written by a streamed run refuses a closed resume —
+    silently dropping the rest of the trace would be data loss."""
+    from repro.testing.faults import SimulatedCrash
+
+    sim = _build().build(**STREAM_BACKENDS["device/tiered3+stream"])
+
+    def hook(seg, state, queue, stats):
+        if seg == 3:
+            raise SimulatedCrash("stop")
+
+    with pytest.raises(SimulatedCrash):
+        sim.run(initial_state(4), arrivals=_source(), checkpoint_every=8,
+                checkpoint_dir=str(tmp_path), _segment_hook=hook)
+    sim2 = _build().build(**STREAM_BACKENDS["device/tiered3+stream"])
+    with pytest.raises(ValueError, match="arrival cursor"):
+        sim2.run(initial_state(4), checkpoint_every=8,
+                 checkpoint_dir=str(tmp_path), resume_from="latest")
+
+
+def test_streamed_small_capacity_spill_equals_closed_large():
+    """The bounded-memory serving shape: stream through a device queue
+    far smaller than the trace backlog (overflow='spill' parks the
+    excess host-side) and match the closed large-capacity reference
+    bit-for-bit."""
+    small = Config(max_batch_len=3, capacity=24, max_emit=2)
+    streamed = _build(config=small).build(
+        backend="device", overflow="spill").run(
+        initial_state(4), arrivals=_source())
+    closed = _build().build(backend="device").run(
+        initial_state(4), events=_closed_events())
+    for k, v in closed.state.items():
+        np.testing.assert_array_equal(
+            np.asarray(streamed.state[k]), np.asarray(v), err_msg=k)
+    assert streamed.events == closed.events
+    assert streamed.dropped == closed.dropped == 0
+    assert np.float32(streamed.final_time) == np.float32(closed.final_time)
+    assert streamed.ingested == N_REQ
+    assert streamed.spilled == 0  # drained by the end
+
+
+def test_streamed_horizon_leaves_tail_unconsumed():
+    """Arrivals past ``until`` are never consumed — they stay in the
+    source, exactly like queued events past the horizon stay queued."""
+    src = _source()
+    rows_t = [t for (t, _, _) in source_events(src)]
+    horizon = rows_t[len(rows_t) // 2]
+    res = _build().build(backend="device").run(
+        initial_state(4), arrivals=src, until=horizon)
+    expect = sum(1 for t in rows_t if t <= horizon)
+    assert res.ingested == expect
+    assert res.shed == 0
+
+
+def test_streamed_requires_tiered3():
+    sim = _build().build(backend="device", queue_mode="flat")
+    with pytest.raises(ValueError, match="tiered3"):
+        sim.run(initial_state(4), arrivals=_source())
+
+
+def test_backpressure_validation():
+    sim = _build().build(backend="device")
+    with pytest.raises(ValueError, match="backpressure"):
+        sim.run(initial_state(4), arrivals=_source(),
+                backpressure="reject")
+    with pytest.raises(ValueError, match="arrivals"):
+        sim.run(initial_state(4), backpressure="shed")
+    host = _build().build(backend="host", scheduler="unbatched")
+    with pytest.raises(ValueError, match="host"):
+        host.run(initial_state(4), arrivals=_source(),
+                 backpressure="shed")

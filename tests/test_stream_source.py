@@ -1,0 +1,193 @@
+"""Arrival sources: determinism, seek, grid exactness, trace round-trip.
+
+The streaming determinism contract (DESIGN.md §10) rests entirely on
+sources being bit-reproducible: checkpoint/resume stores only a row
+CURSOR, and the closed-vs-open equivalence proof pre-seeds the same
+rows the stream delivers.  These tests pin that contract at the source
+layer, before any engine is involved.
+"""
+
+import numpy as np
+import pytest
+
+from repro.stream import (
+    ArrivalSource,
+    BurstySource,
+    DiurnalSource,
+    PoissonSource,
+    TraceReader,
+    TraceWriter,
+    source_events,
+)
+from repro.stream.source import EMIT_WIDTH
+
+
+def _materialize(source):
+    """All real rows of a source, concatenated (row-exact view)."""
+    out = [b[b[:, 1] >= 0] for b in source.blocks()]
+    return (np.concatenate(out) if out
+            else np.zeros((0, EMIT_WIDTH), np.float32))
+
+
+SOURCES = {
+    "poisson": lambda n, **kw: PoissonSource(2.0, n, **kw),
+    "bursty": lambda n, **kw: BurstySource(8.0, 0.5, 5, n, **kw),
+    "diurnal": lambda n, **kw: DiurnalSource(2.0, n, period=16.0, **kw),
+}
+
+
+@pytest.mark.parametrize("kind", sorted(SOURCES))
+def test_source_protocol_and_shape(kind):
+    src = SOURCES[kind](37, seed=3, block_size=8)
+    assert isinstance(src, ArrivalSource)
+    assert len(src) == 37
+    blocks = list(src.blocks())
+    assert len(blocks) == 5  # ceil(37 / 8)
+    for b in blocks:
+        assert b.shape == (8, EMIT_WIDTH)
+        assert b.dtype == np.float32
+    rows = _materialize(src)
+    assert rows.shape == (37, EMIT_WIDTH)
+    # padding only in the final block, as a suffix
+    tail = blocks[-1]
+    real = tail[:, 1] >= 0
+    assert real.sum() == 37 - 4 * 8
+    assert not real[int(real.sum()):].any()
+    # default arg0 is the global row index (the shard-routing slot)
+    np.testing.assert_array_equal(rows[:, 2], np.arange(37, dtype=np.float32))
+
+
+@pytest.mark.parametrize("kind", sorted(SOURCES))
+def test_source_deterministic_and_block_size_invariant(kind):
+    """Same seed -> bit-identical rows, twice over AND across different
+    block sizes (chunked-identically-from-row-0 generation makes the
+    block size a packaging detail, not part of the stream identity)."""
+    a = _materialize(SOURCES[kind](50, seed=7, block_size=8))
+    b = _materialize(SOURCES[kind](50, seed=7, block_size=8))
+    c = _materialize(SOURCES[kind](50, seed=7, block_size=17))
+    np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(a, c)
+    d = _materialize(SOURCES[kind](50, seed=8, block_size=8))
+    assert not np.array_equal(a, d)
+
+
+@pytest.mark.parametrize("kind", sorted(SOURCES))
+@pytest.mark.parametrize("cursor", [0, 1, 8, 13, 49, 50])
+def test_seek_equals_slice(kind, cursor):
+    """blocks() after seek(c) delivers exactly rows c.. of the full
+    stream — the checkpoint-resume identity."""
+    full = _materialize(SOURCES[kind](50, seed=5, block_size=8))
+    src = SOURCES[kind](50, seed=5, block_size=8)
+    src.seek(cursor)
+    rest = _materialize(src)
+    np.testing.assert_array_equal(rest, full[cursor:])
+
+
+def test_seek_validation():
+    src = PoissonSource(1.0, 10)
+    with pytest.raises(ValueError):
+        src.seek(-1)
+    with pytest.raises(ValueError):
+        src.seek(11)
+
+
+@pytest.mark.parametrize("kind", sorted(SOURCES))
+def test_times_nondecreasing(kind):
+    rows = _materialize(SOURCES[kind](200, seed=11, block_size=32))
+    t = rows[:, 0]
+    assert (np.diff(t) >= 0).all()
+
+
+@pytest.mark.parametrize("kind", sorted(SOURCES))
+def test_grid_times_exact_and_strictly_increasing(kind):
+    """grid= snaps every time to an exact f32 multiple of the step and
+    keeps the stream strictly increasing (each gap rounds to >= 1
+    step) — the property the serving scenario's cross-backend f32
+    parity relies on."""
+    rows = _materialize(SOURCES[kind](200, seed=11, grid=0.25,
+                                      block_size=32))
+    t = rows[:, 0].astype(np.float64)
+    steps = t / 0.25
+    np.testing.assert_array_equal(steps, np.round(steps))
+    assert (np.diff(t) > 0).all()
+
+
+def test_bursty_gap_structure():
+    """Burst members are tightly spaced; burst boundaries carry the
+    idle gap (in expectation — check medians, not tails)."""
+    rows = _materialize(BurstySource(100.0, 0.1, 10, 400, seed=1,
+                                     block_size=64))
+    gaps = np.diff(rows[:, 0].astype(np.float64))
+    idx = np.arange(1, 400)
+    boundary = (idx % 10) == 0
+    assert np.median(gaps[boundary]) > 10 * np.median(gaps[~boundary])
+
+
+def test_ctor_validation():
+    with pytest.raises(ValueError):
+        PoissonSource(0.0, 10)
+    with pytest.raises(ValueError):
+        PoissonSource(1.0, -1)
+    with pytest.raises(ValueError):
+        PoissonSource(1.0, 10, block_size=0)
+    with pytest.raises(ValueError):
+        PoissonSource(1.0, 10, grid=-0.5)
+    with pytest.raises(ValueError):
+        BurstySource(1.0, 1.0, 0, 10)
+    with pytest.raises(ValueError):
+        DiurnalSource(1.0, 10, amplitude=1.0)
+
+
+def test_arg_fn_shape_enforced():
+    src = PoissonSource(1.0, 10, block_size=4,
+                        arg_fn=lambda g: np.ones((len(g), 2)))
+    with pytest.raises(ValueError, match="arg_fn"):
+        list(src.blocks())
+
+
+def test_trace_round_trip(tmp_path):
+    """writer -> reader is row-exact, including partial final blocks,
+    mismatched writer/reader block sizes, and metadata."""
+    path = str(tmp_path / "t.trace")
+    src = BurstySource(8.0, 0.5, 5, 43, seed=9, block_size=8)
+    with TraceWriter(path, meta={"kind": "bursty", "seed": 9}) as w:
+        for b in src.blocks():
+            w.write_block(b)
+    rd = TraceReader(path, block_size=16)
+    assert isinstance(rd, ArrivalSource)
+    assert len(rd) == 43
+    assert rd.meta["kind"] == "bursty"
+    np.testing.assert_array_equal(_materialize(rd), _materialize(src))
+    # seek on the reader too
+    rd.seek(20)
+    np.testing.assert_array_equal(_materialize(rd), _materialize(src)[20:])
+
+
+def test_trace_reader_rejects_garbage(tmp_path):
+    bad = tmp_path / "bad.trace"
+    bad.write_bytes(b"not a trace at all" + b"\x00" * 300)
+    with pytest.raises(ValueError, match="not a repro trace"):
+        TraceReader(str(bad))
+
+
+def test_trace_reader_rejects_truncation(tmp_path):
+    path = str(tmp_path / "t.trace")
+    src = PoissonSource(2.0, 20, seed=1, block_size=8)
+    with TraceWriter(path) as w:
+        for b in src.blocks():
+            w.write_block(b)
+    data = open(path, "rb").read()
+    open(path, "wb").write(data[:-8])  # chop the last rows
+    with pytest.raises(ValueError, match="truncated"):
+        TraceReader(str(path))
+
+
+def test_source_events_matches_blocks():
+    src = PoissonSource(2.0, 15, seed=4, grid=0.25, block_size=4)
+    evs = source_events(src)
+    rows = _materialize(src)
+    assert len(evs) == 15
+    for ev, row in zip(evs, rows):
+        assert ev[0] == float(row[0])
+        assert ev[1] == int(row[1])
+        assert ev[2] == tuple(float(x) for x in row[2:])
